@@ -1,0 +1,340 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Output: ``name,us_per_call,derived`` CSV rows.
+  Table 6/7  -> bench_lifecycle_create / bench_lifecycle_monitor
+  Eq.1/4.4.4 -> bench_hpa_formula
+  4.4.5      -> bench_hpa_scaling
+  Tables 8/9 -> bench_queue_16 / bench_queue_32 (M/M/1 sim vs Calc.Lq)
+  Fig. 8     -> bench_dbn_tracking
+  Fig. 9     -> bench_dbn_control
+  5.1        -> bench_deployment_40
+  kernels    -> bench_kernel_* (interpret-mode Pallas vs jnp oracle)
+  dry-run    -> bench_roofline (reads experiments/dryrun)
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+
+def _timeit(fn, n=100, warmup=3):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6   # us
+
+
+def row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+# ---------------------------------------------------------- Tables 6 & 7
+
+def bench_lifecycle_create():
+    from repro.core.state_machine import Container, create_pod_container
+
+    def one():
+        create_pod_container(Container("c"), 0.0)
+
+    us = _timeit(one, n=2000)
+    row("lifecycle_create_table6", us, f"pods_per_s={1e6 / us:.0f}")
+
+
+def bench_lifecycle_monitor():
+    from repro.core.jrm import start_vk
+    from repro.core.state_machine import Container, Pod
+    node = start_vk("vk", now=0.0)
+    tol = [{"key": "virtual-kubelet.io/provider", "value": "mock"}]
+    for i in range(100):
+        node.create_pod(Pod(f"p{i}", [Container("c")], tolerations=tol), 0.0)
+    us = _timeit(lambda: node.get_pods(1.0), n=200)
+    row("lifecycle_monitor_table7", us,
+        f"pods_per_loop=100;loops_per_s={1e6 / us:.0f}")
+
+
+# --------------------------------------------------------------- HPA
+
+def bench_hpa_formula():
+    from repro.core.hpa import desired_replicas
+    us = _timeit(lambda: desired_replicas(4, 90, 50), n=10000)
+    row("hpa_formula_eq1", us,
+        f"example_4x90/50={desired_replicas(4, 90, 50)}")
+
+
+def bench_hpa_scaling():
+    """§4.4.5: load ramp up -> pods scale up; load drop -> scale down after
+    the stabilization interval."""
+    from repro.core.hpa import HPA, HPAConfig, MetricSample
+    from repro.core.state_machine import Container, Pod, create_pod_container
+
+    def mkpods(n, now):
+        out = []
+        for i in range(n):
+            p = Pod(f"p{i}", [Container("c")])
+            create_pod_container(p.containers[0], now)
+            p.set_conditions_create(now)
+            out.append(p)
+        return out
+
+    def scenario():
+        hpa = HPA(HPAConfig(target=30.0, max_replicas=10,
+                            cpu_initialization_period=0.0,
+                            scale_down_stabilization=300.0))
+        n, ups, downs = 1, 0, 0
+        for t in range(0, 1200, 60):
+            load = 90.0 if t < 400 else 10.0
+            pods = mkpods(n, now=-1e4)
+            samples = {p.name: MetricSample(load, timestamp=float(t))
+                       for p in pods}
+            d = hpa.evaluate(pods, samples, now=float(t))
+            ups += d > n
+            downs += d < n
+            n = d
+        return ups, downs, n
+
+    us = _timeit(scenario, n=20)
+    ups, downs, final = scenario()
+    row("hpa_scaling_4.4.5", us,
+        f"scale_ups={ups};scale_downs={downs};final={final}")
+
+
+# --------------------------------------------------------- Tables 8 & 9
+
+def _lindley_lq(lam, mu, n=400_000, seed=0):
+    """M/M/1 L_q via Lindley recursion + Little's law."""
+    rng = np.random.default_rng(seed)
+    a = rng.exponential(1.0 / lam, n)     # interarrivals
+    s = rng.exponential(1.0 / mu, n)      # services
+    w = 0.0
+    tot = 0.0
+    for i in range(1, n):
+        w = max(w + s[i - 1] - a[i], 0.0)
+        tot += w
+    return lam * tot / (n - 1)
+
+
+def _bench_queue(threads):
+    from repro.core.digital_twin.queue_model import MU_EXACT, table_for
+    tab = table_for(threads)
+    mu = MU_EXACT[threads]
+    errs = []
+    t0 = time.perf_counter()
+    for state, lam, _m, _u, obs, calc in tab:
+        sim = _lindley_lq(lam, mu, seed=int(state))
+        errs.append(abs(sim - calc) / calc)
+    us = (time.perf_counter() - t0) / len(tab) * 1e6
+    row(f"queue_mm1_table{8 if threads == 16 else 9}", us,
+        f"max_rel_err_vs_calc_lq={max(errs):.2f}")
+
+
+def bench_queue_16():
+    _bench_queue(16)
+
+
+def bench_queue_32():
+    _bench_queue(32)
+
+
+# ------------------------------------------------------------ Figs 8 & 9
+
+def _run_twin():
+    from repro.core.digital_twin.control import ControlPolicy
+    from repro.core.digital_twin.dbn import DigitalTwin
+    from repro.core.digital_twin.queue_model import ground_truth, observe
+    gt = ground_truth(80)
+    twin, policy = DigitalTwin(), ControlPolicy()
+    rng = np.random.default_rng(0)
+    control, est, ctrl = 16, [], []
+    for t, s in enumerate(gt):
+        twin.assimilate(observe(s, control, rng), control)
+        est.append(twin.estimate())
+        control = policy.recommend(twin, control, t)
+        ctrl.append(control)
+    return gt, np.array(est), np.array(ctrl)
+
+
+def bench_dbn_tracking():
+    from repro.core.digital_twin.dbn import DigitalTwin
+    twin = DigitalTwin()
+    us = _timeit(lambda: twin.assimilate(50.0, 16), n=200)
+    gt, est, _ = _run_twin()
+    row("dbn_tracking_fig8", us,
+        f"state_mae={np.abs(est - gt).mean():.3f}")
+
+
+def bench_dbn_control():
+    gt, _, ctrl = _run_twin()
+    # predicted-vs-estimated agreement proxy: correct regime selection
+    hi = np.mean(ctrl[gt >= 3.0] == 32)
+    lo = np.mean(ctrl[gt <= 0.5] == 16)
+    t0 = time.perf_counter()
+    _run_twin()
+    us = (time.perf_counter() - t0) * 1e6 / 80
+    row("dbn_control_fig9", us,
+        f"escalation_acc={hi:.2f};deescalation_acc={lo:.2f}")
+
+
+# ------------------------------------------------------------------ §5.1
+
+def bench_deployment_40():
+    from repro.core.jcs import CentralService
+    from repro.core.jfe import FrontEnd
+    from repro.core.jfm import FacilityManager
+    from repro.core.jms import MatchingService
+    from repro.core.jrm import SliceSpec
+    from repro.core.state_machine import Container, Pod
+
+    def scenario():
+        fe = FrontEnd()
+        wf = fe.add_wf("vk-nersc", 40, walltime=10800.0)
+        jcs = CentralService(fe)
+        jcs.launch_pilot(wf, now=0.0, slice_spec=SliceSpec(chips=4))
+        nodes = jcs.node_list()
+        for n in nodes:
+            n.tick(120.0)
+        fm = FacilityManager()
+        fm.scrape(nodes, 120.0)
+        jms = MatchingService(fm)
+        tol = [{"key": "virtual-kubelet.io/provider", "value": "mock"}]
+        bound = 0
+        for i in range(40):
+            pod = Pod(f"ersap{i}", [Container("engine")], tolerations=tol,
+                      request_chips=4, request_hbm_bytes=8 << 30)
+            res = jms.bind(pod, nodes, 120.0, expected_duration=3600.0)
+            bound += res.node is not None
+            fm.scrape(nodes, 120.0)
+        return len(nodes), bound
+
+    us = _timeit(scenario, n=5)
+    nodes, bound = scenario()
+    row("deployment_40node_5.1", us,
+        f"nodes={nodes};pods_bound={bound};nodes_per_s={nodes / (us / 1e6):.0f}")
+
+
+# ---------------------------------------------------------------- kernels
+
+def bench_kernel_flash_attention():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.ref import attention_ref
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 4, 256, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 256, 64), jnp.float32)
+    ref = jax.jit(lambda q, k, v: attention_ref(q, k, v))
+    us_ref = _timeit(lambda: jax.block_until_ready(ref(q, k, v)), n=20)
+    out_k = flash_attention(q, k, v, interpret=True)
+    err = float(jnp.max(jnp.abs(out_k - ref(q, k, v))))
+    row("kernel_flash_attention", us_ref,
+        f"jnp_oracle_us={us_ref:.0f};interpret_allclose_err={err:.1e}")
+
+
+def bench_kernel_mlstm():
+    import jax
+    import jax.numpy as jnp
+    from repro.models.xlstm import mlstm_chunkwise
+    from repro.kernels.mlstm_scan import mlstm_chunkwise_kernel
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    B, S, H, dh = 1, 256, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, H, dh)) * dh ** -0.5
+    v = jax.random.normal(ks[2], (B, S, H, dh))
+    li = jax.random.normal(ks[3], (B, S, H))
+    lf = jax.random.normal(ks[4], (B, S, H))
+    jnp_fn = jax.jit(lambda *a: mlstm_chunkwise(*a)[0])
+    us = _timeit(lambda: jax.block_until_ready(jnp_fn(q, k, v, li, lf)), n=20)
+    hk, _ = mlstm_chunkwise_kernel(q, k, v, li, lf, interpret=True)
+    err = float(jnp.max(jnp.abs(hk - jnp_fn(q, k, v, li, lf))))
+    row("kernel_mlstm_chunkwise", us,
+        f"jnp_chunkwise_us={us:.0f};interpret_allclose_err={err:.1e}")
+
+
+def bench_kernel_ssm():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.ref import ssm_ref
+    from repro.kernels.ssm_scan import ssm_scan_kernel
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    B, S, di, N = 1, 256, 256, 16
+    u = jax.random.normal(ks[0], (B, S, di))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, di)))
+    A = -jnp.exp(jax.random.normal(ks[2], (di, N)))
+    Bs = jax.random.normal(ks[3], (B, S, N))
+    Cs = jax.random.normal(ks[4], (B, S, N))
+    D = jax.random.normal(ks[5], (di,))
+    ref = jax.jit(lambda *a: ssm_ref(*a)[0])
+    us = _timeit(lambda: jax.block_until_ready(ref(u, dt, A, Bs, Cs, D)), n=10)
+    yk, _ = ssm_scan_kernel(u, dt, A, Bs, Cs, D, interpret=True)
+    err = float(jnp.max(jnp.abs(yk - ref(u, dt, A, Bs, Cs, D))))
+    row("kernel_ssm_scan", us,
+        f"jnp_oracle_us={us:.0f};interpret_allclose_err={err:.1e}")
+
+
+def bench_kernel_decode_attention():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.decode_attention import decode_attention_kernel
+    from repro.kernels.ref import decode_attention_ref
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (4, 8, 64))
+    kc = jax.random.normal(ks[1], (4, 1024, 2, 64))
+    vc = jax.random.normal(ks[2], (4, 1024, 2, 64))
+    lens = jnp.asarray([100, 512, 900, 1024], jnp.int32)
+    ref = jax.jit(lambda q, k, v, l: decode_attention_ref(q, k, v, lengths=l))
+    us = _timeit(lambda: jax.block_until_ready(ref(q, kc, vc, lens)), n=20)
+    ok = decode_attention_kernel(q, kc, vc, lens, interpret=True)
+    err = float(jnp.max(jnp.abs(ok - ref(q, kc, vc, lens))))
+    row("kernel_decode_attention", us,
+        f"jnp_oracle_us={us:.0f};interpret_allclose_err={err:.1e}")
+
+
+# ----------------------------------------------------------------- roofline
+
+def bench_roofline():
+    base = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+    n_ok, n_err, worst = 0, 0, None
+    for mesh in ("pod", "multipod"):
+        d = base / mesh
+        if not d.exists():
+            continue
+        for f in sorted(d.glob("*.json")):
+            r = json.loads(f.read_text())
+            if r.get("status") != "ok":
+                n_err += 1
+                continue
+            n_ok += 1
+            rl = r["roofline"]
+            frac = r.get("useful_flops_ratio", 0.0)
+            if mesh == "pod" and (worst is None or frac < worst[1]):
+                worst = (f"{r['arch']}x{r['shape']}", frac)
+    row("roofline_dryrun_summary", 0.0,
+        f"cells_ok={n_ok};cells_err={n_err};worst_useful_flops="
+        f"{worst[0]}:{worst[1]:.3f}" if worst else f"cells_ok={n_ok}")
+
+
+BENCHES = [
+    bench_lifecycle_create, bench_lifecycle_monitor,
+    bench_hpa_formula, bench_hpa_scaling,
+    bench_queue_16, bench_queue_32,
+    bench_dbn_tracking, bench_dbn_control,
+    bench_deployment_40,
+    bench_kernel_flash_attention, bench_kernel_mlstm, bench_kernel_ssm,
+    bench_kernel_decode_attention,
+    bench_roofline,
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for b in BENCHES:
+        b()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""End-to-end streaming-serving driver (the flagship example): JIRIAF
+control plane + real batched prefill/decode + DBN digital-twin elastic
+scaling under the paper's §6.2 pressure trajectory.
+
+    PYTHONPATH=src python examples/serve_stream.py
+(args forwarded to repro.launch.serve — e.g. --controller hpa)
+"""
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    serve.main(sys.argv[1:] or
+               ["--devices", "8", "--tp", "2", "--nodes", "4",
+                "--ticks", "80"])

@@ -1,0 +1,21 @@
+"""Fault-tolerant training scenario: a JRM walltime lease expires mid-run,
+the trainer drains (checkpoints) inside the §4.5.4 margin, and a requeued
+job resumes exactly where it left off.
+
+    PYTHONPATH=src python examples/train_elastic.py
+"""
+import tempfile
+
+from repro.launch import train
+
+ckpt = tempfile.mkdtemp(prefix="jiriaf-ckpt-")
+common = ["--arch", "qwen2-7b", "--reduced", "--steps", "60",
+          "--batch", "4", "--seq", "32", "--ckpt-dir", ckpt,
+          "--ckpt-every", "10"]
+
+print("=== lease 1: walltime 100s (drains at ~step 40) ===")
+train.main(common + ["--walltime", "100", "--step-seconds", "1.0"])
+
+print("\n=== lease 2: requeued job resumes from the drain checkpoint ===")
+train.main(common)
+print(f"\ncheckpoints in {ckpt}")

@@ -1,0 +1,120 @@
+"""Checkpoint/restore for param + optimizer + data-iterator pytrees.
+
+Fault-tolerance substrate: atomic writes (tmp + rename), retention, restore
+onto a DIFFERENT mesh/sharding (topology-change resharding via device_put
+with the new shardings — elastic scaling and node-failure recovery both go
+through this path), and async save (background thread over host copies) so
+the training loop does not stall on I/O."""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+_UINT_FOR_SIZE = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _to_native(a: np.ndarray) -> np.ndarray:
+    """bf16/fp8 etc. don't survive npz round-trips; store as uint views."""
+    if a.dtype.kind in "fiub":
+        return a
+    return a.view(_UINT_FOR_SIZE[a.dtype.itemsize])
+
+
+def _from_native(h: np.ndarray, target_dtype) -> np.ndarray:
+    td = np.dtype(target_dtype)
+    if h.dtype == td:
+        return h
+    if h.dtype.kind == "u" and h.dtype.itemsize == td.itemsize \
+            and td.kind not in "fiub":
+        return h.view(td)
+    return h.astype(td)
+
+
+def save(ckpt_dir, step: int, tree, *, meta: Optional[dict] = None,
+         keep: int = 3):
+    """Synchronous atomic checkpoint."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    tmp = ckpt_dir / f".tmp-{step}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    leaves, treedef = _flatten(tree)
+    host = [_to_native(np.asarray(l)) for l in leaves]
+    np.savez(tmp / "leaves.npz", **{f"l{i}": a for i, a in enumerate(host)})
+    (tmp / "meta.json").write_text(json.dumps({
+        "step": step, "n_leaves": len(host), "treedef": str(treedef),
+        "time": time.time(), **(meta or {})}))
+    final = ckpt_dir / f"step_{step:08d}"
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _retain(ckpt_dir, keep)
+    return final
+
+
+def save_async(ckpt_dir, step, tree, *, meta=None, keep: int = 3):
+    """Copy to host synchronously (cheap), write in a background thread."""
+    leaves, treedef = _flatten(tree)
+    host = [np.asarray(l) for l in leaves]   # device->host copy happens here
+    rebuilt = jax.tree.unflatten(treedef, host)
+    t = threading.Thread(target=save, args=(ckpt_dir, step, rebuilt),
+                         kwargs={"meta": meta, "keep": keep}, daemon=True)
+    t.start()
+    return t
+
+
+def _retain(ckpt_dir, keep):
+    steps = sorted(pathlib.Path(ckpt_dir).glob("step_*"))
+    for old in steps[:-keep]:
+        shutil.rmtree(old, ignore_errors=True)
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    steps = sorted(pathlib.Path(ckpt_dir).glob("step_*"))
+    if not steps:
+        return None
+    return int(steps[-1].name.split("_")[1])
+
+
+def restore(ckpt_dir, abstract_tree, *, step: Optional[int] = None,
+            shardings=None):
+    """Restore into the structure of ``abstract_tree``; if ``shardings`` is
+    given the leaves are placed with those shardings (which may correspond
+    to a completely different mesh than the one that saved — ZeRO/elastic
+    reshard on restore)."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    data = np.load(d / "leaves.npz")
+    leaves, treedef = jax.tree.flatten(abstract_tree)
+    host = [data[f"l{i}"] for i in range(len(leaves))]
+    for h, a in zip(host, leaves):
+        if tuple(h.shape) != tuple(a.shape):
+            raise ValueError(f"shape mismatch {h.shape} vs {a.shape}")
+    host = [_from_native(h, a.dtype) for h, a in zip(host, leaves)]
+    if shardings is not None:
+        sh_leaves = jax.tree.leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "spec") or x is None)
+        out = [jax.device_put(h, s) for h, s in zip(host, sh_leaves)]
+    else:
+        out = [jax.numpy.asarray(h) for h in host]
+    meta = json.loads((d / "meta.json").read_text())
+    return jax.tree.unflatten(treedef, out), meta

@@ -1,0 +1,190 @@
+"""Architecture + shape configuration system.
+
+Every assigned architecture is a frozen ``ArchConfig``; the four assigned
+input shapes are ``ShapeConfig`` entries. ``REGISTRY`` maps ``--arch <id>``
+strings to config factories; ``reduced()`` produces the family-preserving
+small config used by CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_routed: int
+    top_k: int
+    n_shared: int = 0
+    d_ff_expert: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    first_k_dense: int = 0  # deepseek: first layer(s) stay dense
+    # dispatch-buffer sharding (see EXPERIMENTS.md §Perf):
+    #   "local"  — buffer stays data-local/model-replicated; the expert
+    #              einsum slices it per model rank; one explicit AG back.
+    #   "expert" — buffer expert-sharded (GSPMD lowers the scatter to a
+    #              replicated scatter + per-layer all-reduce: 100x wire).
+    dispatch: str = "local"
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 16
+    conv_width: int = 4
+    d_inner: int = 0          # inner width of the SSM branch
+    dt_rank: int = 0
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    group_size: int = 8       # layers per super-block: (group_size-1) mLSTM + 1 sLSTM
+    proj_factor_m: float = 2.0
+    proj_factor_s: float = 4.0 / 3.0
+    conv_width: int = 4
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    n_enc_layers: int = 0
+    enc_seq: int = 1500       # whisper audio frames after conv frontend (stubbed)
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str               # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    mlp: str = "swiglu"       # swiglu | geglu | relu2 | none
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    # attention locality: per-layer window override. None => full causal.
+    sliding_window: Optional[int] = None
+    global_every: int = 0     # if >0 with sliding_window: every k-th layer is global
+    attn_chunk: Optional[int] = None   # llama4 iRoPE-style chunked attention
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    frontend: Optional[str] = None     # audio | vision (stubbed embeddings)
+    frontend_seq: int = 0
+    n_meta_tokens: int = 0             # hymba learnable meta tokens
+    dtype: str = "bfloat16"
+    # long_500k requires sub-quadratic attention; see DESIGN.md for skips.
+    subquadratic: bool = False
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def reduced(self) -> "ArchConfig":
+        """Family-preserving tiny config for CPU smoke tests."""
+        changes = dict(
+            n_layers=min(self.n_layers, 2),
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(4, max(1, self.n_kv_heads * 4 // max(self.n_heads, 1)) or 1),
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab=256,
+            frontend_seq=16 if self.frontend_seq else 0,
+            n_meta_tokens=4 if self.n_meta_tokens else 0,
+            dtype="float32",
+        )
+        if self.moe is not None:
+            changes["moe"] = replace(
+                self.moe,
+                n_routed=4,
+                top_k=min(self.moe.top_k, 2),
+                n_shared=min(self.moe.n_shared, 1),
+                d_ff_expert=32 if self.moe.d_ff_expert else 0,
+                first_k_dense=min(self.moe.first_k_dense, 1),
+            )
+        if self.ssm is not None:
+            changes["ssm"] = replace(self.ssm, state_dim=8, d_inner=128, dt_rank=8)
+        if self.xlstm is not None:
+            changes["xlstm"] = replace(self.xlstm, group_size=2)
+            changes["n_layers"] = 4  # 2 groups of (1 mLSTM + 1 sLSTM)
+        if self.encdec is not None:
+            changes["encdec"] = replace(self.encdec, n_enc_layers=2, enc_seq=16)
+        if self.sliding_window is not None:
+            changes["sliding_window"] = 8
+        if self.attn_chunk is not None:
+            changes["attn_chunk"] = 16
+        return replace(self, **changes)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str            # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+# long_500k runs only for sub-quadratic archs (DESIGN.md §4).
+ARCH_IDS = [
+    "whisper-medium", "qwen2-7b", "yi-34b", "granite-20b", "minitron-8b",
+    "llama4-scout-17b-a16e", "deepseek-moe-16b", "paligemma-3b",
+    "xlstm-1.3b", "hymba-1.5b",
+]
+
+_REGISTRY = {}
+
+
+def register(name):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in _REGISTRY:
+        # import sibling modules lazily so registration happens
+        from repro import configs as _pkg  # noqa
+        import importlib
+        for mod in ("whisper_medium", "qwen2_7b", "yi_34b", "granite_20b",
+                    "minitron_8b", "llama4_scout", "deepseek_moe_16b",
+                    "paligemma_3b", "xlstm_1_3b", "hymba_1_5b"):
+            importlib.import_module(f"repro.configs.{mod}")
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def shapes_for(cfg: ArchConfig):
+    """The assigned shape cells for this arch (long_500k gated on subquadratic)."""
+    out = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and not cfg.subquadratic:
+            continue
+        out.append(s)
+    return out

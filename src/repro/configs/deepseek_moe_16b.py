@@ -1,0 +1,23 @@
+"""deepseek-moe-16b [moe]: 28L, d_model=2048, 16H (kv=16), vocab=102400.
+Fine-grained MoE: 2 shared + 64 routed experts, top-6, expert d_ff=1408.
+First layer stays dense (d_ff = (top_k + n_shared) * 1408 = 11264,
+approximating the paper's 10944). [arXiv:2401.06066]"""
+from repro.configs.base import ArchConfig, MoEConfig, register
+
+
+@register("deepseek-moe-16b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="deepseek-moe-16b",
+        family="moe",
+        n_layers=28,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=128,
+        d_ff=1408,
+        vocab=102400,
+        mlp="swiglu",
+        moe=MoEConfig(n_routed=64, top_k=6, n_shared=2, d_ff_expert=1408,
+                      capacity_factor=1.25, first_k_dense=1, dispatch="shard_map"),
+    )

@@ -1,0 +1,27 @@
+"""hymba-1.5b [hybrid]: 32L, d_model=1600, 25 attn heads (GQA kv=5,
+head_dim=64) in PARALLEL with mamba-style SSM heads (state=16, d_inner=3200),
+d_ff=5504, vocab=32001. 128 learnable meta tokens prepended; sliding-window
+(1024) attention everywhere except global layers {0, mid, last}.
+SSM + SWA -> sub-quadratic -> long_500k runs. [arXiv:2411.13676]"""
+from repro.configs.base import ArchConfig, SSMConfig, register
+
+
+@register("hymba-1.5b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="hymba-1.5b",
+        family="hybrid",
+        n_layers=32,
+        d_model=1600,
+        n_heads=25,
+        n_kv_heads=5,
+        head_dim=64,
+        d_ff=5504,
+        vocab=32001,
+        mlp="swiglu",
+        sliding_window=1024,
+        global_every=16,       # layers 0, 16, (31 handled as mid/last approx)
+        n_meta_tokens=128,
+        subquadratic=True,
+        ssm=SSMConfig(state_dim=16, conv_width=4, d_inner=3200, dt_rank=100),
+    )

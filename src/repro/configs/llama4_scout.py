@@ -1,0 +1,27 @@
+"""llama4-scout-17b-a16e [moe]: 48L, d_model=5120, 40H (GQA kv=8),
+d_ff=8192 per expert, vocab=202048, MoE 16 routed top-1 + 1 shared expert.
+Chunked attention (iRoPE-style, 8k chunks) makes long-context decode
+sub-quadratic -> long_500k runs for this arch.
+[hf:meta-llama/Llama-4-Scout-17B-16E]"""
+from repro.configs.base import ArchConfig, MoEConfig, register
+
+
+@register("llama4-scout-17b-a16e")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="llama4-scout-17b-a16e",
+        family="moe",
+        n_layers=48,
+        d_model=5120,
+        n_heads=40,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=8192,
+        vocab=202048,
+        mlp="swiglu",
+        rope_theta=5e5,
+        attn_chunk=8192,
+        subquadratic=True,
+        moe=MoEConfig(n_routed=16, top_k=1, n_shared=1, d_ff_expert=8192,
+                      capacity_factor=1.25, dispatch="shard_map"),
+    )

@@ -1,0 +1,24 @@
+"""paligemma-3b [vlm]: 18L, d_model=2048, 8H (MQA kv=1), d_ff=16384,
+vocab=257216. SigLIP vision frontend is a STUB: ``input_specs`` feeds
+precomputed patch embeddings (B, 256, 2048) prepended to the text sequence.
+Gemma decoder: GeGLU, RMSNorm, tied embeddings. [arXiv:2407.07726]"""
+from repro.configs.base import ArchConfig, register
+
+
+@register("paligemma-3b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="paligemma-3b",
+        family="vlm",
+        n_layers=18,
+        d_model=2048,
+        n_heads=8,
+        n_kv_heads=1,
+        head_dim=256,
+        d_ff=16384,
+        vocab=257216,
+        mlp="geglu",
+        tie_embeddings=True,
+        frontend="vision",
+        frontend_seq=256,
+    )

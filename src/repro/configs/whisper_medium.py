@@ -1,0 +1,29 @@
+"""whisper-medium [audio]: 24L enc + 24L dec, d_model=1024, 16H (kv=16),
+d_ff=4096, vocab=51865. Conv audio frontend is a STUB: ``input_specs`` feeds
+precomputed frame embeddings (B, 1500, 1024). Encoder is bidirectional;
+decoder is causal with cross-attention. [arXiv:2212.04356]
+
+Adaptation notes: RoPE replaces whisper's learned/sinusoidal positions so the
+decoder shares the substrate attention stack; see DESIGN.md.
+"""
+from repro.configs.base import ArchConfig, EncDecConfig, register
+
+
+@register("whisper-medium")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="whisper-medium",
+        family="encdec",
+        n_layers=24,
+        d_model=1024,
+        n_heads=16,
+        n_kv_heads=16,
+        head_dim=64,
+        d_ff=4096,
+        vocab=51865,
+        mlp="geglu",
+        norm_eps=1e-5,
+        encdec=EncDecConfig(n_enc_layers=24, enc_seq=1500),
+        frontend="audio",
+        frontend_seq=1500,
+    )

@@ -1,0 +1,24 @@
+"""xlstm-1.3b [ssm]: 48 blocks, d_model=2048, 4 heads, d_ff=0 (projection
+happens inside the mLSTM/sLSTM blocks), vocab=50304. Blocks are grouped as
+7 mLSTM + 1 sLSTM per super-block (xLSTM[7:1]); recurrent state decode is
+O(1) per token -> long_500k runs. [arXiv:2405.04517]"""
+from repro.configs.base import ArchConfig, XLSTMConfig, register
+
+
+@register("xlstm-1.3b")
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="xlstm-1.3b",
+        family="ssm",
+        n_layers=48,
+        d_model=2048,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=512,          # d_model / n_heads inside the mLSTM cell
+        d_ff=0,
+        vocab=50304,
+        mlp="none",
+        subquadratic=True,
+        xlstm=XLSTMConfig(group_size=8, proj_factor_m=2.0,
+                          proj_factor_s=4.0 / 3.0, conv_width=4),
+    )

@@ -1,0 +1,38 @@
+"""Digital-twin control policy (paper §6.3).
+
+The twin recommends the processing capacity (16 vs 32 threads in the
+paper; N vs 2N serving replicas in the TPU adaptation): switch UP when the
+expected queue length under the current control crosses ``lq_high``;
+switch DOWN when even the low-capacity configuration would keep the queue
+under ``lq_low``. A small hysteresis/switch cost prevents thrashing —
+matching the control regions of Fig. 8."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+from repro.core.digital_twin.dbn import DigitalTwin
+from repro.core.digital_twin.queue_model import CONTROLS
+
+
+@dataclass
+class ControlPolicy:
+    lq_high: float = 55.0            # escalate when E[Lq|u=16] above this
+    lq_low: float = 40.0             # de-escalate when E[Lq|16] below this
+    horizon: int = 2                 # predictive steps (the "twin" advantage)
+    history: List[Tuple[float, int, float]] = field(default_factory=list)
+
+    def recommend(self, twin: DigitalTwin, current: int, now: float) -> int:
+        lq16 = twin.expected_lq(16, self.horizon)
+        rec = current
+        if current == 16 and lq16 > self.lq_high:
+            rec = 32
+        elif current == 32 and lq16 < self.lq_low:
+            rec = 16
+        self.history.append((now, rec, lq16))
+        return rec
+
+
+def replicas_for_control(control: int, base_replicas: int = 1) -> int:
+    """TPU adaptation: 16 threads -> N replicas, 32 threads -> 2N."""
+    return base_replicas * (2 if control == 32 else 1)

@@ -1,0 +1,124 @@
+"""Queue system model for the digital twin (paper §6).
+
+Embeds Tables 8/9 verbatim, Eq. (3) M/M/1 theory, the §6.2 piecewise
+ground-truth trajectory, and a discrete-time stochastic queue simulator
+used by the benchmarks ("simulated stream processing system": a sender and
+a receiver with a FIFO queue — ERSAP pipeline analog)."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import numpy as np
+
+# ---- Table 8: System Metrics for 16 Threads (state, lam, mu, units, obs, calc)
+TABLE_16 = np.array([
+    # state  lambda   mu      units  obs_lq  calc_lq
+    [0, 162.0, 167.0, 16.0, 32.0, 33.74],
+    [1, 163.0, 167.0, 16.0, 41.0, 43.48],
+    [2, 164.0, 167.0, 16.0, 58.0, 60.52],
+    [3, 165.0, 167.0, 16.0, 97.0, 98.01],
+    [4, 166.0, 167.0, 16.0, 241.0, 248.00],
+])
+
+# ---- Table 9: System Metrics for 32 Threads ----
+TABLE_32 = np.array([
+    [0, 162.0, 222.0, 32.0, 1.56, 1.96],
+    [1, 163.0, 222.0, 32.0, 2.5, 2.02],
+    [2, 164.0, 222.0, 32.0, 2.56, 2.08],
+    [3, 165.0, 222.0, 32.0, 3.5, 2.14],
+    [4, 166.0, 222.0, 32.0, 3.56, 2.21],
+])
+
+N_STATES = 5
+CONTROLS = (16, 32)
+
+# The paper prints mu=167 in Table 8, but its Calc.Lq column is only
+# reproducible with mu = 500/3 ~= 166.67 (e.g. state 4: 166^2/(166.67*0.67)
+# = 248.0, whereas mu=167 gives 165.0). Table 9's mu=222 is exact. We keep
+# the printed values in the tables and expose the recovered exact rates here.
+MU_EXACT = {16: 500.0 / 3.0, 32: 222.0}
+
+
+def calc_lq(lam: float, mu: float) -> float:
+    """Eq. (3): L_q = lambda^2 / (mu * (mu - lambda))."""
+    if mu <= lam:
+        return float("inf")
+    return lam * lam / (mu * (mu - lam))
+
+
+def table_for(threads: int) -> np.ndarray:
+    if threads == 16:
+        return TABLE_16
+    if threads == 32:
+        return TABLE_32
+    raise ValueError(threads)
+
+
+def obs_lq(state: float, threads: int) -> float:
+    """Interpolated observed queue length for a (possibly fractional) state."""
+    tab = table_for(threads)
+    return float(np.interp(np.clip(state, 0, N_STATES - 1),
+                           tab[:, 0], tab[:, 4]))
+
+
+def lam_of_state(state: float) -> float:
+    return float(np.interp(np.clip(state, 0, N_STATES - 1),
+                           TABLE_16[:, 0], TABLE_16[:, 1]))
+
+
+def ground_truth(n_steps: int = 80) -> np.ndarray:
+    """§6.2 piecewise state trajectory (clipped to the table's state range)."""
+    s = 0.0
+    out = []
+    for t in range(n_steps):
+        if t < 10:
+            s += 0.4
+        elif 20 <= t < 30:
+            s -= 0.4
+        elif 40 <= t < 50:
+            s += 0.4
+        elif 60 <= t < 70:
+            s -= 0.4
+        s = float(np.clip(s, 0.0, N_STATES - 1))
+        out.append(s)
+    return np.asarray(out)
+
+
+def observe(state: float, threads: int, rng: np.random.Generator,
+            noise_frac: float = 0.08) -> float:
+    """Noisy Lq measurement around the interpolated table value."""
+    mean = obs_lq(state, threads)
+    return float(max(rng.normal(mean, noise_frac * mean), 1e-3))
+
+
+@dataclass
+class QueueSim:
+    """Discrete-time M/M/1-ish stream queue: Poisson arrivals at lambda(state),
+    service rate mu(threads). Used by bench_queue to regenerate Tables 8/9."""
+    threads: int = 16
+    seed: int = 0
+
+    def __post_init__(self):
+        self.rng = np.random.default_rng(self.seed)
+        self.q = 0.0
+
+    def mu(self) -> float:
+        return MU_EXACT[self.threads]
+
+    def run(self, lam: float, steps: int = 20000, dt: float = 0.01):
+        """Simulate and return time-averaged queue length (excluding the
+        in-service item: L_q)."""
+        q = 0
+        area = 0.0
+        busy = 0.0
+        mu = self.mu()
+        for _ in range(steps):
+            arrivals = self.rng.poisson(lam * dt)
+            q += arrivals
+            if q > 0:
+                served = self.rng.poisson(mu * dt)
+                q = max(q - served, 0)
+                busy += dt
+            area += q * dt
+        return area / (steps * dt)

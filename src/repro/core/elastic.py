@@ -1,0 +1,76 @@
+"""Elastic data-parallel scaling (HPA/twin decision -> new mesh).
+
+A serving deployment is R replicas x TP chips. Scaling re-builds the mesh
+as (R', TP), re-lowers prefill/decode, and resharsd params onto the new
+topology (device_put through the checkpoint/restore path — the same code
+path that handles node-failure recovery, so elasticity and fault tolerance
+are one mechanism)."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import make_mesh
+from repro.models import model_api as MA
+from repro.sharding.api import ShardCtx, tree_shardings
+
+
+@dataclass
+class ElasticServing:
+    cfg: ArchConfig
+    tp: int = 1
+    replicas: int = 0
+    mesh: object = None
+    ctx: Optional[ShardCtx] = None
+    params: object = None
+    prefill_fn: object = None
+    decode_fn: object = None
+    scale_events: list = field(default_factory=list)
+
+    def max_replicas(self) -> int:
+        return max(len(jax.devices()) // self.tp, 1)
+
+    def build(self, replicas: int, host_params=None, now: float = 0.0):
+        """(Re)build at ``replicas`` data-parallel replicas."""
+        replicas = min(max(replicas, 1), self.max_replicas())
+        if host_params is None:
+            host_params = self.host_params()
+        mesh = make_mesh((replicas, self.tp), ("data", "model"))
+        ctx = ShardCtx(mesh)
+        mod = MA.get_module(self.cfg)
+        aparams = mod.abstract_params(self.cfg)
+        psh = tree_shardings(ctx, aparams, mod.param_axes(self.cfg))
+        params = jax.tree.map(
+            lambda h, s: jax.device_put(h, s), host_params, psh)
+        cfgl = self.cfg
+
+        def prefill(params, tokens):
+            return mod.prefill(params, tokens, cfgl, ctx)
+
+        def decode(params, token, cache):
+            return mod.decode_step(params, token, cache, cfgl, ctx)
+
+        self.prefill_fn = jax.jit(prefill)
+        self.decode_fn = jax.jit(decode)
+        old = self.replicas
+        self.mesh, self.ctx, self.params = mesh, ctx, params
+        self.replicas = replicas
+        if old != replicas:
+            self.scale_events.append((now, old, replicas))
+        return self
+
+    def host_params(self):
+        if self.params is None:
+            raise RuntimeError("no params yet — call build(host_params=...)")
+        return jax.tree.map(np.asarray, self.params)
+
+    def scale_to(self, replicas: int, now: float = 0.0):
+        replicas = min(max(replicas, 1), self.max_replicas())
+        if replicas == self.replicas:
+            return self
+        return self.build(replicas, now=now)

@@ -1,0 +1,105 @@
+"""Horizontal Pod Autoscaler — paper §4.4.
+
+Implements Eq. (1): desired = ceil(current * metric / target), with the
+readiness-gating logic of the Kubernetes replica calculator quoted in
+§4.4.2 (cpuInitializationPeriod / delayOfInitialReadinessStatus) and the
+five-minute scale-down stabilization window observed in §4.4.5.
+
+The metric is pluggable: the paper uses CPU utilization; the TPU serving
+adaptation feeds queue depth / tokens-per-second from the streaming engine
+(see DESIGN.md §2) — the formula and gating are identical.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.state_machine import ConditionStatus, Pod
+
+
+@dataclass
+class HPAConfig:
+    target: float                      # target metric value per pod
+    min_replicas: int = 1
+    max_replicas: int = 10
+    cpu_initialization_period: float = 300.0
+    delay_of_initial_readiness: float = 30.0
+    scale_down_stabilization: float = 300.0   # §4.4.5: five minutes
+    tolerance: float = 0.1             # K8s default: 10% deadband
+    metric_window: float = 60.0
+
+
+@dataclass
+class MetricSample:
+    value: float
+    timestamp: float
+    window: float = 60.0
+
+
+def pod_is_unready(pod: Pod, sample: Optional[MetricSample], now: float,
+                   cfg: HPAConfig, resource_is_cpu_like: bool = True) -> bool:
+    """Faithful port of the §4.4.2 snippet."""
+    if not resource_is_cpu_like:
+        return False
+    cond = pod.condition("PodReady")
+    if cond is None or pod.start_time is None:
+        return True
+    if pod.start_time + cfg.cpu_initialization_period > now:
+        # within initialization: unready if not Ready OR the sample predates
+        # the last readiness transition (+ window)
+        return (cond.status == ConditionStatus.FALSE or
+                (sample is not None and
+                 sample.timestamp < cond.last_transition_time + sample.window))
+    return (cond.status == ConditionStatus.FALSE and
+            pod.start_time + cfg.delay_of_initial_readiness >
+            cond.last_transition_time)
+
+
+def desired_replicas(current: int, metric: float, target: float) -> int:
+    """Eq. (1): ceil(current * metric / target). §4.4.4 example:
+    current=4, metric=90, target=50 -> ceil(7.2) = 8."""
+    if target <= 0:
+        raise ValueError("target must be positive")
+    return math.ceil(current * metric / target)
+
+
+@dataclass
+class HPA:
+    cfg: HPAConfig
+    # history of (time, desired) for scale-down stabilization
+    _recommendations: List[Tuple[float, int]] = field(default_factory=list)
+    last_scale_time: Optional[float] = None
+
+    def evaluate(self, pods: List[Pod],
+                 samples: Dict[str, MetricSample], now: float) -> int:
+        """One reconcile loop: returns the replica count to converge to."""
+        current = max(len(pods), 1)
+        ready_vals = []
+        for pod in pods:
+            sample = samples.get(pod.name)
+            if pod_is_unready(pod, sample, now, self.cfg):
+                continue
+            if sample is not None:
+                ready_vals.append(sample.value)
+        if not ready_vals:
+            return len(pods)
+        metric = sum(ready_vals) / len(ready_vals)
+        ratio = metric / self.cfg.target
+        if abs(ratio - 1.0) <= self.cfg.tolerance:
+            desired = current
+        else:
+            desired = desired_replicas(current, metric, self.cfg.target)
+        desired = max(self.cfg.min_replicas,
+                      min(self.cfg.max_replicas, desired))
+        # scale-down stabilization: use the max recommendation in the window
+        self._recommendations.append((now, desired))
+        cutoff = now - self.cfg.scale_down_stabilization
+        self._recommendations = [(t, d) for t, d in self._recommendations
+                                 if t >= cutoff]
+        if desired < current:
+            desired = max(d for _, d in self._recommendations)
+            desired = min(desired, current)
+        if desired != current:
+            self.last_scale_time = now
+        return desired

@@ -1,0 +1,90 @@
+"""JCS — JIRIAF Central Service: initiates pilot jobs through the JRM
+(paper §3). Models the FireWorks/Slurm deployment path of §4.5 and the
+40-node Perlmutter bring-up of §5.1 (staggered srun of node-setup.sh with
+SSH tunnels), creating VirtualNodes against a simulated facility.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.jfe import FrontEnd, WorkflowRequest
+from repro.core.jrm import SliceSpec, VirtualNode, start_vk
+
+
+@dataclass
+class SSHTunnel:
+    """§4.5.3 / Fig. 3: one line of the port map."""
+    kind: str            # apiserver | kubelet | custom-metrics | db
+    local_port: int
+    remote_port: int
+    direction: str       # L (local forward) | R (remote forward)
+
+
+@dataclass
+class PilotJob:
+    wf_id: int
+    nodes: List[str]
+    tunnels: List[SSHTunnel]
+    state: str = "RUNNING"
+
+
+@dataclass
+class CentralService:
+    frontend: FrontEnd
+    apiserver_port: int = 38687
+    kubelet_port_base: int = 10000      # paper: JRM ports in [10000, 19999]
+    metrics_port_base: int = 20000      # custom metrics in [20000, 49999]
+    stagger_s: float = 3.0              # §5.1: `sleep 3` between sruns
+    nodes: Dict[str, VirtualNode] = field(default_factory=dict)
+    pilots: Dict[int, PilotJob] = field(default_factory=dict)
+    _port: itertools.count = field(default_factory=lambda: itertools.count(0))
+
+    def launch_pilot(self, wf: WorkflowRequest, now: float,
+                     slice_spec: Optional[SliceSpec] = None) -> PilotJob:
+        """Deploy wf.nnodes JRMs (nersc-slurm.sh analog): staggered start,
+        per-node kubelet + exporter tunnels, walltime lease set 60s short of
+        the Slurm walltime (§4.5.4)."""
+        names, tunnels = [], []
+        for i in range(1, wf.nnodes + 1):
+            off = next(self._port)
+            name = f"{wf.nodename}{i:02d}"
+            kubelet_port = self.kubelet_port_base + off
+            node = start_vk(
+                name, nodetype=wf.nodetype, site=wf.site,
+                walltime=max(wf.walltime - 60.0, 0.0) if wf.walltime else 0.0,
+                kubelet_port=kubelet_port,
+                now=now + self.stagger_s * (i - 1),
+                slice_spec=slice_spec or SliceSpec())
+            self.nodes[name] = node
+            names.append(name)
+            tunnels.append(SSHTunnel("apiserver", self.apiserver_port,
+                                     self.apiserver_port, "L"))
+            tunnels.append(SSHTunnel("kubelet", kubelet_port, kubelet_port, "R"))
+            for j, kind in enumerate(("ersap", "process", "ejfat")):
+                tunnels.append(SSHTunnel(
+                    f"custom-metrics/{kind}",
+                    self.metrics_port_base + 10000 * j + off,
+                    (2221, 1776, 8088)[j], "R"))
+        wf.state = "RUNNING"
+        pilot = PilotJob(wf.wf_id, names, tunnels)
+        self.pilots[wf.wf_id] = pilot
+        return pilot
+
+    def node_list(self) -> List[VirtualNode]:
+        return list(self.nodes.values())
+
+    def teardown(self, wf_id: int, now: float):
+        pilot = self.pilots.get(wf_id)
+        if not pilot:
+            return
+        for name in pilot.nodes:
+            node = self.nodes.pop(name, None)
+            if node:
+                for pod in list(node.pods):
+                    node.delete_pod(pod, now)
+        pilot.state = "COMPLETED"
+        wf = self.frontend.table.get(wf_id)
+        if wf:
+            wf.state = "COMPLETED"

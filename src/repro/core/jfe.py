@@ -1,0 +1,44 @@
+"""JFE — JIRIAF Front End: user workflow request table (paper §3, §4.5.2).
+
+Mirrors the FireWorks main.sh verbs: add_wf / get_wf / delete_wf. A
+workflow requests N nodes of a nodetype/site with a walltime — exactly the
+env.list fields from §4.5.2 (nnodes, nodetype, walltime, account, qos,
+nodename, site)."""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class WorkflowRequest:
+    wf_id: int
+    nodename: str
+    nnodes: int
+    nodetype: str = "cpu"
+    site: str = "perlmutter"
+    walltime: float = 300.0
+    account: str = "m3792"
+    qos: str = "debug"
+    state: str = "READY"      # READY -> RUNNING -> COMPLETED | ARCHIVED
+
+
+@dataclass
+class FrontEnd:
+    _counter: itertools.count = field(default_factory=lambda: itertools.count(1))
+    table: Dict[int, WorkflowRequest] = field(default_factory=dict)
+
+    def add_wf(self, nodename: str, nnodes: int, **kw) -> WorkflowRequest:
+        wf = WorkflowRequest(next(self._counter), nodename, nnodes, **kw)
+        self.table[wf.wf_id] = wf
+        return wf
+
+    def get_wf(self) -> List[WorkflowRequest]:
+        return list(self.table.values())
+
+    def delete_wf(self, wf_id: int) -> Optional[WorkflowRequest]:
+        wf = self.table.pop(wf_id, None)
+        if wf:
+            wf.state = "ARCHIVED"
+        return wf

@@ -1,0 +1,51 @@
+"""JFM — JIRIAF Facility Manager: maintains the dynamic resource pool by
+periodically scraping node state from each facility (paper §3)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+from repro.core.jrm import VirtualNode
+
+
+@dataclass
+class ResourceRecord:
+    node: str
+    site: str
+    nodetype: str
+    ready: bool
+    free_chips: int
+    free_hbm: int
+    alive_left: float
+    heartbeat_age: float
+    heartbeat_latency: float
+    straggler: bool = False
+
+
+@dataclass
+class FacilityManager:
+    stale_after: float = 30.0          # heartbeats older than this = NotReady
+    straggler_factor: float = 3.0      # latency > factor * median => straggler
+    pool: Dict[str, ResourceRecord] = field(default_factory=dict)
+
+    def scrape(self, nodes: List[VirtualNode], now: float) -> Dict[str, ResourceRecord]:
+        lats = sorted(n.heartbeat_latency for n in nodes) or [0.0]
+        median = lats[len(lats) // 2]
+        self.pool = {}
+        for n in nodes:
+            age = now - n.last_heartbeat
+            ready = n.ready and age <= self.stale_after
+            self.pool[n.name] = ResourceRecord(
+                node=n.name, site=n.site, nodetype=n.nodetype, ready=ready,
+                free_chips=n.free_chips(), free_hbm=n.free_hbm(),
+                alive_left=n.alive_left(now), heartbeat_age=age,
+                heartbeat_latency=n.heartbeat_latency,
+                straggler=(median > 0 and
+                           n.heartbeat_latency > self.straggler_factor * median))
+        return self.pool
+
+    def available(self) -> List[ResourceRecord]:
+        return [r for r in self.pool.values() if r.ready and r.free_chips > 0]
+
+    def total_free_chips(self) -> int:
+        return sum(r.free_chips for r in self.available())

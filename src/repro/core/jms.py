@@ -1,0 +1,75 @@
+"""JMS — JIRIAF Matching Service: aligns leased resources with user
+requests (paper §3). Affinity/taint-aware best-fit bin-packing; the
+resource vector is (chips, HBM bytes) with HBM taken from the dry-run's
+``memory_analysis()`` for the requested (arch x shape) — see launch/train.
+
+Placement policy (TPU adaptation):
+  1. filter: Ready, tolerated taints, nodeSelector + affinity match,
+     walltime left > pod's expected duration + drain margin,
+  2. prefer non-straggler nodes (heartbeat-latency label from JFM),
+  3. best-fit on free HBM (tightest fit that still holds the pod).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.jfm import FacilityManager
+from repro.core.jrm import VirtualNode
+from repro.core.state_machine import Pod
+
+
+@dataclass
+class MatchResult:
+    pod: str
+    node: Optional[str]
+    reason: str = ""
+
+
+@dataclass
+class MatchingService:
+    fm: FacilityManager
+
+    def filter_nodes(self, pod: Pod, nodes: List[VirtualNode], now: float,
+                     expected_duration: float = 0.0) -> List[VirtualNode]:
+        out = []
+        for n in nodes:
+            rec = self.fm.pool.get(n.name)
+            if rec is None or not rec.ready:
+                continue
+            if not n.tolerates(pod):
+                continue
+            lab = n.labels(now)
+            if any(lab.get(k) != v for k, v in pod.node_selector.items()):
+                continue
+            if pod.affinity and not n.matches(pod.affinity, now):
+                continue
+            if n.free_chips() < pod.request_chips:
+                continue
+            if n.free_hbm() < pod.request_hbm_bytes:
+                continue
+            left = n.alive_left(now)
+            if left != float("inf") and \
+                    left < expected_duration + n.drain_margin:
+                continue
+            out.append(n)
+        return out
+
+    def match(self, pod: Pod, nodes: List[VirtualNode], now: float,
+              expected_duration: float = 0.0) -> MatchResult:
+        cands = self.filter_nodes(pod, nodes, now, expected_duration)
+        if not cands:
+            return MatchResult(pod.name, None, "no node satisfies request")
+        recs = self.fm.pool
+        # non-stragglers first, then tightest HBM fit
+        cands.sort(key=lambda n: (recs[n.name].straggler,
+                                  n.free_hbm() - pod.request_hbm_bytes))
+        return MatchResult(pod.name, cands[0].name, "best-fit")
+
+    def bind(self, pod: Pod, nodes: List[VirtualNode], now: float,
+             expected_duration: float = 0.0) -> MatchResult:
+        res = self.match(pod, nodes, now, expected_duration)
+        if res.node is not None:
+            node = next(n for n in nodes if n.name == res.node)
+            node.create_pod(pod, now)
+        return res

@@ -1,0 +1,174 @@
+"""JRM — JIRIAF Resource Manager: Virtual-Kubelet nodes in userspace.
+
+A ``VirtualNode`` is the VK of paper §4.1: labels jiriaf.nodetype /
+jiriaf.site / jiriaf.alivetime, a walltime lease (NotReady when it expires
+— the VK process is NOT terminated, per §4.2.3), the mock-provider taint,
+and CreatePod/GetPods loops driving the §4.3 state machines.
+
+TPU adaptation: a node fronts a mesh *slice* (chips + HBM). Containers are
+jitted-workload thunks; the "pgid" is the workload handle. The §4.5.4
+walltime margin is modeled by ``drain_margin``: pods are asked to
+checkpoint when remaining lease < margin.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.state_machine import (Condition, ConditionStatus, Container,
+                                      Pod, PodPhase, create_pod_container,
+                                      get_pods_container)
+
+DEFAULT_TAINT = {"key": "virtual-kubelet.io/provider", "value": "mock",
+                 "effect": "NoSchedule"}
+
+
+@dataclass
+class SliceSpec:
+    """The resources a node leases (TPU adaptation of a Slurm allocation)."""
+    chips: int = 4
+    hbm_bytes_per_chip: int = 16 * 1024**3
+    devices: tuple = ()
+
+    @property
+    def hbm_bytes(self):
+        return self.chips * self.hbm_bytes_per_chip
+
+
+@dataclass
+class VirtualNode:
+    name: str
+    nodetype: str = "cpu"
+    site: str = "Local"
+    walltime: float = 0.0            # 0 => no limit (JIRIAF_WALLTIME)
+    slice_spec: SliceSpec = field(default_factory=SliceSpec)
+    kubelet_port: int = 10250
+    pod_ip: str = "172.17.0.1"       # VKUBELET_POD_IP
+    drain_margin: float = 60.0       # §4.5.4: JRM walltime set 60s early
+    created_at: float = 0.0
+    taints: List[dict] = field(default_factory=lambda: [dict(DEFAULT_TAINT)])
+    pods: Dict[str, Pod] = field(default_factory=dict)
+    ready: bool = True
+    last_heartbeat: float = 0.0
+    heartbeat_latency: float = 0.0   # straggler signal for JMS placement
+
+    # ----------------------------------------------------------- labels
+    def labels(self, now: float) -> Dict[str, str]:
+        lab = {
+            "jiriaf.nodetype": self.nodetype,
+            "jiriaf.site": self.site,
+            "kubernetes.io/role": "agent",
+        }
+        if self.walltime > 0:
+            lab["jiriaf.alivetime"] = str(max(0, int(self.alive_left(now))))
+        return lab
+
+    def alive_left(self, now: float) -> float:
+        if self.walltime <= 0:
+            return float("inf")
+        return self.walltime - (now - self.created_at)
+
+    def draining(self, now: float) -> bool:
+        left = self.alive_left(now)
+        return left != float("inf") and left <= self.drain_margin
+
+    # ------------------------------------------------------------ pods
+    def create_pod(self, pod: Pod, now: float) -> Pod:
+        """CreatePod (§4.3): run every container through the create walk,
+        then set creation-phase conditions."""
+        if not self.tolerates(pod):
+            raise PermissionError(
+                f"pod {pod.name} lacks toleration for node taints")
+        for cont in pod.containers:
+            create_pod_container(cont, now)
+        pod.node = self.name
+        pod.set_conditions_create(now)
+        self.pods[pod.name] = pod
+        return pod
+
+    def get_pods(self, now: float) -> List[Pod]:
+        """GetPods (§4.3): refresh container states and pod conditions."""
+        for pod in self.pods.values():
+            for cont in pod.containers:
+                get_pods_container(cont, now)
+            pod.set_conditions_get(now)
+        return list(self.pods.values())
+
+    def delete_pod(self, name: str, now: float):
+        """SIGTERM to the process group (pgid file) in the paper; workload
+        cancellation here."""
+        pod = self.pods.pop(name, None)
+        if pod:
+            for cont in pod.containers:
+                cont._finished = True
+                get_pods_container(cont, now)
+        return pod
+
+    def tolerates(self, pod: Pod) -> bool:
+        for taint in self.taints:
+            ok = any(t.get("key") == taint["key"] and
+                     t.get("value") == taint["value"]
+                     for t in pod.tolerations)
+            if not ok:
+                return False
+        return True
+
+    # ------------------------------------------------------------ tick
+    def tick(self, now: float, latency: float = 0.0):
+        """Heartbeat + walltime bookkeeping. On lease expiry the node turns
+        NotReady but the VK process is not terminated (paper §4.2.3)."""
+        self.last_heartbeat = now
+        self.heartbeat_latency = latency
+        if self.walltime > 0 and self.alive_left(now) <= 0:
+            self.ready = False
+        return self.ready
+
+    def matches(self, expressions: List[dict], now: float) -> bool:
+        """nodeAffinity matchExpressions: In / NotIn / Gt / Lt (§4.2.3)."""
+        lab = self.labels(now)
+        for expr in expressions:
+            key, op = expr["key"], expr["operator"]
+            vals = [str(v) for v in expr.get("values", [])]
+            have = lab.get(key)
+            if op == "In":
+                if have not in vals:
+                    return False
+            elif op == "NotIn":
+                if have in vals:
+                    return False
+            elif op == "Gt":
+                if have is None or not vals or not float(have) > float(vals[0]):
+                    return False
+            elif op == "Lt":
+                if have is None or not vals or not float(have) < float(vals[0]):
+                    return False
+            elif op == "Exists":
+                if have is None:
+                    return False
+        return True
+
+    # ------------------------------------------------------- resources
+    def used_chips(self) -> int:
+        return sum(p.request_chips for p in self.pods.values()
+                   if p.phase in (PodPhase.PENDING, PodPhase.RUNNING))
+
+    def used_hbm(self) -> int:
+        return sum(p.request_hbm_bytes for p in self.pods.values()
+                   if p.phase in (PodPhase.PENDING, PodPhase.RUNNING))
+
+    def free_chips(self) -> int:
+        return self.slice_spec.chips - self.used_chips()
+
+    def free_hbm(self) -> int:
+        return self.slice_spec.hbm_bytes - self.used_hbm()
+
+
+def start_vk(nodename: str, *, nodetype="cpu", site="Local", walltime=0.0,
+             kubelet_port=10250, pod_ip="172.17.0.1", now=0.0,
+             slice_spec: Optional[SliceSpec] = None) -> VirtualNode:
+    """start.sh analog (§4.1.1): environment-variable driven bring-up."""
+    return VirtualNode(
+        name=nodename, nodetype=nodetype, site=site, walltime=walltime,
+        kubelet_port=kubelet_port, pod_ip=pod_ip, created_at=now,
+        slice_spec=slice_spec or SliceSpec(), last_heartbeat=now)

@@ -1,0 +1,155 @@
+"""Prometheus-operator analog (paper §4.6): metric registry, Services,
+ServiceMonitors, and a scraping Prometheus instance with a tiny TSDB.
+
+Pods created by VK share VKUBELET_POD_IP, so §4.6.3's same-pod-IP case is
+modeled: Services must remap exporter ports to unique control-plane ports
+(enforced at Service construction)."""
+from __future__ import annotations
+
+import bisect
+import math
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+@dataclass
+class Counter:
+    value: float = 0.0
+
+    def inc(self, v: float = 1.0):
+        self.value += v
+
+
+@dataclass
+class Gauge:
+    value: float = 0.0
+
+    def set(self, v: float):
+        self.value = v
+
+    def inc(self, v: float = 1.0):
+        self.value += v
+
+    def dec(self, v: float = 1.0):
+        self.value -= v
+
+
+@dataclass
+class Histogram:
+    buckets: Tuple[float, ...] = (0.005, 0.05, 0.5, 1, 5, 30, 120, math.inf)
+    counts: List[int] = None
+    total: float = 0.0
+    n: int = 0
+
+    def __post_init__(self):
+        if self.counts is None:
+            self.counts = [0] * len(self.buckets)
+
+    def observe(self, v: float):
+        self.counts[bisect.bisect_left(self.buckets, v)] += 1
+        self.total += v
+        self.n += 1
+
+    @property
+    def mean(self):
+        return self.total / self.n if self.n else 0.0
+
+
+@dataclass
+class Registry:
+    """Per-pod exporter: metric name -> metric, exposed on a port."""
+    port: int = 2221
+    metrics: Dict[str, object] = field(default_factory=dict)
+
+    def counter(self, name) -> Counter:
+        return self.metrics.setdefault(name, Counter())
+
+    def gauge(self, name) -> Gauge:
+        return self.metrics.setdefault(name, Gauge())
+
+    def histogram(self, name, **kw) -> Histogram:
+        return self.metrics.setdefault(name, Histogram(**kw))
+
+    def collect(self) -> Dict[str, float]:
+        out = {}
+        for name, m in self.metrics.items():
+            if isinstance(m, Histogram):
+                out[name + "_sum"] = m.total
+                out[name + "_count"] = m.n
+            else:
+                out[name] = m.value
+        return out
+
+
+@dataclass
+class Endpoint:
+    pod: str
+    pod_ip: str
+    port: int                 # exporter port on the pod
+    cp_port: int              # remapped control-plane port (§4.6.3)
+    registry: Registry
+
+
+@dataclass
+class Service:
+    """Aggregates exporter endpoints of pods selected by label (§4.6.2).
+    When pod IPs collide, cp_port remapping keeps endpoints distinct."""
+    name: str
+    selector: Dict[str, str]
+    labels: Dict[str, str] = field(default_factory=dict)
+    endpoints: List[Endpoint] = field(default_factory=list)
+
+    def add_endpoint(self, ep: Endpoint):
+        for e in self.endpoints:
+            if e.pod_ip == ep.pod_ip and e.cp_port == ep.cp_port:
+                raise ValueError(
+                    f"service {self.name}: duplicate {ep.pod_ip}:{ep.cp_port}"
+                    " — same-pod-IP endpoints must remap to unique CP ports"
+                    " (paper §4.6.3)")
+        self.endpoints.append(ep)
+
+    def selects(self, pod_labels: Dict[str, str]) -> bool:
+        return all(pod_labels.get(k) == v for k, v in self.selector.items())
+
+
+@dataclass
+class ServiceMonitor:
+    name: str
+    service_selector: Dict[str, str]
+
+    def selects(self, svc: Service) -> bool:
+        return all(svc.labels.get(k) == v
+                   for k, v in self.service_selector.items())
+
+
+@dataclass
+class Prometheus:
+    """Scrapes all endpoints of all Services matched by its ServiceMonitors
+    into an in-memory TSDB: series[(metric, pod)] = [(t, value), ...]."""
+    monitors: List[ServiceMonitor] = field(default_factory=list)
+    services: List[Service] = field(default_factory=list)
+    tsdb: Dict[Tuple[str, str], List[Tuple[float, float]]] = \
+        field(default_factory=lambda: defaultdict(list))
+
+    def scrape(self, now: float):
+        n = 0
+        for mon in self.monitors:
+            for svc in self.services:
+                if not mon.selects(svc):
+                    continue
+                for ep in svc.endpoints:
+                    for name, val in ep.registry.collect().items():
+                        self.tsdb[(name, ep.pod)].append((now, val))
+                        n += 1
+        return n
+
+    def query_latest(self, metric: str) -> Dict[str, float]:
+        out = {}
+        for (name, pod), series in self.tsdb.items():
+            if name == metric and series:
+                out[pod] = series[-1][1]
+        return out
+
+    def query_range(self, metric: str, pod: str):
+        return self.tsdb.get((metric, pod), [])

@@ -1,0 +1,236 @@
+"""Container/pod lifecycle state machines — faithful port of paper §4.3.
+
+Tables 6 and 7 are reproduced verbatim as the CREATE_UIDS / GET_UIDS
+indices. In the paper a "container" is a BASH script run as a process
+group (pgid file, stdout/stderr files); in this TPU adaptation a container
+is a compiled JAX workload handle — the filesystem probes map to runtime
+probes (see DESIGN.md §2) but the STATES AND TRANSITIONS are identical:
+
+  CreatePod walks a container through volume staging, file copy, command
+  start, pgid capture, stdout/stderr creation, cmd wait, pgid write, and
+  finally containerStarted(8).
+
+  GetPods periodically re-derives container status: created -> getPids ->
+  stderr probe -> stderrNotEmpty(3) | completed(4) | running(5).
+
+Pod conditions (PodScheduled / PodInitialized / PodReady with
+LastTransitionTime) follow §4.3.3 and §4.4.3 so the HPA replica calculator
+sees exactly the readiness semantics Kubernetes expects.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+# ---- Table 6: UID Index for CreatePod method (verbatim) ----
+CREATE_UIDS = {
+    "create-cont-readDefaultVolDirError": 0,
+    "create-cont-copyFileError": 1,
+    "create-cont-cmdStartError": 2,
+    "create-cont-getPgidError": 3,
+    "create-cont-createStdoutFileError": 4,
+    "create-cont-createStderrFileError": 5,
+    "create-cont-cmdWaitError": 6,
+    "create-cont-writePgidError": 7,
+    "create-cont-containerStarted": 8,
+}
+
+# ---- Table 7: UID Index for GetPods method (verbatim) ----
+GET_UIDS = {
+    "get-cont-create": 0,
+    "get-cont-getPidsError": 1,
+    "get-cont-getStderrFileInfoError": 2,
+    "get-cont-stderrNotEmpty": 3,
+    "get-cont-completed": 4,
+    "get-cont-running": 5,
+}
+
+# CreatePod stage order (a failure at stage k emits the matching error UID)
+CREATE_STAGES = [
+    "readDefaultVolDir", "copyFile", "cmdStart", "getPgid",
+    "createStdoutFile", "createStderrFile", "cmdWait", "writePgid",
+]
+_STAGE_TO_UID = {
+    "readDefaultVolDir": "create-cont-readDefaultVolDirError",
+    "copyFile": "create-cont-copyFileError",
+    "cmdStart": "create-cont-cmdStartError",
+    "getPgid": "create-cont-getPgidError",
+    "createStdoutFile": "create-cont-createStdoutFileError",
+    "createStderrFile": "create-cont-createStderrFileError",
+    "cmdWait": "create-cont-cmdWaitError",
+    "writePgid": "create-cont-writePgidError",
+}
+
+
+class ContainerPhase(str, enum.Enum):
+    WAITING = "Waiting"
+    RUNNING = "Running"
+    TERMINATED = "Terminated"
+
+
+class PodPhase(str, enum.Enum):
+    PENDING = "Pending"
+    RUNNING = "Running"
+    SUCCEEDED = "Succeeded"
+    FAILED = "Failed"
+
+
+class ConditionStatus(str, enum.Enum):
+    TRUE = "True"
+    FALSE = "False"
+
+
+@dataclass
+class Condition:
+    type: str                      # PodScheduled | PodInitialized | PodReady
+    status: ConditionStatus
+    last_transition_time: float
+
+
+@dataclass
+class ContainerState:
+    phase: ContainerPhase = ContainerPhase.WAITING
+    uid: str = "get-cont-create"
+    uid_index: int = 0
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    exit_code: Optional[int] = None
+    pgid: Optional[int] = None     # workload handle id in the TPU adaptation
+
+    def transition(self, uid: str, table: Dict[str, int]):
+        self.uid = uid
+        self.uid_index = table[uid]
+
+
+@dataclass
+class Container:
+    name: str
+    command: Optional[Callable] = None      # the workload thunk
+    state: ContainerState = field(default_factory=ContainerState)
+    stderr: str = ""                         # captured failure text
+    stdout: List[str] = field(default_factory=list)
+    _finished: bool = False
+
+    # hooks let tests inject failures at any CreatePod stage
+    fail_at: Optional[str] = None
+
+
+_PGID_COUNTER = [1000]
+
+
+def create_pod_container(cont: Container, now: float) -> ContainerState:
+    """CreatePod state walk (paper Fig. 2 left column + Table 6)."""
+    for stage in CREATE_STAGES:
+        if cont.fail_at == stage:
+            cont.state.transition(_STAGE_TO_UID[stage], CREATE_UIDS)
+            cont.state.phase = ContainerPhase.TERMINATED
+            cont.state.finished_at = now
+            cont.state.exit_code = 1
+            cont.stderr = f"{stage} failed"
+            return cont.state
+        if stage == "getPgid":
+            _PGID_COUNTER[0] += 1
+            cont.state.pgid = _PGID_COUNTER[0]
+    cont.state.transition("create-cont-containerStarted", CREATE_UIDS)
+    cont.state.phase = ContainerPhase.RUNNING
+    cont.state.started_at = now
+    return cont.state
+
+
+def get_pods_container(cont: Container, now: float) -> ContainerState:
+    """GetPods monitor walk (paper Fig. 2 right column + Table 7)."""
+    st = cont.state
+    if st.phase == ContainerPhase.WAITING:
+        st.transition("get-cont-create", GET_UIDS)
+        return st
+    if st.pgid is None and st.phase == ContainerPhase.RUNNING:
+        st.transition("get-cont-getPidsError", GET_UIDS)
+        st.phase = ContainerPhase.TERMINATED
+        st.finished_at = now
+        st.exit_code = 1
+        return st
+    if cont.stderr:
+        st.transition("get-cont-stderrNotEmpty", GET_UIDS)
+        st.phase = ContainerPhase.TERMINATED
+        st.finished_at = st.finished_at or now
+        st.exit_code = 1
+        return st
+    if cont._finished:
+        st.transition("get-cont-completed", GET_UIDS)
+        st.phase = ContainerPhase.TERMINATED
+        st.finished_at = st.finished_at or now
+        st.exit_code = 0
+        return st
+    st.transition("get-cont-running", GET_UIDS)
+    return st
+
+
+@dataclass
+class Pod:
+    name: str
+    containers: List[Container]
+    labels: Dict[str, str] = field(default_factory=dict)
+    node_selector: Dict[str, str] = field(default_factory=dict)
+    affinity: List[dict] = field(default_factory=list)   # matchExpressions
+    tolerations: List[dict] = field(default_factory=list)
+    node: Optional[str] = None
+    start_time: Optional[float] = None
+    conditions: List[Condition] = field(default_factory=list)
+    # resource request vector used by JMS bin-packing (TPU adaptation:
+    # chips + HBM bytes measured by the dry-run)
+    request_chips: int = 0
+    request_hbm_bytes: int = 0
+
+    @property
+    def phase(self) -> PodPhase:
+        states = [c.state.phase for c in self.containers]
+        if any(c.stderr for c in self.containers):
+            return PodPhase.FAILED
+        if all(s == ContainerPhase.TERMINATED for s in states):
+            codes = [c.state.exit_code or 0 for c in self.containers]
+            return PodPhase.FAILED if any(codes) else PodPhase.SUCCEEDED
+        if any(s == ContainerPhase.RUNNING for s in states):
+            return PodPhase.RUNNING
+        return PodPhase.PENDING
+
+    @property
+    def ready(self) -> bool:
+        return (self.phase == PodPhase.RUNNING and
+                all(c.state.phase == ContainerPhase.RUNNING
+                    for c in self.containers))
+
+    def condition(self, ctype: str) -> Optional[Condition]:
+        for c in self.conditions:
+            if c.type == ctype:
+                return c
+        return None
+
+    def set_conditions_create(self, now: float):
+        """Pod Creation Phase conditions (§4.4.3)."""
+        ready = ConditionStatus.TRUE if self.ready else ConditionStatus.FALSE
+        self.start_time = now
+        self.conditions = [
+            Condition("PodScheduled", ConditionStatus.TRUE, now),
+            Condition("PodReady", ready, now),
+            Condition("PodInitialized", ConditionStatus.TRUE, now),
+        ]
+
+    def set_conditions_get(self, now: float):
+        """Pod Retrieving Phase conditions (§4.4.3): PodReady's transition
+        time tracks the FIRST container's start time, as in the paper."""
+        prev_start = self.start_time if self.start_time is not None else now
+        first = self.containers[0] if self.containers else None
+        first_started = (first.state.started_at if first and
+                         first.state.started_at is not None else prev_start)
+        ready = ConditionStatus.TRUE if self.ready else ConditionStatus.FALSE
+        old_ready = self.condition("PodReady")
+        ready_tt = first_started
+        if old_ready is not None and old_ready.status == ready:
+            ready_tt = old_ready.last_transition_time
+        self.conditions = [
+            Condition("PodScheduled", ConditionStatus.TRUE, prev_start),
+            Condition("PodInitialized", ConditionStatus.TRUE, prev_start),
+            Condition("PodReady", ready, ready_tt),
+        ]

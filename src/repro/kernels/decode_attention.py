@@ -1,0 +1,89 @@
+"""Pallas TPU single-token decode attention over a KV cache.
+
+Grid: (B, Hq, kv_blocks) — streaming LSE reduction over cache blocks in VMEM
+scratch. Per-sequence valid length arrives as a (B, 1) i32 tensor; masking
+(causal-by-length, sliding window, chunked) happens against absolute cache
+positions, matching repro.models.attention.decode_attention semantics for
+non-ring caches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, window, chunk, bk, n_kv):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale                # (1, dh)
+    k = k_ref[0, :, 0].astype(jnp.float32)                  # (bk, dh)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    length = len_ref[0, 0]
+    qpos = length - 1
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (1, bk)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+    ok = kpos < length
+    if window is not None:
+        ok &= (qpos - kpos) < window
+    if chunk is not None:
+        ok &= (qpos // chunk) == (kpos // chunk)
+    s = jnp.where(ok, s, NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q, k_cache, v_cache, lengths, *, window=None,
+                            chunk=None, block_k=512, interpret=False):
+    """q: (B,Hq,dh); caches: (B,Smax,Hkv,dh); lengths: (B,) -> (B,Hq,dh)."""
+    B, Hq, dh = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    bk = min(block_k, Smax)
+    assert Smax % bk == 0
+    n_kv = Smax // bk
+    kernel = functools.partial(_kernel, scale=dh ** -0.5, window=window,
+                               chunk=chunk, bk=bk, n_kv=n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda b, h, j: (b, h, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda b, h, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda b, h, j: (b, j, h // G, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda b, h, j: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, dh), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, lengths.reshape(B, 1).astype(jnp.int32))

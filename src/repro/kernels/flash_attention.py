@@ -1,0 +1,114 @@
+"""Pallas TPU flash attention (blockwise, causal/windowed/chunked, GQA).
+
+Grid: (batch, q_heads, q_blocks, kv_blocks) — kv innermost so the fp32
+running-softmax accumulators live in VMEM scratch across kv steps. Block
+shapes are MXU-aligned (q/kv blocks multiples of 128 when the sequence
+allows, head_dim padded to 128 by the wrapper in ops.py if needed).
+
+TPU adaptation notes (vs. the CUDA flash-attention formulation): the kernel
+is expressed as a grid-sequential reduction with VMEM carries rather than a
+warp-synchronous tiling; MXU does the (bq, dh)x(dh, bk) and (bq, bk)x(bk, dh)
+contractions, VPU the renormalization.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, causal, window, chunk, kv_len, bq, bk, n_kv_blocks,
+            softcap):
+    j = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale            # (bq, dh)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (bk, dh)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (bq, bk)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= (qpos - kpos) < window
+    if chunk is not None:
+        ok &= (qpos // chunk) == (kpos // chunk)
+    if kv_len is not None:
+        ok &= kpos < kv_len
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]                                    # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, chunk=None,
+                    kv_len=None, softcap=0.0, block_q=128, block_k=128,
+                    interpret=False):
+    """q: (B, Hq, Sq, dh); k, v: (B, Hkv, Sk, dh) -> (B, Hq, Sq, dh).
+
+    GQA: kv head index = q head index // (Hq // Hkv) via the BlockSpec
+    index maps — no KV replication in memory.
+    """
+    B, Hq, Sq, dh = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    n_kv = Sk // bk
+    scale = dh ** -0.5
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, chunk=chunk,
+        kv_len=kv_len, bq=bq, bk=bk, n_kv_blocks=n_kv, softcap=softcap)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, Sq // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dh), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

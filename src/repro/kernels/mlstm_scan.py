@@ -1,0 +1,133 @@
+"""Pallas TPU chunkwise mLSTM kernel.
+
+Grid: (B, H, n_chunks) — chunk dim innermost, so the matrix memory
+(C: dh x dh), normalizer (n) and stabilizer (m) persist in VMEM scratch
+across chunks. Intra-chunk work is two MXU contractions ((c,dh)x(dh,c) and
+(c,c)x(c,dh)) plus VPU gating math; inter-chunk state update is one more
+MXU contraction. This is the TPU-native adaptation of chunkwise linear-
+attention kernels (no warp shuffles — grid-sequential VMEM carries).
+
+Final (C, n, m) state is emitted at the last chunk (prefill -> decode
+handoff).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, li_ref, lf_ref,
+            h_ref, cfin_ref, nfin_ref, mfin_ref,
+            C_ref, n_ref, m_ref, *, c, dh, n_chunks):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        C_ref[...] = jnp.zeros_like(C_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+
+    q = q_ref[0, 0, 0].astype(jnp.float32)                 # (c, dh)
+    k = k_ref[0, 0, 0].astype(jnp.float32)
+    v = v_ref[0, 0, 0].astype(jnp.float32)
+    li = li_ref[0, 0, 0].astype(jnp.float32)               # (c,)
+    lf = jax.nn.log_sigmoid(lf_ref[0, 0, 0].astype(jnp.float32))
+
+    D = jnp.cumsum(lf)                                     # (c,)
+    G = D[-1]
+    dec = li[None, :] + D[:, None] - D[None, :]            # (c, c)
+    tri = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (c, c), 1)
+    dec = jnp.where(tri, dec, NEG)
+    a = li + G - D                                         # (c,)
+
+    m_prev = m_ref[0, 0]
+    C_prev = C_ref[...]
+    n_prev = n_ref[...]                                    # (1, dh)
+
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    m_intra = jnp.max(dec, axis=1)                         # (c,)
+    m_t = jnp.maximum(m_prev + D, m_intra)
+    inter_w = jnp.exp(m_prev + D - m_t)                    # (c,)
+    inter = inter_w[:, None] * jax.lax.dot_general(
+        q, C_prev, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (c, dh)
+    den_inter = inter_w * jnp.sum(q * n_prev, axis=1)      # (c,)
+    pw = jnp.exp(dec - m_t[:, None]) * scores
+    intra = jax.lax.dot_general(pw, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    den = jnp.maximum(jnp.abs(den_inter + jnp.sum(pw, axis=1)),
+                      jnp.exp(-m_t))
+    h_ref[0, 0, 0] = ((inter + intra) / den[:, None]).astype(h_ref.dtype)
+
+    m_a = jnp.max(a)
+    m_next = jnp.maximum(m_prev + G, m_a)
+    w_prev = jnp.exp(m_prev + G - m_next)
+    w_s = jnp.exp(a - m_next)                              # (c,)
+    kw = w_s[:, None] * k
+    C_ref[...] = w_prev * C_prev + jax.lax.dot_general(
+        kw, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    n_ref[...] = w_prev * n_prev + jnp.sum(kw, axis=0, keepdims=True)
+    m_ref[0, 0] = m_next
+
+    @pl.when(j == n_chunks - 1)
+    def _done():
+        cfin_ref[0, 0] = C_ref[...]
+        nfin_ref[0, 0] = n_ref[...]
+        mfin_ref[0, 0] = m_ref[...]
+
+
+def mlstm_chunkwise_kernel(q, k, v, li, lf, *, chunk=64, interpret=False):
+    """q,k,v: (B,S,H,dh) (k pre-scaled by dh**-0.5); li,lf: (B,S,H) raw gates.
+    Returns (h (B,S,H,dh), (C (B,H,dh,dh), n (B,H,dh), m (B,H)))."""
+    B, S, H, dh = q.shape
+    c = min(chunk, S)
+    assert S % c == 0
+    NC = S // c
+
+    def cshape(x):        # (B,S,H,*) -> (B,H,NC,c,*)
+        return x.reshape(B, NC, c, H, -1).transpose(0, 3, 1, 2, 4)
+
+    qc, kc, vc = (cshape(x) for x in (q, k, v))
+    lic = li.reshape(B, NC, c, H).transpose(0, 3, 1, 2)
+    lfc = lf.reshape(B, NC, c, H).transpose(0, 3, 1, 2)
+
+    kernel = functools.partial(_kernel, c=c, dh=dh, n_chunks=NC)
+    h, Cf, nf, mf = pl.pallas_call(
+        kernel,
+        grid=(B, H, NC),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, c, dh), lambda b, h, j: (b, h, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, c, dh), lambda b, h, j: (b, h, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, c, dh), lambda b, h, j: (b, h, j, 0, 0)),
+            pl.BlockSpec((1, 1, 1, c), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, 1, c), lambda b, h, j: (b, h, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, c, dh), lambda b, h, j: (b, h, j, 0, 0)),
+            pl.BlockSpec((1, 1, dh, dh), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, dh), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda b, h, j: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, NC, c, dh), q.dtype),
+            jax.ShapeDtypeStruct((B, H, dh, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, 1, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, 1, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((dh, dh), jnp.float32),
+            pltpu.VMEM((1, dh), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qc, kc, vc, lic, lfc)
+    h = h.transpose(0, 2, 3, 1, 4).reshape(B, S, H, dh)
+    return h, (Cf, nf[:, :, 0], mf[:, :, 0, 0])

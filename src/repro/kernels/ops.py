@@ -1,0 +1,62 @@
+"""Jit'd dispatch wrappers over the Pallas kernels.
+
+On TPU the kernels run natively; on CPU (this container) they run in
+interpret mode when requested, otherwise the jnp fallbacks from
+repro.models are used (that is also what the dry-run lowers). The model
+layer toggles with ``use_kernels`` / KERNEL_MODE.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention_kernel
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mlstm_scan import mlstm_chunkwise_kernel
+from repro.kernels.ssm_scan import ssm_scan_kernel
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "chunk",
+                                             "softcap", "block_q", "block_k"))
+def attention(q, k, v, *, causal=True, window=None, chunk=None, softcap=0.0,
+              block_q=128, block_k=128):
+    """q: (B,S,Hq,dh) model layout -> flash kernel layout and back."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          chunk=chunk, softcap=softcap, block_q=block_q,
+                          block_k=block_k, interpret=_interpret())
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "chunk", "block_k"))
+def decode_attention(q, k_cache, v_cache, lengths, *, window=None,
+                     chunk=None, block_k=512):
+    """q: (B,1,Hq,dh) -> (B,1,Hq,dh)."""
+    out = decode_attention_kernel(q[:, 0], k_cache, v_cache, lengths,
+                                  window=window, chunk=chunk,
+                                  block_k=block_k, interpret=_interpret())
+    return out[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def mlstm(q, k, v, li, lf, *, chunk=64):
+    return mlstm_chunkwise_kernel(q, k, v, li, lf, chunk=chunk,
+                                  interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_di"))
+def ssm(u, dt, A, Bsel, Csel, Dskip, *, chunk=64, block_di=256):
+    return ssm_scan_kernel(u, dt, A, Bsel, Csel, Dskip, chunk=chunk,
+                           block_di=block_di, interpret=_interpret())

@@ -1,0 +1,85 @@
+"""Pallas TPU selective-SSM (mamba-style) chunked scan kernel.
+
+Grid: (B, d_inner blocks, n_chunks) — chunk dim innermost; the hidden state
+h (bdi, N) persists in VMEM scratch across chunks. Within a chunk the
+recurrence is evaluated with an associative scan over the chunk axis
+(log-depth VPU work), so the sequential grid only pays n_chunks latency.
+Channel blocking (bdi) keeps the (c, bdi, N) working set inside VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(u_ref, dt_ref, A_ref, b_ref, c_ref, d_ref,
+            y_ref, hfin_ref, h_ref, *, c, n_chunks):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    u = u_ref[0].astype(jnp.float32)        # (c, bdi)
+    dt = dt_ref[0].astype(jnp.float32)      # (c, bdi)
+    A = A_ref[...].astype(jnp.float32)      # (bdi, N)
+    Bsel = b_ref[0].astype(jnp.float32)     # (c, N)
+    Csel = c_ref[0].astype(jnp.float32)     # (c, N)
+    D = d_ref[...].astype(jnp.float32)      # (1, bdi)
+
+    Ad = jnp.exp(dt[:, :, None] * A[None])                    # (c, bdi, N)
+    Bx = (dt * u)[:, :, None] * Bsel[:, None, :]              # (c, bdi, N)
+    Bx = Bx.at[0].add(Ad[0] * h_ref[...])                     # fold carry in
+
+    a, b = jax.lax.associative_scan(
+        lambda l, r: (r[0] * l[0], r[0] * l[1] + r[1]), (Ad, Bx), axis=0)
+    y = jnp.einsum("cdn,cn->cd", b, Csel) + D * u
+    y_ref[0] = y.astype(y_ref.dtype)
+    h_ref[...] = b[-1]
+
+    @pl.when(j == n_chunks - 1)
+    def _done():
+        hfin_ref[0] = h_ref[...]
+
+
+def ssm_scan_kernel(u, dt, A, Bsel, Csel, Dskip, *, chunk=64,
+                    block_di=256, interpret=False):
+    """u, dt: (B,S,di); A: (di,N); Bsel,Csel: (B,S,N); Dskip: (di,).
+    Returns (y (B,S,di), h_last (B,di,N))."""
+    B, S, di = u.shape
+    N = A.shape[1]
+    c = min(chunk, S)
+    assert S % c == 0
+    NC = S // c
+    bdi = min(block_di, di)
+    assert di % bdi == 0
+    ND = di // bdi
+
+    kernel = functools.partial(_kernel, c=c, n_chunks=NC)
+    y, hfin = pl.pallas_call(
+        kernel,
+        grid=(B, ND, NC),
+        in_specs=[
+            pl.BlockSpec((1, c, bdi), lambda b, d, j: (b, j, d)),
+            pl.BlockSpec((1, c, bdi), lambda b, d, j: (b, j, d)),
+            pl.BlockSpec((bdi, N), lambda b, d, j: (d, 0)),
+            pl.BlockSpec((1, c, N), lambda b, d, j: (b, j, 0)),
+            pl.BlockSpec((1, c, N), lambda b, d, j: (b, j, 0)),
+            pl.BlockSpec((1, bdi), lambda b, d, j: (0, d)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, bdi), lambda b, d, j: (b, j, d)),
+            pl.BlockSpec((1, bdi, N), lambda b, d, j: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, di), u.dtype),
+            jax.ShapeDtypeStruct((B, di, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bdi, N), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, A, Bsel, Csel, Dskip.reshape(1, di))
+    return y, hfin

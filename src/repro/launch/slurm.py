@@ -1,0 +1,115 @@
+"""Generate the real-cluster launch assets (paper §5.1/§5.2 analogs).
+
+Emits: <out>/nersc-slurm.sh (staggered multi-node JRM bring-up),
+<out>/node-setup.sh (per-node env + SSH tunnels + VK start), and
+<out>/deploy-serving.sh (helm-style per-node deployment loop), adapted for
+a TPU fleet (one JRM per host, each fronting a slice).
+
+Usage: PYTHONPATH=src python -m repro.launch.slurm --nodes 40 --out launch_assets
+"""
+import argparse
+import pathlib
+import stat
+
+SLURM_TMPL = """#!/bin/bash
+#SBATCH -N {nodes}
+#SBATCH -C {constraint}
+#SBATCH -q {qos}
+#SBATCH -J jiriaf-tpu
+#SBATCH -t {walltime}
+
+# Staggered JRM bring-up (paper 5.1): one srun per node, 3s apart, so the
+# control plane is not thundering-herded.
+for i in $(seq 1 {nodes})
+do
+  i_padded=$(printf "%02d" $i)
+  echo "launching JRM on node $i_padded"
+  srun -N1 {workdir}/node-setup.sh $i_padded &
+  sleep 3
+done
+wait
+"""
+
+NODE_TMPL = """#!/bin/bash
+# Per-node JRM/VK bring-up (paper 5.1 node-setup.sh, TPU adaptation).
+set -euo pipefail
+IDX="$1"
+
+export CONTROL_PLANE_IP="{control_plane}"
+export APISERVER_PORT="{apiserver_port}"
+export NODENAME="vk-tpu$IDX"
+export KUBECONFIG="$HOME/run-vk/kubeconfig/$CONTROL_PLANE_IP"
+export VKUBELET_POD_IP="172.17.0.1"
+export KUBELET_PORT="100$IDX"
+export JIRIAF_WALLTIME="{jiriaf_walltime}"   # 60s less than Slurm walltime (4.5.4)
+export JIRIAF_NODETYPE="tpu"
+export JIRIAF_SITE="{site}"
+
+# SSH tunnels: apiserver (local), kubelet + exporters (remote) — Fig. 3.
+ssh -NfL $APISERVER_PORT:localhost:$APISERVER_PORT $CONTROL_PLANE_IP
+ssh -NfR $KUBELET_PORT:localhost:$KUBELET_PORT $CONTROL_PLANE_IP
+ssh -NfR "200$IDX":localhost:2221 $CONTROL_PLANE_IP   # engine exporter
+ssh -NfR "300$IDX":localhost:1776 $CONTROL_PLANE_IP   # process exporter
+ssh -NfR "400$IDX":localhost:8088 $CONTROL_PLANE_IP   # transport exporter
+
+# Walltime self-termination (4.3): drain margin handled by the workload's
+# checkpoint loop; the VK flips NotReady when alivetime hits zero.
+(sleep $JIRIAF_WALLTIME && echo "walltime ended" && kill -TERM $$ ) &
+
+exec python -m repro.launch.jrm_agent \\
+  --nodename "$NODENAME" --site "$JIRIAF_SITE" \\
+  --walltime "$JIRIAF_WALLTIME" --kubelet-port "$KUBELET_PORT"
+"""
+
+DEPLOY_TMPL = """#!/bin/bash
+# Serving deployment fan-out (paper 5.2 helm loop analog).
+set -euo pipefail
+for i in $(seq 1 {nodes})
+do
+  i_padded=$(printf "%02d" $i)
+  echo "deploy serving replica $i_padded"
+  PYTHONPATH=src python -m repro.launch.serve --arch {arch} \\
+    --devices {devices} --tp {tp} --nodes 1 --ticks 20 &
+done
+wait
+"""
+
+
+def generate(out_dir, *, nodes=40, arch="qwen2-7b", devices=8, tp=2,
+             walltime="03:00:00", qos="regular", site="nersc",
+             control_plane="jiriaf2302", apiserver_port=38687):
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    h, m, s = (int(x) for x in walltime.split(":"))
+    jiriaf_walltime = max(h * 3600 + m * 60 + s - 60, 0)
+    files = {
+        "nersc-slurm.sh": SLURM_TMPL.format(
+            nodes=nodes, constraint="tpu", qos=qos, walltime=walltime,
+            workdir=str(out.resolve())),
+        "node-setup.sh": NODE_TMPL.format(
+            control_plane=control_plane, apiserver_port=apiserver_port,
+            jiriaf_walltime=jiriaf_walltime, site=site),
+        "deploy-serving.sh": DEPLOY_TMPL.format(
+            nodes=nodes, arch=arch, devices=devices, tp=tp),
+    }
+    for name, text in files.items():
+        p = out / name
+        p.write_text(text)
+        p.chmod(p.stat().st_mode | stat.S_IEXEC)
+    return sorted(files)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=40)
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--out", default="launch_assets")
+    ap.add_argument("--walltime", default="03:00:00")
+    args = ap.parse_args(argv)
+    files = generate(args.out, nodes=args.nodes, arch=args.arch,
+                     walltime=args.walltime)
+    print(f"wrote {files} to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,303 @@
+"""Step builders: sharded train_step / prefill / serve_step (decode) for any
+(arch x shape x mesh) cell. Used by the dry-run, the drivers, and tests."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import model_api as MA
+from repro.optim import adamw
+from repro.sharding.api import ShardCtx, tree_shardings, tree_specs
+
+
+@dataclasses.dataclass
+class Cell:
+    """A lowered/lowerable (arch x shape x mesh) unit."""
+    cfg: ArchConfig
+    shape: ShapeConfig
+    ctx: ShardCtx
+    fn: callable
+    args: tuple                      # abstract args (ShapeDtypeStruct trees)
+    in_shardings: tuple
+    out_shardings: object
+    donate: tuple = ()               # train: (params, opt); decode: (cache,)
+
+    def jit(self):
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate)
+
+    def lower(self):
+        return self.jit().lower(*self.args)
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec) if mesh is not None else None
+
+
+def _maybe(tree, mesh):
+    return tree if mesh is not None else None
+
+
+def pick_microbatches(cfg: ArchConfig, shape: ShapeConfig, ctx: ShardCtx,
+                      target_tokens_per_shard: int = 16384) -> int:
+    dp = ctx.axis_size("data") * ctx.axis_size("pod")
+    B = shape.global_batch
+    per_shard = max(B // max(dp, 1), 1)
+    n = 1
+    while (per_shard // n) * shape.seq_len > target_tokens_per_shard \
+            and n * 2 <= per_shard and B % (n * 2) == 0:
+        n *= 2
+    return n
+
+
+def make_train_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Optional[Mesh],
+                    opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+                    microbatches: Optional[int] = None,
+                    remat: bool = True,
+                    compress_pod_grads: bool = False) -> Cell:
+    """``compress_pod_grads`` (EXPERIMENTAL, default off): on multi-pod
+    meshes, take the `pod` axis manual (shard_map with auto data/model) and
+    reduce gradients across pods with int8 block-quantized all-gather+sum
+    instead of fp32 all-reduce — ~8x less inter-pod (DCN/optical) wire.
+    Error feedback is carried in the optimizer state ("ef" tree).
+
+    Status: the compression core (quantize/EF/collective math) is
+    unit-tested in tests/test_substrate.py; the integrated path trips an
+    XLA SPMD partitioner CHECK (spmd_partitioner_util.cc:504) on this
+    jax 0.8.2 CPU build when partial-manual shard_map meets auto-sharded
+    constraints — kept behind this flag pending an XLA fix (DESIGN.md §5b).
+    """
+    ctx = ShardCtx(mesh)
+    mod = MA.get_module(cfg)
+    aparams = mod.abstract_params(cfg)
+    paxes = mod.param_axes(cfg)
+    pspecs = tree_specs(ctx, aparams, paxes) if mesh else None
+    aopt = adamw.abstract_init(aparams)
+    ospecs = adamw.opt_specs(pspecs, aparams, mesh) if mesh else None
+    bspecs, baxes = MA.batch_specs(cfg, shape)
+    n_micro = microbatches if microbatches is not None else \
+        pick_microbatches(cfg, shape, ctx)
+    if mesh:
+        gspecs = jax.tree.map(lambda s, p: adamw.zero1_spec(s, p.shape, mesh),
+                              pspecs, aparams)
+
+    use_compress = (compress_pod_grads and mesh is not None
+                    and "pod" in mesh.shape)
+    if use_compress:
+        # inner context: the pod axis is manual inside shard_map, so batch
+        # resolves to data-only there
+        inner_rules = dict(ctx.rules)
+        inner_rules["batch"] = ("data",)
+        inner_ctx = ShardCtx(mesh, inner_rules)
+        n_pods = mesh.shape["pod"]
+        # error-feedback buffers: per-pod local (leading pod dim)
+        aopt = dict(aopt)
+        aopt["ef"] = jax.tree.map(
+            lambda p: jax.ShapeDtypeStruct((n_pods,) + tuple(p.shape),
+                                           jnp.float32), aparams)
+        zero_specs = jax.tree.map(
+            lambda s, p: adamw.zero1_spec(s, p.shape, mesh), pspecs, aparams)
+        ospecs = dict(ospecs)
+        ospecs["ef"] = jax.tree.map(
+            lambda s: P(*(("pod",) + tuple(s))), zero_specs)
+
+    def compute_grads(params, batch, gctx):
+        def micro_loss(p, mb):
+            return mod.train_loss(p, mb, cfg, gctx, remat=remat)
+
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(micro_loss)(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+            return loss, grads
+        stacked = jax.tree.map(
+            lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                + x.shape[1:]), batch)
+
+        def acc(carry, mb):
+            c_loss, c_grads = carry
+            if gctx is not None:
+                mb = jax.tree.map(
+                    lambda x, ax: jax.lax.with_sharding_constraint(
+                        x, _ns(mesh, gctx.spec(ax, x.shape))),
+                    mb, baxes)
+            l, g = jax.value_and_grad(micro_loss)(params, mb)
+            if gctx is not None:
+                g = jax.tree.map(
+                    lambda a, s: jax.lax.with_sharding_constraint(
+                        a, _ns(mesh, s)), g, gspecs)
+            g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                             c_grads, g)
+            return (c_loss + l, g), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (loss, grads), _ = jax.lax.scan(
+            acc, (jnp.zeros((), jnp.float32), zeros), stacked)
+        return loss / n_micro, jax.tree.map(lambda g: g / n_micro, grads)
+
+    def train_step(params, opt, batch):
+        def micro_loss(p, mb):
+            return mod.train_loss(p, mb, cfg, ctx if mesh else None,
+                                  remat=remat)
+
+        if use_compress:
+            from jax import shard_map
+            from repro.optim.compression import compressed_psum_ef
+            ef = opt["ef"]
+
+            def pod_local(p, b, ef_l):
+                loss, grads = compute_grads(p, b, inner_ctx)
+                pairs = jax.tree.map(
+                    lambda g, e: compressed_psum_ef(g, e[0], "pod"),
+                    grads, ef_l)
+                g_hat = jax.tree.map(lambda t: t[0], pairs,
+                                     is_leaf=lambda t: isinstance(t, tuple))
+                new_ef = jax.tree.map(lambda t: t[1][None], pairs,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+                loss = jax.lax.pmean(loss, "pod")
+                return loss, g_hat, new_ef
+
+            loss, grads, new_ef = shard_map(
+                pod_local, mesh=mesh,
+                in_specs=(P(), jax.tree.map(lambda _: P("pod"), batch),
+                          jax.tree.map(lambda _: P("pod"), ef)),
+                out_specs=(P(), P(), jax.tree.map(lambda _: P("pod"), ef)),
+                axis_names={"pod"}, check_vma=False,
+            )(params, batch, ef)
+            opt = dict(opt)
+            params, opt2, metrics = adamw.apply(
+                grads, {k: v for k, v in opt.items() if k != "ef"},
+                params, opt_cfg)
+            opt2["ef"] = new_ef
+            metrics["loss"] = loss
+            return params, opt2, metrics
+
+        if n_micro == 1:
+            loss, grads = jax.value_and_grad(micro_loss)(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            stacked = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro)
+                                    + x.shape[1:]), batch)
+
+            def acc(carry, mb):
+                c_loss, c_grads = carry
+                if mesh:
+                    mb = jax.tree.map(
+                        lambda x, ax: jax.lax.with_sharding_constraint(
+                            x, _ns(mesh, ctx.spec(ax, x.shape))),
+                        mb, baxes)
+                l, g = jax.value_and_grad(micro_loss)(params, mb)
+                if mesh:
+                    # reshard to the ZeRO spec in the PARAM dtype first:
+                    # slicing over `data` is local; only then upcast. This
+                    # avoids materializing a full-model f32 grad transient
+                    # (27 GB/device on llama4-scout). EXPERIMENTS.md §Perf.
+                    g = jax.tree.map(
+                        lambda a, s: jax.lax.with_sharding_constraint(
+                            a, _ns(mesh, s)), g, gspecs)
+                g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                 c_grads, g)
+                return (c_loss + l, g), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                acc, (jnp.zeros((), jnp.float32), zeros), stacked)
+            loss = loss / n_micro
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+
+        params, opt, metrics = adamw.apply(grads, opt, params, opt_cfg)
+        metrics["loss"] = loss
+        return params, opt, metrics
+
+    in_sh = out_sh = None
+    if mesh:
+        psh = tree_shardings(ctx, aparams, paxes)
+        osh = jax.tree.map(lambda s: _ns(mesh, s), ospecs)
+        bsh = jax.tree.map(lambda s, ax: _ns(mesh, ctx.spec(ax, s.shape)),
+                           bspecs, baxes)
+        in_sh = (psh, osh, bsh)
+        msh = {"grad_norm": _ns(mesh, P()), "lr": _ns(mesh, P()),
+               "loss": _ns(mesh, P())}
+        out_sh = (psh, osh, msh)
+
+    return Cell(cfg, shape, ctx, train_step, (aparams, aopt, bspecs),
+                in_sh, out_sh, donate=(0, 1))
+
+
+def make_prefill_cell(cfg: ArchConfig, shape: ShapeConfig,
+                      mesh: Optional[Mesh]) -> Cell:
+    ctx = ShardCtx(mesh)
+    mod = MA.get_module(cfg)
+    aparams = mod.abstract_params(cfg)
+    paxes = mod.param_axes(cfg)
+    pspecs, _ = MA.prefill_specs(cfg, shape)
+
+    def prefill_step(params, inputs):
+        return mod.prefill(params, inputs["tokens"], cfg,
+                           ctx if mesh else None,
+                           frontend=inputs.get("frontend"))
+
+    in_sh = out_sh = None
+    if mesh:
+        psh = tree_shardings(ctx, aparams, paxes)
+        _, iaxes = MA.prefill_specs(cfg, shape)
+        ish = jax.tree.map(lambda s, ax: _ns(mesh, ctx.spec(ax, s.shape)),
+                           pspecs, iaxes)
+        aout = jax.eval_shape(prefill_step, aparams, pspecs)
+        caxes = MA.cache_axes(cfg)
+        lsh = _ns(mesh, ctx.spec(("batch", "vocab"), aout[0].shape))
+        csh = jax.tree.map(
+            lambda s, ax: _ns(mesh, ctx.spec(ax, s.shape)), aout[1], caxes)
+        in_sh = (psh, ish)
+        out_sh = (lsh, csh)
+
+    return Cell(cfg, shape, ctx, prefill_step, (aparams, pspecs), in_sh, out_sh)
+
+
+def make_decode_cell(cfg: ArchConfig, shape: ShapeConfig,
+                     mesh: Optional[Mesh], unroll: bool = False,
+                     cache_mode: str = "slots") -> Cell:
+    """serve_step: one new token against a cache holding shape.seq_len context."""
+    ctx = ShardCtx(mesh)
+    mod = MA.get_module(cfg)
+    aparams = mod.abstract_params(cfg)
+    paxes = mod.param_axes(cfg)
+    acache, caxes = MA.cache_specs(cfg, shape, cache_mode)
+    tok_spec, tok_axes = MA.decode_token_specs(cfg, shape)
+    extra = {"unroll": True} if unroll else {}
+
+    def serve_step(params, token, cache):
+        return mod.decode_step(params, token, cache, cfg,
+                               ctx if mesh else None, **extra)
+
+    in_sh = out_sh = None
+    if mesh:
+        psh = tree_shardings(ctx, aparams, paxes)
+        tsh = _ns(mesh, ctx.spec(tok_axes, tok_spec.shape))
+        csh = jax.tree.map(lambda s, ax: _ns(mesh, ctx.spec(ax, s.shape)),
+                           acache, caxes)
+        aout = jax.eval_shape(serve_step, aparams, tok_spec, acache)
+        lsh = _ns(mesh, ctx.spec(("batch", "vocab"), aout[0].shape))
+        in_sh = (psh, tsh, csh)
+        out_sh = (lsh, csh)
+
+    return Cell(cfg, shape, ctx, serve_step, (aparams, tok_spec, acache),
+                in_sh, out_sh, donate=(2,))
+
+
+def make_cell(cfg: ArchConfig, shape: ShapeConfig, mesh,
+              **kw) -> Cell:
+    if shape.kind == "train":
+        return make_train_cell(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_cell(cfg, shape, mesh)
+    return make_decode_cell(cfg, shape, mesh, **kw)

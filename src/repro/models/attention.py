@@ -1,0 +1,137 @@
+"""GQA attention: blockwise (flash-style, O(S) memory) jnp implementation for
+train/prefill and a single-query decode path with KV caches.
+
+This is the implementation that LOWERS for the dry-run (the Pallas kernel in
+``repro.kernels.flash_attention`` is the TPU hot-path, validated against this
+in interpret mode). Blockwise streaming keeps the compiled memory roofline
+honest: no (S, S) score tensor is ever materialized.
+
+Mask model (all paths share it):
+  allowed(qpos, kpos) = [kpos <= qpos if causal]
+                      & [qpos - kpos < window if window]
+                      & [qpos // chunk == kpos // chunk if chunk]
+                      & [kpos < kv_len]
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(qpos, kpos, *, causal, window, chunk, kv_len):
+    # qpos: (..., Sq, 1), kpos: (..., 1, Sk) int32
+    ok = jnp.ones(jnp.broadcast_shapes(qpos.shape, kpos.shape), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:   # window may be a traced per-layer scalar
+        ok &= (qpos - kpos) < window
+    if chunk is not None:
+        ok &= (qpos // chunk) == (kpos // chunk)
+    if kv_len is not None:
+        ok &= kpos < kv_len
+    return ok
+
+
+def blockwise_attention(q, k, v, *, causal=True, window=None, chunk=None,
+                        q_positions=None, kv_positions=None, kv_len=None,
+                        block_kv=1024, softcap=0.0):
+    """q: (B, Sq, Hq, dh); k, v: (B, Sk, Hkv, dh). Returns (B, Sq, Hq, dh).
+
+    Streams KV in blocks with a running (max, denom, acc) softmax — the
+    flash-attention recurrence in pure jnp (lax.scan over KV blocks).
+    """
+    B, Sq, Hq, dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = dh ** -0.5
+
+    if q_positions is None:
+        q_positions = jnp.arange(Sq, dtype=jnp.int32)[None, :]        # (1, Sq)
+    if kv_positions is None:
+        kv_positions = jnp.arange(Sk, dtype=jnp.int32)[None, :]       # (1, Sk)
+
+    bk = min(block_kv, Sk)
+    pad = (-Sk) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                               constant_values=jnp.iinfo(jnp.int32).max)
+    nb = (Sk + pad) // bk
+
+    qg = (q * scale).reshape(B, Sq, Hkv, G, dh)
+    kb = k.reshape(B, nb, bk, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, bk, Hkv, dh).transpose(1, 0, 2, 3, 4)
+    pb = jnp.broadcast_to(kv_positions, (B, nb * bk)).reshape(B, nb, bk)
+    pb = pb.transpose(1, 0, 2)
+
+    eff_len = jnp.asarray(Sk if kv_len is None else kv_len, jnp.int32)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kj, vj, posj = blk
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg.astype(jnp.float32),
+                       kj.astype(jnp.float32))
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        qp = q_positions[:, :, None, None, None]
+        kp = posj[:, None, None, None, :]
+        ok = _mask(qp, kp, causal=causal, window=window, chunk=chunk,
+                   kv_len=eff_len)
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hkv, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, G, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, Hq, dh).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, *, pos, window=None, chunk=None,
+                     kv_positions=None, softcap=0.0):
+    """Single-token decode. q: (B, 1, Hq, dh); caches: (B, Smax, Hkv, dh);
+    pos: scalar or (B,) current absolute position (cache holds pos valid
+    entries, the new token's KV already written at its slot).
+
+    ``kv_positions`` (B, Smax) gives absolute positions per cache slot for
+    ring-buffer (sliding-window) caches; defaults to slot index.
+    """
+    B, _, Hq, dh = q.shape
+    Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    scale = dh ** -0.5
+    pos = jnp.asarray(pos, jnp.int32)
+    qpos = jnp.broadcast_to(pos, (B,))[:, None]                     # (B, 1)
+    if kv_positions is None:
+        kv_positions = jnp.arange(Smax, dtype=jnp.int32)[None, :]    # (1, Smax)
+    kv_positions = jnp.broadcast_to(kv_positions, (B, Smax))
+
+    qg = (q * scale).reshape(B, Hkv, G, dh)
+    # keep the cache in its storage dtype (bf16) and accumulate in f32 on
+    # the MXU — upcasting the cache makes XLA hoist a full f32 copy of the
+    # stacked cache out of the layer loop (EXPERIMENTS.md §Perf).
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    ok = _mask(qpos[:, :, None], kv_positions[:, None, :],
+               causal=True, window=window, chunk=chunk,
+               kv_len=(qpos + 1)[:, :, None])                 # (B, 1, Smax)
+    s = jnp.where(ok[:, :, None, :], s, NEG_INF)              # (B,Hkv,G,Smax)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, dh).astype(q.dtype)

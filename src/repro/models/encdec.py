@@ -1,0 +1,284 @@
+"""Whisper-style encoder-decoder (audio frontend stubbed to frame embeddings).
+
+Encoder: bidirectional pre-LN transformer over (B, enc_seq, d) frames with a
+learnable position embedding. Decoder: causal self-attention (RoPE) +
+cross-attention over encoder output. LayerNorm (w, b) matches whisper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.attention import blockwise_attention, decode_attention
+
+
+def init(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 16)
+    d, dt = cfg.d_model, cfg.jdtype
+    ne, nd = cfg.encdec.n_enc_layers, cfg.n_layers
+
+    def attn(k, n, prefix=""):
+        kk = jax.random.split(k, 4)
+        return {
+            prefix + "wq": L.ninit(kk[0], (n, d, cfg.q_dim), dt),
+            prefix + "wk": L.ninit(kk[1], (n, d, cfg.kv_dim), dt),
+            prefix + "wv": L.ninit(kk[2], (n, d, cfg.kv_dim), dt),
+            prefix + "wo": L.ninit(kk[3], (n, cfg.q_dim, d), dt),
+        }
+
+    def ln(n, name):
+        return {name + "_w": L.oinit((n, d), dt), name + "_b": L.zinit((n, d), dt)}
+
+    enc = {}
+    enc.update(ln(ne, "ln1"))
+    enc.update(attn(ks[0], ne))
+    enc.update(ln(ne, "ln2"))
+    enc.update(L.init_mlp(ks[1], d, cfg.d_ff, cfg.mlp, dt, stacked=(ne,)))
+
+    dec = {}
+    dec.update(ln(nd, "ln1"))
+    dec.update(attn(ks[2], nd))
+    dec.update(ln(nd, "lnx"))
+    dec.update(attn(ks[3], nd, prefix="x_"))
+    dec.update(ln(nd, "ln2"))
+    dec.update(L.init_mlp(ks[4], d, cfg.d_ff, cfg.mlp, dt, stacked=(nd,)))
+
+    return {
+        "embed": L.ninit(ks[5], (cfg.vocab, d), dt, scale=1.0),
+        "enc_pos": L.ninit(ks[6], (cfg.encdec.enc_seq, d), dt, scale=0.02),
+        "enc_layers": enc,
+        "dec_layers": dec,
+        "enc_norm_w": L.oinit((d,), dt), "enc_norm_b": L.zinit((d,), dt),
+        "final_norm_w": L.oinit((d,), dt), "final_norm_b": L.zinit((d,), dt),
+        "lm_head": L.ninit(ks[7], (d, cfg.vocab), dt),
+    }
+
+
+def param_axes(cfg: ArchConfig):
+    def attn(prefix=""):
+        return {
+            prefix + "wq": P(None, None, "qdim"),
+            prefix + "wk": P(None, None, "kvdim"),
+            prefix + "wv": P(None, None, "kvdim"),
+            prefix + "wo": P(None, "qdim", None),
+        }
+
+    def ln(name):
+        return {name + "_w": P(None, None), name + "_b": P(None, None)}
+
+    enc = {**ln("ln1"), **attn(), **ln("ln2"), **L.mlp_axes(stacked=True)}
+    dec = {**ln("ln1"), **attn(), **ln("lnx"), **attn("x_"), **ln("ln2"),
+           **L.mlp_axes(stacked=True)}
+    return {
+        "embed": P("vocab", None),
+        "enc_pos": P(None, None),
+        "enc_layers": enc,
+        "dec_layers": dec,
+        "enc_norm_w": P(None), "enc_norm_b": P(None),
+        "final_norm_w": P(None), "final_norm_b": P(None),
+        "lm_head": P(None, "vocab"),
+    }
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(functools.partial(init, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def _proj_qkv(h, blk, cfg, prefix=""):
+    B, S = h.shape[:2]
+    q = jnp.einsum("bsd,dq->bsq", h, blk[prefix + "wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dq->bsq", h, blk[prefix + "wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dq->bsq", h, blk[prefix + "wv"].astype(h.dtype))
+    return (q.reshape(B, S, cfg.n_heads, cfg.head_dim),
+            k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim),
+            v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim))
+
+
+def encode(params, frames, cfg: ArchConfig, ctx=None, remat=False):
+    """frames: (B, enc_seq, d) stub embeddings -> encoder output (B, enc_seq, d)."""
+    x = frames.astype(cfg.jdtype) + params["enc_pos"].astype(cfg.jdtype)[None]
+    if ctx is not None:
+        x = ctx.constrain(x, "batch", "seq_tp", None)
+
+    def body(xx, blk):
+        h = L.layer_norm(xx, blk["ln1_w"], blk["ln1_b"], cfg.norm_eps)
+        q, k, v = _proj_qkv(h, blk, cfg)
+        if ctx is not None:
+            q, k, v = _cq(ctx, cfg, q, k, v)
+        out = blockwise_attention(q, k, v, causal=False)
+        out = out.reshape(xx.shape[0], xx.shape[1], cfg.q_dim)
+        xx = xx + jnp.einsum("bsq,qd->bsd", out, blk["wo"].astype(h.dtype))
+        h2 = L.layer_norm(xx, blk["ln2_w"], blk["ln2_b"], cfg.norm_eps)
+        xx = xx + L.mlp_apply(h2, blk["w_up"], blk["w_down"], cfg.mlp)
+        if ctx is not None:
+            xx = ctx.constrain(xx, "batch", "seq_tp", None)
+        return xx, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return L.layer_norm(x, params["enc_norm_w"], params["enc_norm_b"], cfg.norm_eps)
+
+
+def _cq(ctx, cfg, q, k, v):
+    tp = ctx.axis_size("model")
+    if cfg.n_heads % tp == 0:
+        q = ctx.constrain(q, "batch", None, "heads", None)
+        k = ctx.constrain(k, "batch", None, "kv_heads", None)
+        v = ctx.constrain(v, "batch", None, "kv_heads", None)
+    else:
+        q = ctx.constrain(q, "batch", "seq_tp", None, None)
+    return q, k, v
+
+
+def _decoder(params, tokens, enc_out, cfg, ctx, remat):
+    B, S = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens).astype(cfg.jdtype)
+    if ctx is not None:
+        x = ctx.constrain(x, "batch", "seq_tp", None)
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+
+    def body(xx, blk):
+        h = L.layer_norm(xx, blk["ln1_w"], blk["ln1_b"], cfg.norm_eps)
+        q, k, v = _proj_qkv(h, blk, cfg)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        if ctx is not None:
+            q, k, v = _cq(ctx, cfg, q, k, v)
+        out = blockwise_attention(q, k, v, causal=True,
+                                  q_positions=positions, kv_positions=positions)
+        out = out.reshape(B, S, cfg.q_dim)
+        xx = xx + jnp.einsum("bsq,qd->bsd", out, blk["wo"].astype(h.dtype))
+        # cross attention
+        hx = L.layer_norm(xx, blk["lnx_w"], blk["lnx_b"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,dq->bsq", hx, blk["x_wq"].astype(hx.dtype))
+        qx = qx.reshape(B, S, cfg.n_heads, cfg.head_dim)
+        kx = jnp.einsum("bsd,dq->bsq", enc_out, blk["x_wk"].astype(hx.dtype))
+        vx = jnp.einsum("bsd,dq->bsq", enc_out, blk["x_wv"].astype(hx.dtype))
+        kx = kx.reshape(B, -1, cfg.n_kv_heads, cfg.head_dim)
+        vx = vx.reshape(B, -1, cfg.n_kv_heads, cfg.head_dim)
+        outx = blockwise_attention(qx, kx, vx, causal=False)
+        outx = outx.reshape(B, S, cfg.q_dim)
+        xx = xx + jnp.einsum("bsq,qd->bsd", outx, blk["x_wo"].astype(hx.dtype))
+        h2 = L.layer_norm(xx, blk["ln2_w"], blk["ln2_b"], cfg.norm_eps)
+        xx = xx + L.mlp_apply(h2, blk["w_up"], blk["w_down"], cfg.mlp)
+        if ctx is not None:
+            xx = ctx.constrain(xx, "batch", "seq_tp", None)
+        return xx, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    return L.layer_norm(x, params["final_norm_w"], params["final_norm_b"],
+                        cfg.norm_eps)
+
+
+def train_loss(params, batch, cfg: ArchConfig, ctx=None, remat=True):
+    from repro.models.transformer import chunked_xent
+    enc_out = encode(params, batch["frontend"], cfg, ctx, remat=remat)
+    x = _decoder(params, batch["tokens"], enc_out, cfg, ctx, remat)
+    s_nll, s_mask = chunked_xent(x, params["lm_head"], batch["labels"],
+                                 batch["mask"], ctx)
+    return s_nll / jnp.maximum(s_mask, 1.0)
+
+
+def prefill(params, tokens, cfg: ArchConfig, ctx=None, frontend=None):
+    """Returns (last-token logits, cache with self KV + cross KV)."""
+    B, S = tokens.shape
+    enc_out = encode(params, frontend, cfg, ctx)
+    positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+    x = L.embed_lookup(params["embed"], tokens).astype(cfg.jdtype)
+    if ctx is not None:
+        x = ctx.constrain(x, "batch", "seq_tp", None)
+
+    def body(xx, blk):
+        h = L.layer_norm(xx, blk["ln1_w"], blk["ln1_b"], cfg.norm_eps)
+        q, k, v = _proj_qkv(h, blk, cfg)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        if ctx is not None:
+            q, k, v = _cq(ctx, cfg, q, k, v)
+        out = blockwise_attention(q, k, v, causal=True,
+                                  q_positions=positions, kv_positions=positions)
+        out = out.reshape(B, S, cfg.q_dim)
+        xx = xx + jnp.einsum("bsq,qd->bsd", out, blk["wo"].astype(h.dtype))
+        hx = L.layer_norm(xx, blk["lnx_w"], blk["lnx_b"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,dq->bsq", hx, blk["x_wq"].astype(hx.dtype))
+        qx = qx.reshape(B, S, cfg.n_heads, cfg.head_dim)
+        kx = jnp.einsum("bsd,dq->bsq", enc_out, blk["x_wk"].astype(hx.dtype))
+        vx = jnp.einsum("bsd,dq->bsq", enc_out, blk["x_wv"].astype(hx.dtype))
+        kx = kx.reshape(B, -1, cfg.n_kv_heads, cfg.head_dim)
+        vx = vx.reshape(B, -1, cfg.n_kv_heads, cfg.head_dim)
+        outx = blockwise_attention(qx, kx, vx, causal=False)
+        outx = outx.reshape(B, S, cfg.q_dim)
+        xx = xx + jnp.einsum("bsq,qd->bsd", outx, blk["x_wo"].astype(hx.dtype))
+        h2 = L.layer_norm(xx, blk["ln2_w"], blk["ln2_b"], cfg.norm_eps)
+        xx = xx + L.mlp_apply(h2, blk["w_up"], blk["w_down"], cfg.mlp)
+        if ctx is not None:
+            xx = ctx.constrain(xx, "batch", "seq_tp", None)
+        return xx, (k, v, kx, vx)
+
+    x, (ks, vs, kxs, vxs) = jax.lax.scan(body, x, params["dec_layers"])
+    x = L.layer_norm(x, params["final_norm_w"], params["final_norm_b"],
+                     cfg.norm_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1],
+                        params["lm_head"].astype(x.dtype))
+    cache = {"self": {"k": ks, "v": vs}, "cross": {"k": kxs, "v": vxs},
+             "pos": jnp.full((), S, jnp.int32)}
+    return logits, cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, ring: bool = False):
+    nd = cfg.n_layers
+    kv = (nd, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    xkv = (nd, batch, cfg.encdec.enc_seq, cfg.n_kv_heads, cfg.head_dim)
+    z = lambda s: jnp.zeros(s, cfg.jdtype)
+    return {"self": {"k": z(kv), "v": z(kv)},
+            "cross": {"k": z(xkv), "v": z(xkv)},
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params, token, cache, cfg: ArchConfig, ctx=None):
+    B = token.shape[0]
+    pos = cache["pos"]
+    x = L.embed_lookup(params["embed"], token[:, 0])[:, None, :].astype(cfg.jdtype)
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+
+    def body(carry, xs):
+        xx = carry
+        blk, k_l, v_l, kx_l, vx_l = xs
+        h = L.layer_norm(xx, blk["ln1_w"], blk["ln1_b"], cfg.norm_eps)
+        q, k, v = _proj_qkv(h, blk, cfg)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        k_l = jax.lax.dynamic_update_slice(k_l, k, (0, pos, 0, 0))
+        v_l = jax.lax.dynamic_update_slice(v_l, v, (0, pos, 0, 0))
+        out = decode_attention(q, k_l, v_l, pos=pos)
+        out = out.reshape(B, 1, cfg.q_dim)
+        xx = xx + jnp.einsum("bsq,qd->bsd", out, blk["wo"].astype(h.dtype))
+        hx = L.layer_norm(xx, blk["lnx_w"], blk["lnx_b"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,dq->bsq", hx, blk["x_wq"].astype(hx.dtype))
+        qx = qx.reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        # cross attention over the full (static) encoder cache
+        enc_len = kx_l.shape[1]
+        outx = decode_attention(qx, kx_l, vx_l, pos=jnp.full((), enc_len - 1, jnp.int32))
+        outx = outx.reshape(B, 1, cfg.q_dim)
+        xx = xx + jnp.einsum("bsq,qd->bsd", outx, blk["x_wo"].astype(hx.dtype))
+        h2 = L.layer_norm(xx, blk["ln2_w"], blk["ln2_b"], cfg.norm_eps)
+        xx = xx + L.mlp_apply(h2, blk["w_up"], blk["w_down"], cfg.mlp)
+        return xx, (k_l, v_l)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["self"]["k"], cache["self"]["v"],
+                  cache["cross"]["k"], cache["cross"]["v"]))
+    x = L.layer_norm(x, params["final_norm_w"], params["final_norm_b"],
+                     cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))[:, 0]
+    new_cache = {"self": {"k": ks, "v": vs}, "cross": cache["cross"],
+                 "pos": pos + 1}
+    return logits, new_cache

@@ -1,0 +1,309 @@
+"""Hymba-style hybrid blocks: attention heads and mamba-style selective-SSM
+heads run in PARALLEL on the same input; outputs are per-branch normalized
+and averaged. 128 learnable meta tokens are prepended; sliding-window
+attention everywhere except global layers {0, mid, last}.
+
+The selective scan uses ``jax.lax.associative_scan`` (the oracle for the
+``repro.kernels.ssm_scan`` Pallas kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models.attention import blockwise_attention, decode_attention
+from repro.models.transformer import _constrain_qkv, chunked_xent
+
+BIG_WINDOW = 1 << 30
+
+
+def layer_windows(cfg: ArchConfig):
+    """Per-layer attention window: global (huge) for layers {0, every k-th,
+    last}; cfg.sliding_window otherwise."""
+    ws = []
+    for l in range(cfg.n_layers):
+        is_global = (l == 0 or l == cfg.n_layers - 1 or
+                     (cfg.global_every and l % cfg.global_every == 0))
+        ws.append(BIG_WINDOW if is_global else cfg.sliding_window)
+    return jnp.asarray(ws, jnp.int32)
+
+
+def init(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 16)
+    d, dt = cfg.d_model, cfg.jdtype
+    Lr, di, N, R = cfg.n_layers, cfg.ssm.d_inner, cfg.ssm.state_dim, cfg.ssm.dt_rank
+    K = cfg.ssm.conv_width
+    layers = {
+        "ln1": L.oinit((Lr, d), dt),
+        "wq": L.ninit(ks[0], (Lr, d, cfg.q_dim), dt),
+        "wk": L.ninit(ks[1], (Lr, d, cfg.kv_dim), dt),
+        "wv": L.ninit(ks[2], (Lr, d, cfg.kv_dim), dt),
+        "wo_attn": L.ninit(ks[3], (Lr, cfg.q_dim, d), dt),
+        "w_in": L.ninit(ks[4], (Lr, d, 2 * di), dt),
+        "conv_w": L.ninit(ks[5], (Lr, K, di), dt, scale=K ** -0.5),
+        "w_bc": L.ninit(ks[6], (Lr, di, 2 * N), dt),
+        "w_dt1": L.ninit(ks[7], (Lr, di, R), dt),
+        "w_dt2": L.ninit(ks[8], (Lr, R, di), jnp.float32),
+        "b_dt": L.zinit((Lr, di), jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (Lr, di, N))),
+        "Dskip": L.oinit((Lr, di), jnp.float32),
+        "wo_ssm": L.ninit(ks[9], (Lr, di, d), dt),
+        "ng_attn": L.oinit((Lr, d), dt),
+        "ng_ssm": L.oinit((Lr, d), dt),
+        "ln2": L.oinit((Lr, d), dt),
+    }
+    layers.update(L.init_mlp(ks[10], d, cfg.d_ff, cfg.mlp, dt, stacked=(Lr,)))
+    return {
+        "embed": L.ninit(ks[11], (cfg.vocab, d), dt, scale=1.0),
+        "meta": L.ninit(ks[12], (cfg.n_meta_tokens, d), dt, scale=0.02),
+        "layers": layers,
+        "final_norm": L.oinit((d,), dt),
+        "lm_head": L.ninit(ks[13], (d, cfg.vocab), dt),
+    }
+
+
+def param_axes(cfg: ArchConfig):
+    n = (None,)
+    layers = {
+        "ln1": P(None, None),
+        "wq": P(None, None, "qdim"),
+        "wk": P(None, None, "kvdim"),
+        "wv": P(None, None, "kvdim"),
+        "wo_attn": P(None, "qdim", None),
+        "w_in": P(None, None, "inner"),
+        "conv_w": P(None, None, "inner"),
+        "w_bc": P(None, "inner", None),
+        "w_dt1": P(None, "inner", None),
+        "w_dt2": P(None, None, "inner"),
+        "b_dt": P(None, "inner"),
+        "A_log": P(None, "inner", None),
+        "Dskip": P(None, "inner"),
+        "wo_ssm": P(None, "inner", None),
+        "ng_attn": P(None, None),
+        "ng_ssm": P(None, None),
+        "ln2": P(None, None),
+        "w_up": P(None, None, "ffn"),
+        "w_down": P(None, "ffn", None),
+    }
+    return {
+        "embed": P("vocab", None),
+        "meta": P(None, None),
+        "layers": layers,
+        "final_norm": P(None),
+        "lm_head": P(None, "vocab"),
+    }
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(functools.partial(init, cfg=cfg), jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------------ selective SSM
+
+def ssm_scan(u, dt, A, Bsel, Csel, Dskip, h0=None):
+    """u, dt: (B,S,di); A: (di,N); Bsel,Csel: (B,S,N). Associative scan.
+    Returns (y (B,S,di), h_last (B,di,N))."""
+    Ad = jnp.exp(dt[..., None] * A)                          # (B,S,di,N)
+    Bx = (dt * u)[..., None] * Bsel[:, :, None, :]           # (B,S,di,N)
+    if h0 is not None:
+        # fold initial state into step 0: h1 = Ad1*h0 + Bx1
+        Bx = Bx.at[:, 0].add(Ad[:, 0] * h0)
+    a, b = jax.lax.associative_scan(
+        lambda l, r: (r[0] * l[0], r[0] * l[1] + r[1]), (Ad, Bx), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", b, Csel) + Dskip * u
+    return y, b[:, -1]
+
+
+def ssm_step(u, dt, A, Bsel, Csel, Dskip, h):
+    """Single decode step. u, dt: (B,di); Bsel,Csel: (B,N); h: (B,di,N)."""
+    Ad = jnp.exp(dt[..., None] * A)
+    h = Ad * h + (dt * u)[..., None] * Bsel[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Csel) + Dskip * u
+    return y, h
+
+
+def _ssm_branch(h, blk, cfg: ArchConfig, ctx, state=None):
+    """h: (B,S,d) -> (out (B,S,d), (h_ssm, conv_state))."""
+    B, S, _ = h.shape
+    di, N = cfg.ssm.d_inner, cfg.ssm.state_dim
+    u = jnp.einsum("bsd,de->bse", h, blk["w_in"].astype(h.dtype))
+    xs, zg = jnp.split(u, 2, axis=-1)
+    conv_state = None if state is None else state[1]
+    xc, new_conv = L.causal_conv1d(xs, blk["conv_w"], conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32))
+    if ctx is not None:
+        xc = ctx.constrain(xc, "batch", None, "inner")
+    dt = jax.nn.softplus(
+        (xc @ blk["w_dt1"].astype(jnp.float32)) @ blk["w_dt2"] + blk["b_dt"])
+    bc = xc @ blk["w_bc"].astype(jnp.float32)
+    Bsel, Csel = jnp.split(bc, 2, axis=-1)
+    A = -jnp.exp(blk["A_log"])
+    h0 = None if state is None else state[0]
+    if S == 1 and state is not None:
+        y, h_new = ssm_step(xc[:, 0], dt[:, 0], A, Bsel[:, 0], Csel[:, 0],
+                            blk["Dskip"], h0)
+        y = y[:, None]
+    else:
+        y, h_new = ssm_scan(xc, dt, A, Bsel, Csel, blk["Dskip"], h0)
+    y = y.astype(h.dtype) * jax.nn.silu(zg.astype(jnp.float32)).astype(h.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, blk["wo_ssm"].astype(h.dtype))
+    return out, (h_new, new_conv)
+
+
+# ----------------------------------------------------------------- forward
+
+def _block(x, blk, window, cfg: ArchConfig, ctx, positions):
+    B, S, d = x.shape
+    h = L.rms_norm(x, blk["ln1"], cfg.norm_eps)
+    # attention branch
+    q = jnp.einsum("bsd,dq->bsq", h, blk["wq"].astype(h.dtype))
+    k = jnp.einsum("bsd,dq->bsq", h, blk["wk"].astype(h.dtype))
+    v = jnp.einsum("bsd,dq->bsq", h, blk["wv"].astype(h.dtype))
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    q, k, v = _constrain_qkv(ctx, cfg, q, k, v)
+    ao = blockwise_attention(q, k, v, causal=True, window=window,
+                             q_positions=positions, kv_positions=positions)
+    ao = jnp.einsum("bsq,qd->bsd", ao.reshape(B, S, cfg.q_dim),
+                    blk["wo_attn"].astype(h.dtype))
+    # ssm branch (parallel, same input)
+    so, ssm_state = _ssm_branch(h, blk, cfg, ctx)
+    y = 0.5 * (L.rms_norm(ao, blk["ng_attn"], cfg.norm_eps) +
+               L.rms_norm(so, blk["ng_ssm"], cfg.norm_eps))
+    x = x + y
+    h2 = L.rms_norm(x, blk["ln2"], cfg.norm_eps)
+    x = x + L.mlp_apply(h2, blk["w_up"], blk["w_down"], cfg.mlp)
+    if ctx is not None:
+        x = ctx.constrain(x, "batch", "seq_tp", None)
+    return x, (k, v, ssm_state)
+
+
+def _prepend_meta(params, x, ctx, cfg):
+    B = x.shape[0]
+    meta = jnp.broadcast_to(params["meta"].astype(x.dtype)[None],
+                            (B,) + params["meta"].shape)
+    x = jnp.concatenate([meta, x], axis=1)
+    if ctx is not None:
+        x = ctx.constrain(x, "batch", "seq_tp", None)
+    return x
+
+
+def train_loss(params, batch, cfg: ArchConfig, ctx=None, remat=True):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens).astype(cfg.jdtype)
+    x = _prepend_meta(params, x, ctx, cfg)
+    St = x.shape[1]
+    positions = jnp.arange(St, dtype=jnp.int32)[None, :]
+    windows = layer_windows(cfg)
+
+    body = functools.partial(_block, cfg=cfg, ctx=ctx, positions=positions)
+    if remat:
+        body = jax.checkpoint(body)
+
+    def step(xx, xs):
+        blk, w = xs
+        xx, _ = body(xx, blk, w)
+        return xx, None
+
+    x, _ = jax.lax.scan(step, x, (params["layers"], windows))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    labels = jnp.pad(batch["labels"], ((0, 0), (cfg.n_meta_tokens, 0)))
+    mask = jnp.pad(batch["mask"], ((0, 0), (cfg.n_meta_tokens, 0)))
+    s_nll, s_mask = chunked_xent(x, params["lm_head"], labels, mask, ctx)
+    return s_nll / jnp.maximum(s_mask, 1.0)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, ring: bool = False):
+    """KV cache (ring-bounded for long contexts) + SSM/conv recurrent state."""
+    slots = max_len + cfg.n_meta_tokens
+    if ring and cfg.sliding_window:
+        slots = min(slots, cfg.sliding_window)
+    Lr, di, N, K = (cfg.n_layers, cfg.ssm.d_inner, cfg.ssm.state_dim,
+                    cfg.ssm.conv_width)
+    z = jnp.zeros
+    return {
+        "k": z((Lr, batch, slots, cfg.n_kv_heads, cfg.head_dim), cfg.jdtype),
+        "v": z((Lr, batch, slots, cfg.n_kv_heads, cfg.head_dim), cfg.jdtype),
+        "ssm": z((Lr, batch, di, N), jnp.float32),
+        "conv": z((Lr, batch, K - 1, di), cfg.jdtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, tokens, cfg: ArchConfig, ctx=None, frontend=None):
+    B, S = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens).astype(cfg.jdtype)
+    x = _prepend_meta(params, x, ctx, cfg)
+    St = x.shape[1]
+    positions = jnp.arange(St, dtype=jnp.int32)[None, :]
+    windows = layer_windows(cfg)
+
+    def step(xx, xs):
+        blk, w = xs
+        xx, (k, v, ssm_state) = _block(xx, blk, w, cfg, ctx, positions)
+        return xx, (k, v, ssm_state)
+
+    x, (ks, vs, sst) = jax.lax.scan(step, x, (params["layers"], windows))
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))[:, 0]
+    cache = {"k": ks, "v": vs, "ssm": sst[0], "conv": sst[1],
+             "pos": jnp.full((), St, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, token, cache, cfg: ArchConfig, ctx=None):
+    B = token.shape[0]
+    pos = cache["pos"]          # absolute position incl. meta offset
+    x = L.embed_lookup(params["embed"], token[:, 0])[:, None, :].astype(cfg.jdtype)
+    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    windows = layer_windows(cfg)
+    slots = cache["k"].shape[2]
+    slot = pos % slots
+
+    def step(carry, xs):
+        xx = carry
+        blk, w, k_l, v_l, ssm_l, conv_l = xs
+        h = L.rms_norm(xx, blk["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dq->bsq", h, blk["wq"].astype(h.dtype))
+        k = jnp.einsum("bsd,dq->bsq", h, blk["wk"].astype(h.dtype))
+        v = jnp.einsum("bsd,dq->bsq", h, blk["wv"].astype(h.dtype))
+        q = q.reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        k = k.reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+        v = v.reshape(B, 1, cfg.n_kv_heads, cfg.head_dim)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        k_l = jax.lax.dynamic_update_slice(k_l, k, (0, slot, 0, 0))
+        v_l = jax.lax.dynamic_update_slice(v_l, v, (0, slot, 0, 0))
+        slot_ids = jnp.arange(slots, dtype=jnp.int32)[None, :]
+        wraps = (pos // slots) * slots
+        abs_pos = jnp.where(slot_ids <= slot, wraps + slot_ids,
+                            wraps - slots + slot_ids)
+        kv_pos = jnp.where(abs_pos >= 0, abs_pos, jnp.iinfo(jnp.int32).max)
+        ao = decode_attention(q, k_l, v_l, pos=pos, window=w, kv_positions=kv_pos)
+        ao = jnp.einsum("bsq,qd->bsd", ao.reshape(B, 1, cfg.q_dim),
+                        blk["wo_attn"].astype(h.dtype))
+        so, (ssm_new, conv_new) = _ssm_branch(h, blk, cfg, ctx,
+                                              state=(ssm_l, conv_l))
+        y = 0.5 * (L.rms_norm(ao, blk["ng_attn"], cfg.norm_eps) +
+                   L.rms_norm(so, blk["ng_ssm"], cfg.norm_eps))
+        xx = xx + y
+        h2 = L.rms_norm(xx, blk["ln2"], cfg.norm_eps)
+        xx = xx + L.mlp_apply(h2, blk["w_up"], blk["w_down"], cfg.mlp)
+        return xx, (k_l, v_l, ssm_new, conv_new)
+
+    x, (ks, vs, sst, cst) = jax.lax.scan(
+        step, x, (params["layers"], windows, cache["k"], cache["v"],
+                  cache["ssm"], cache["conv"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))[:, 0]
+    return logits, {"k": ks, "v": vs, "ssm": sst, "conv": cst, "pos": pos + 1}

@@ -1,0 +1,144 @@
+"""Shared model building blocks (pure JAX, functional, scan-friendly)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------- init utils
+
+def ninit(key, shape, dtype, scale=None):
+    """Truncated-normal init with 1/sqrt(fan_in) default scale."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def zinit(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def oinit(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+# ------------------------------------------------------------------- norms
+
+def rms_norm(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+# -------------------------------------------------------------------- RoPE
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, dh/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- MLP
+
+def mlp_apply(x, w_up, w_down, kind: str, b_up=None, b_down=None):
+    """w_up: (d, 2f) for gated kinds, (d, f) otherwise. w_down: (f, d)."""
+    h = jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+    if b_up is not None:
+        h = h + b_up.astype(x.dtype)
+    if kind == "swiglu":
+        g, u = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    elif kind == "geglu":
+        g, u = jnp.split(h, 2, axis=-1)
+        h = jax.nn.gelu(g.astype(jnp.float32), approximate=True).astype(x.dtype) * u
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    elif kind == "gelu":
+        h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(x.dtype)
+    else:
+        raise ValueError(kind)
+    out = jnp.einsum("...f,fd->...d", h, w_down.astype(x.dtype))
+    if b_down is not None:
+        out = out + b_down.astype(x.dtype)
+    return out
+
+
+def mlp_up_width(d_ff: int, kind: str) -> int:
+    return 2 * d_ff if kind in ("swiglu", "geglu") else d_ff
+
+
+def init_mlp(key, d_model, d_ff, kind, dtype, stacked=()):
+    k1, k2 = jax.random.split(key)
+    up = stacked + (d_model, mlp_up_width(d_ff, kind))
+    down = stacked + (d_ff, d_model)
+    return {"w_up": ninit(k1, up, dtype), "w_down": ninit(k2, down, dtype)}
+
+
+def mlp_axes(stacked: bool):
+    lead = (None,) if stacked else ()
+    return {"w_up": P(*lead, None, "ffn"), "w_down": P(*lead, "ffn", None)}
+
+
+# ---------------------------------------------------------------- embedding
+
+def embed_lookup(embed, tokens):
+    # one_hot-free gather; GSPMD partitions vocab-sharded gathers natively.
+    return jnp.take(embed, tokens, axis=0)
+
+
+# -------------------------------------------------------------------- loss
+
+def softmax_xent(logits, labels, mask=None, z_loss: float = 1e-4):
+    """logits (..., V) fp32-accumulated xent with optional z-loss and mask."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ------------------------------------------------------------ misc helpers
+
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv. x: (B, S, C), w: (K, C). state: (B, K-1, C) or None.
+    Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:-2] + (K - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=-2)          # (B, S+K-1, C)
+    # y[t] = sum_k w[k] * xp[t+k]
+    segs = [xp[..., k:k + x.shape[-2], :] * w[k].astype(x.dtype) for k in range(K)]
+    y = sum(segs)
+    new_state = xp[..., -(K - 1):, :] if K > 1 else pad
+    return y, new_state

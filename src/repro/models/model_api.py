@@ -1,0 +1,162 @@
+"""Uniform model protocol over the four family implementations.
+
+Every family exposes: init / abstract_params / param_axes / train_loss /
+prefill / decode_step / init_cache. This module adds input/cache spec
+builders (ShapeDtypeStruct stand-ins, no allocation) used by smoke tests,
+the launcher, and the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from types import ModuleType
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, get_config
+from repro.models import encdec, hybrid, transformer, xlstm
+
+
+def get_module(cfg: ArchConfig) -> ModuleType:
+    if cfg.family == "encdec":
+        return encdec
+    if cfg.family == "hybrid":
+        return hybrid
+    if cfg.family == "ssm" and cfg.xlstm is not None:
+        return xlstm
+    return transformer          # dense / moe / vlm
+
+
+# ------------------------------------------------------------- input specs
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """Training-batch ShapeDtypeStructs + logical axes."""
+    B, S = shape.global_batch, shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+    }
+    axes = {
+        "tokens": P("batch", None),
+        "labels": P("batch", None),
+        "mask": P("batch", None),
+    }
+    if cfg.frontend is not None:
+        specs["frontend"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_seq, cfg.d_model), jnp.float32)
+        axes["frontend"] = P("batch", None, None)
+    return specs, axes
+
+
+def prefill_specs(cfg: ArchConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    axes = {"tokens": P("batch", None)}
+    if cfg.frontend is not None:
+        specs["frontend"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_seq, cfg.d_model), jnp.float32)
+        axes["frontend"] = P("batch", None, None)
+    return specs, axes
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeConfig, cache_mode="slots"):
+    """Abstract decode cache (ring-bounded for long_500k) + logical axes."""
+    mod = get_module(cfg)
+    ring = shape.name == "long_500k"
+    abstract = jax.eval_shape(functools.partial(
+        mod.init_cache, cfg, shape.global_batch, shape.seq_len, ring=ring))
+    return abstract, cache_axes(cfg, cache_mode)
+
+
+def cache_axes(cfg: ArchConfig, cache_mode: str = "slots"):
+    """cache_mode: "slots" shards the KV slot dim (spreads memory; GSPMD
+    lowers the per-token write to a masked local-slice rewrite); "dh" shards
+    head_dim (local one-slot writes; reads psum score stats). See
+    EXPERIMENTS.md §Perf (yi-34b decode)."""
+    if cache_mode == "dh":
+        kv = {"k": P(None, "batch", None, None, "inner"),
+              "v": P(None, "batch", None, None, "inner")}
+    else:
+        kv = {"k": P(None, "batch", "cache_seq"),
+              "v": P(None, "batch", "cache_seq")}
+    if cfg.family == "encdec":
+        return {"self": dict(kv), "cross": dict(kv), "pos": P()}
+    if cfg.family == "hybrid":
+        return {**kv, "ssm": P(None, "batch", "inner"),
+                "conv": P(None, "batch", None, "inner"), "pos": P()}
+    if cfg.xlstm is not None:
+        return {
+            "mlstm": (P(None, None, "batch", None, None, "inner"),
+                      P(None, None, "batch", None, "inner"),
+                      P(None, None, "batch"),
+                      P(None, None, "batch", None, "inner")),
+            "slstm": (P(None, "batch"), P(None, "batch"), P(None, "batch"),
+                      P(None, "batch"), P(None, "batch", None, None)),
+            "pos": P(),
+        }
+    out = {"pos": P()}
+    if cfg.moe is None or cfg.moe.first_k_dense:
+        out["dense"] = dict(kv)
+    if cfg.moe is not None:
+        out["moe"] = dict(kv)
+    return out
+
+
+def decode_token_specs(cfg: ArchConfig, shape: ShapeConfig):
+    B = shape.global_batch
+    return (jax.ShapeDtypeStruct((B, 1), jnp.int32), P("batch", None))
+
+
+def grow_cache(cfg: ArchConfig, cache, max_len: int):
+    """Pad prefill-produced KV caches (seq dim) to ``max_len`` slots so decode
+    can continue past the prefill length. Recurrent states are size-invariant."""
+    def pad_kv(d):
+        out = {}
+        for name in ("k", "v"):
+            buf = d[name]
+            slots = buf.shape[2]
+            if slots < max_len:
+                buf = jnp.pad(buf, ((0, 0), (0, 0), (0, max_len - slots),
+                                    (0, 0), (0, 0)))
+            out[name] = buf
+        return out
+
+    if cfg.family == "encdec":
+        return {"self": pad_kv(cache["self"]), "cross": cache["cross"],
+                "pos": cache["pos"]}
+    if cfg.family == "hybrid":
+        new = dict(cache)
+        new.update(pad_kv(cache))
+        return new
+    if cfg.xlstm is not None:
+        return cache
+    new = dict(cache)
+    for part in ("dense", "moe"):
+        if part in cache:
+            new[part] = pad_kv(cache[part])
+    return new
+
+
+# --------------------------------------------------------------- metadata
+
+def param_count(cfg: ArchConfig) -> int:
+    import math
+    tree = get_module(cfg).abstract_params(cfg)
+    return sum(math.prod(l.shape) if l.shape else 1
+               for l in jax.tree.leaves(tree))
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Active params per token (MoE: only top-k routed experts count)."""
+    total = param_count(cfg)
+    if cfg.moe is None:
+        return total
+    mo = cfg.moe
+    n_moe_layers = cfg.n_layers - mo.first_k_dense
+    from repro.models.layers import mlp_up_width
+    per_expert = (cfg.d_model * mlp_up_width(mo.d_ff_expert, cfg.mlp)
+                  + mo.d_ff_expert * cfg.d_model)
+    inactive = n_moe_layers * (mo.n_routed - mo.top_k) * per_expert
+    return total - inactive

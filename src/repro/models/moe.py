@@ -1,0 +1,205 @@
+"""Mixture-of-Experts FFN with static-shape, sort-based token dispatch.
+
+Routing is per batch row (keeps the scatter local to the ``data`` shard), with
+per-row expert capacity ``C = ceil(S * top_k / E * capacity_factor)``. The
+(B, E, C, d) dispatch buffer is sharded batch->data, expert->model, so the
+expert einsum runs under expert parallelism and GSPMD inserts the all-to-all.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, MoEConfig
+from repro.models import layers as L
+
+
+def init_moe(key, cfg: ArchConfig, stacked):
+    mo = cfg.moe
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    d, fe = cfg.d_model, mo.d_ff_expert
+    up_w = L.mlp_up_width(fe, cfg.mlp)
+    params = {
+        "router": L.ninit(k1, stacked + (d, mo.n_routed), jnp.float32),
+        "we_up": L.ninit(k2, stacked + (mo.n_routed, d, up_w), cfg.jdtype),
+        "we_down": L.ninit(k3, stacked + (mo.n_routed, fe, d), cfg.jdtype),
+    }
+    if mo.n_shared:
+        fs = mo.n_shared * fe
+        params["ws_up"] = L.ninit(k4, stacked + (d, L.mlp_up_width(fs, cfg.mlp)), cfg.jdtype)
+        params["ws_down"] = L.ninit(k5, stacked + (fs, d), cfg.jdtype)
+    return params
+
+
+def moe_axes(cfg: ArchConfig, stacked: bool):
+    lead = (None,) if stacked else ()
+    ax = {
+        "router": P(*lead, None, "expert"),
+        "we_up": P(*lead, "expert", None, "ffn"),
+        "we_down": P(*lead, "expert", "ffn", None),
+    }
+    if cfg.moe.n_shared:
+        ax["ws_up"] = P(*lead, None, "ffn")
+        ax["ws_down"] = P(*lead, "ffn", None)
+    return ax
+
+
+def capacity(moe: MoEConfig, seq: int) -> int:
+    return max(1, int(seq * moe.top_k / moe.n_routed * moe.capacity_factor))
+
+
+def moe_ffn_shardmap(x, p, cfg: ArchConfig, ctx):
+    """Explicit expert parallelism over the `model` axis via shard_map:
+    dispatch is data-local, each model rank computes its E/tp experts, and
+    the only collective is a psum of the (B, S, d) partial outputs —
+    O(tokens·d) wire instead of O(buffer) (EXPERIMENTS.md §Perf iter 3)."""
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mo = cfg.moe
+    mesh = ctx.mesh
+    tp = ctx.axis_size("model")
+    B, S, d = x.shape
+    E, K = mo.n_routed, mo.top_k
+    C = capacity(mo, S)
+    assert E % tp == 0, (E, tp)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    bspec = P(batch_axes if len(batch_axes) > 1 else
+              (batch_axes[0] if batch_axes else None))
+
+    def local(xl, router, we_up, we_down):
+        Bl = xl.shape[0]
+        logits = jnp.einsum("bsd,de->bse", xl.astype(jnp.float32), router)
+        probs = jax.nn.softmax(logits, axis=-1)
+        vals, idx = jax.lax.top_k(probs, K)
+        vals = vals / jnp.maximum(jnp.sum(vals, -1, keepdims=True), 1e-9)
+        importance = jnp.mean(probs, axis=(0, 1))
+        load = jnp.mean(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=(0, 1, 2))
+        aux = E * jnp.sum(importance * load)
+
+        flat_e = idx.reshape(Bl, S * K)
+        tok_of = jnp.broadcast_to(
+            jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)[None], (Bl, S * K))
+        order = jnp.argsort(flat_e, axis=-1)
+        se = jnp.take_along_axis(flat_e, order, -1)
+        st = jnp.take_along_axis(tok_of, order, -1)
+        sw = jnp.take_along_axis(vals.reshape(Bl, S * K), order, -1)
+        starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(E)))(se)
+        pos = jnp.arange(S * K, dtype=jnp.int32)[None] - \
+            jnp.take_along_axis(starts, se, -1)
+        keep = pos < C
+        dest = jnp.where(keep, se * C + pos, E * C)
+        brow = jnp.arange(Bl)[:, None]
+        xs = jnp.take_along_axis(xl, st[..., None], axis=1)
+        buf = jnp.zeros((Bl, E * C + 1, d), xl.dtype).at[brow, dest].set(xs)
+
+        # this rank's expert block
+        r = jax.lax.axis_index("model")
+        epr = E // tp
+        mine = jax.lax.dynamic_slice_in_dim(
+            buf[:, :E * C].reshape(Bl, E, C, d), r * epr, epr, axis=1)
+        h = jnp.einsum("becd,edf->becf", mine, we_up.astype(xl.dtype))
+        if cfg.mlp in ("swiglu", "geglu"):
+            g, u = jnp.split(h, 2, axis=-1)
+            act = jax.nn.silu if cfg.mlp == "swiglu" else (
+                lambda t: jax.nn.gelu(t, approximate=True))
+            h = act(g.astype(jnp.float32)).astype(xl.dtype) * u
+        elif cfg.mlp == "relu2":
+            h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(xl.dtype)
+        y_mine = jnp.einsum("becf,efd->becd", h, we_down.astype(xl.dtype))
+
+        y_full = jnp.zeros((Bl, E * C + 1, d), xl.dtype)
+        y_full = jax.lax.dynamic_update_slice(
+            y_full, y_mine.reshape(Bl, epr * C, d), (0, r * epr * C, 0))
+        gathered = jnp.take_along_axis(y_full, dest[..., None], axis=1)
+        gathered = gathered * (sw * keep)[..., None].astype(xl.dtype)
+        out = jnp.zeros((Bl, S, d), xl.dtype).at[brow, st].add(gathered)
+        out = jax.lax.psum(out, "model")
+        return out, aux[None]
+
+    out, aux = shard_map(
+        local, mesh=mesh,
+        in_specs=(bspec, P(), P("model"), P("model")),
+        out_specs=(bspec, bspec if batch_axes else P()),
+        check_vma=False,
+    )(x, p["router"].astype(jnp.float32), p["we_up"], p["we_down"])
+    aux = jnp.mean(aux)
+    if mo.n_shared:
+        out = out + L.mlp_apply(x, p["ws_up"], p["ws_down"], cfg.mlp)
+    return out, aux
+
+
+def moe_ffn(x, p, cfg: ArchConfig, ctx=None):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    if (ctx is not None and ctx.mesh is not None
+            and cfg.moe.dispatch == "shard_map"
+            and cfg.moe.n_routed % max(ctx.axis_size("model"), 1) == 0
+            and x.shape[0] % (ctx.axis_size("pod") * ctx.axis_size("data")) == 0):
+        return moe_ffn_shardmap(x, p, cfg, ctx)
+    mo = cfg.moe
+    B, S, d = x.shape
+    E, K = mo.n_routed, mo.top_k
+    C = capacity(mo, S)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, idx = jax.lax.top_k(probs, K)                       # (B, S, K)
+    vals = vals / jnp.maximum(jnp.sum(vals, -1, keepdims=True), 1e-9)
+
+    # load-balance aux (switch-style): E * sum_e importance_e * load_e
+    importance = jnp.mean(probs, axis=(0, 1))                 # (E,)
+    load = jnp.mean(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=(0, 1, 2))
+    aux = E * jnp.sum(importance * load)
+
+    # ---- sort-based dispatch (static shapes, per-row) ----
+    flat_e = idx.reshape(B, S * K)
+    tok_of = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)[None], (B, S * K))
+    order = jnp.argsort(flat_e, axis=-1)
+    se = jnp.take_along_axis(flat_e, order, -1)               # sorted experts
+    st = jnp.take_along_axis(tok_of, order, -1)               # their tokens
+    sw = jnp.take_along_axis(vals.reshape(B, S * K), order, -1)
+    starts = jax.vmap(lambda row: jnp.searchsorted(row, jnp.arange(E)))(se)
+    pos = jnp.arange(S * K, dtype=jnp.int32)[None] - jnp.take_along_axis(starts, se, -1)
+    keep = pos < C
+    dest = jnp.where(keep, se * C + pos, E * C)               # E*C = drop slot
+
+    brow = jnp.arange(B)[:, None]
+    xs = jnp.take_along_axis(x, st[..., None], axis=1)        # (B, S*K, d)
+    buf = jnp.zeros((B, E * C + 1, d), x.dtype).at[brow, dest].set(xs)
+    buf = buf[:, :E * C].reshape(B, E, C, d)
+    if ctx is not None:
+        if mo.dispatch == "local":
+            # data-local scatter; model ranks slice their experts from the
+            # replicated buffer inside the einsum (no dispatch collective)
+            buf = ctx.constrain(buf, "batch", None, None, None)
+        else:
+            buf = ctx.constrain(buf, "batch", "expert", None, None)
+
+    h = jnp.einsum("becd,edf->becf", buf, p["we_up"].astype(x.dtype))
+    if cfg.mlp in ("swiglu", "geglu"):
+        g, u = jnp.split(h, 2, axis=-1)
+        act = jax.nn.silu if cfg.mlp == "swiglu" else (
+            lambda t: jax.nn.gelu(t, approximate=True))
+        h = act(g.astype(jnp.float32)).astype(x.dtype) * u
+    elif cfg.mlp == "relu2":
+        h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    y = jnp.einsum("becf,efd->becd", h, p["we_down"].astype(x.dtype))
+    if ctx is not None:
+        y = ctx.constrain(y, "batch", "expert", None, None)
+
+    y = jnp.concatenate(
+        [y.reshape(B, E * C, d), jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    gathered = jnp.take_along_axis(y, dest[..., None], axis=1)  # (B, S*K, d)
+    gathered = gathered * (sw * keep)[..., None].astype(x.dtype)
+    out = jnp.zeros((B, S, d), x.dtype).at[brow, st].add(gathered)
+    if ctx is not None and mo.dispatch == "local":
+        # combine stays in the expert-sharded domain; the psum lands on the
+        # small (B, S, d) output, not the (B, E*C, d) buffer
+        out = ctx.constrain(out, "batch", None, None)
+
+    if mo.n_shared:
+        out = out + L.mlp_apply(x, p["ws_up"], p["ws_down"], cfg.mlp)
+    return out, aux

@@ -1,0 +1,452 @@
+"""xLSTM block stack: super-blocks of (group_size-1) mLSTM + 1 sLSTM layers.
+
+mLSTM uses the CHUNKWISE-PARALLEL form (stabilized exponential gating, matrix
+memory): intra-chunk attention-like einsums + inter-chunk (C, n, m) scan.
+This is both the lowering path (O(S·c) memory, MXU-friendly) and the oracle
+for the ``repro.kernels.mlstm_scan`` Pallas kernel. sLSTM is inherently
+sequential (scalar memory + recurrent gate weights) and runs as a two-level
+scan (chunked remat).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+CHUNK = 64
+NEG = -1e30
+
+
+# ----------------------------------------------------------------- mLSTM
+
+def mlstm_chunkwise(q, k, v, li, lf, state=None, chunk=CHUNK):
+    """q,k,v: (B,S,H,dh); li,lf: (B,S,H) raw gate pre-activations.
+    Returns (h (B,S,H,dh), (C,n,m) final state). k is pre-scaled by caller.
+    """
+    B, S, H, dh = q.shape
+    c = min(chunk, S)
+    assert S % c == 0, (S, c)
+    NC = S // c
+    f32 = jnp.float32
+
+    qc = q.astype(f32).reshape(B, NC, c, H, dh).transpose(1, 0, 3, 2, 4)  # (NC,B,H,c,dh)
+    kc = k.astype(f32).reshape(B, NC, c, H, dh).transpose(1, 0, 3, 2, 4)
+    vc = v.astype(f32).reshape(B, NC, c, H, dh).transpose(1, 0, 3, 2, 4)
+    lic = li.astype(f32).reshape(B, NC, c, H).transpose(1, 0, 3, 2)       # (NC,B,H,c)
+    lfc = jax.nn.log_sigmoid(lf.astype(f32)).reshape(B, NC, c, H).transpose(1, 0, 3, 2)
+
+    D = jnp.cumsum(lfc, axis=-1)                    # (NC,B,H,c) inclusive
+    G = D[..., -1:]                                 # (NC,B,H,1)
+    # decay matrix: decay[t,s] = li_s + D_t - D_s for s<=t
+    dec = lic[..., None, :] + D[..., :, None] - D[..., None, :]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    dec = jnp.where(tri, dec, NEG)                  # (NC,B,H,c,c)
+    a = lic + G - D                                 # (NC,B,H,c) to-chunk-end
+
+    scores = jnp.einsum("nbhtd,nbhsd->nbhts", qc, kc)   # (NC,B,H,c,c)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), f32)
+        n0 = jnp.zeros((B, H, dh), f32)
+        m0 = jnp.full((B, H), NEG, f32)
+    else:
+        C0, n0, m0 = (s.astype(f32) for s in state)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qj, kj, vj, Dj, Gj, decj, aj, sj = xs
+        m_intra = jnp.max(decj, axis=-1)                         # (B,H,c)
+        m_t = jnp.maximum(m[..., None] + Dj, m_intra)            # (B,H,c)
+        inter_w = jnp.exp(m[..., None] + Dj - m_t)               # (B,H,c)
+        inter = inter_w[..., None] * jnp.einsum("bhtd,bhde->bhte", qj, C)
+        den_inter = inter_w * jnp.einsum("bhtd,bhd->bht", qj, n)
+        pw = jnp.exp(decj - m_t[..., None])                      # (B,H,c,c)
+        intra = jnp.einsum("bhts,bhsd->bhtd", pw * sj, vj)
+        den_intra = jnp.einsum("bhts->bht", pw * sj)
+        den = jnp.maximum(jnp.abs(den_inter + den_intra), jnp.exp(-m_t))
+        h = (inter + intra) / den[..., None]                     # (B,H,c,dh)
+        # state update
+        m_a = jnp.max(aj, axis=-1)                               # (B,H)
+        m_next = jnp.maximum(m + Gj[..., 0], m_a)
+        w_prev = jnp.exp(m + Gj[..., 0] - m_next)
+        w_s = jnp.exp(aj - m_next[..., None])                    # (B,H,c)
+        C_next = w_prev[..., None, None] * C + jnp.einsum(
+            "bhsd,bhse->bhde", w_s[..., None] * kj, vj)
+        n_next = w_prev[..., None] * n + jnp.einsum("bhsd->bhd", w_s[..., None] * kj)
+        return (C_next, n_next, m_next), h
+
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0),
+                                 (qc, kc, vc, D, G, dec, a, scores))
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, dh)         # back to (B,S,H,dh)
+    return h.astype(q.dtype), (C, n, m)
+
+
+def mlstm_decode(q, k, v, li, lf, state):
+    """Single-step recurrence. q,k,v: (B,H,dh); li,lf: (B,H)."""
+    C, n, m = state
+    f32 = jnp.float32
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    lf = jax.nn.log_sigmoid(lf.astype(f32))
+    li = li.astype(f32)
+    m_new = jnp.maximum(lf + m, li)
+    fp = jnp.exp(lf + m - m_new)
+    ip = jnp.exp(li - m_new)
+    C = fp[..., None, None] * C + ip[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n = fp[..., None] * n + ip[..., None] * k
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_new))
+    h = jnp.einsum("bhd,bhde->bhe", q, C) / den[..., None]
+    return h, (C, n, m_new)
+
+
+def _mlstm_dims(cfg: ArchConfig):
+    di = int(cfg.xlstm.proj_factor_m * cfg.d_model)
+    return di, di // cfg.n_heads
+
+
+def init_mlstm_layer(key, cfg: ArchConfig, stacked):
+    d, dt = cfg.d_model, cfg.jdtype
+    di, dh = _mlstm_dims(cfg)
+    H, K = cfg.n_heads, cfg.xlstm.conv_width
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": L.oinit(stacked + (d,), dt),
+        "w_up": L.ninit(ks[0], stacked + (d, 2 * di), dt),
+        "conv_w": L.ninit(ks[1], stacked + (K, di), dt, scale=K ** -0.5),
+        "wq": L.ninit(ks[2], stacked + (di, di), dt),
+        "wk": L.ninit(ks[3], stacked + (di, di), dt),
+        "wv": L.ninit(ks[4], stacked + (di, di), dt),
+        "w_if": L.ninit(ks[5], stacked + (di, 2 * H), jnp.float32),
+        "b_if": jnp.tile(jnp.array([0.0, 3.0], jnp.float32), (H,)).reshape(
+            (1,) * len(stacked) + (2 * H,)) * jnp.ones(stacked + (2 * H,), jnp.float32),
+        "mh_norm": L.oinit(stacked + (di,), dt),
+        "w_down": L.ninit(ks[6], stacked + (di, d), dt),
+    }
+
+
+def mlstm_layer_axes(stacked_rank: int):
+    lead = (None,) * stacked_rank
+    return {
+        "ln": P(*lead, None),
+        "w_up": P(*lead, None, "inner"),
+        "conv_w": P(*lead, None, "inner"),
+        "wq": P(*lead, None, "inner"),
+        "wk": P(*lead, None, "inner"),
+        "wv": P(*lead, None, "inner"),
+        "w_if": P(*lead, None, None),
+        "b_if": P(*lead, None),
+        "mh_norm": P(*lead, "inner"),
+        "w_down": P(*lead, "inner", None),
+    }
+
+
+def mlstm_layer_apply(x, p, cfg: ArchConfig, ctx=None, state=None):
+    """x: (B,S,d). state None (train/prefill) or (C,n,m,conv) for decode.
+    Returns (x_out, new_state or final chunk state)."""
+    B, S, d = x.shape
+    di, dh = _mlstm_dims(cfg)
+    H = cfg.n_heads
+    h = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    u = jnp.einsum("bsd,de->bse", h, p["w_up"].astype(h.dtype))
+    z, g = jnp.split(u, 2, axis=-1)
+    conv_state = None if state is None else state[3]
+    zc, new_conv = L.causal_conv1d(z, p["conv_w"], conv_state)
+    zc = jax.nn.silu(zc.astype(jnp.float32)).astype(z.dtype)
+    q = jnp.einsum("bse,ef->bsf", zc, p["wq"].astype(z.dtype))
+    k = jnp.einsum("bse,ef->bsf", zc, p["wk"].astype(z.dtype)) * (dh ** -0.5)
+    v = jnp.einsum("bse,ef->bsf", z, p["wv"].astype(z.dtype))
+    gates = jnp.einsum("bse,eg->bsg", zc.astype(jnp.float32),
+                       p["w_if"]) + p["b_if"]
+    li, lf = gates[..., 0::2], gates[..., 1::2]                  # (B,S,H)
+    q = q.reshape(B, S, H, dh)
+    k = k.reshape(B, S, H, dh)
+    v = v.reshape(B, S, H, dh)
+    if ctx is not None:
+        q = ctx.constrain(q, "batch", None, None, "inner")
+        k = ctx.constrain(k, "batch", None, None, "inner")
+        v = ctx.constrain(v, "batch", None, None, "inner")
+    if state is None:
+        hout, (C, n, m) = mlstm_chunkwise(q, k, v, li, lf,
+                                          chunk=min(CHUNK, S))
+    else:
+        hflat, (C, n, m) = mlstm_decode(q[:, 0], k[:, 0], v[:, 0],
+                                        li[:, 0], lf[:, 0], state[:3])
+        hout = hflat[:, None].astype(x.dtype)
+    hout = hout.reshape(B, S, di)
+    # per-head rms norm ("multi-head norm")
+    hn = hout.reshape(B, S, H, dh)
+    hn = hn / jnp.sqrt(jnp.mean(jnp.square(hn.astype(jnp.float32)), -1,
+                                keepdims=True) + cfg.norm_eps).astype(hout.dtype)
+    hout = hn.reshape(B, S, di) * p["mh_norm"].astype(hout.dtype)
+    hout = hout * jax.nn.silu(g.astype(jnp.float32)).astype(hout.dtype)
+    y = jnp.einsum("bse,ed->bsd", hout, p["w_down"].astype(hout.dtype))
+    return x + y, (C, n, m, new_conv)
+
+
+# ----------------------------------------------------------------- sLSTM
+
+def _slstm_dims(cfg: ArchConfig):
+    d = cfg.d_model
+    fs = int(cfg.xlstm.proj_factor_s * d)
+    fs = (fs + 63) // 64 * 64
+    return d // cfg.n_heads, fs
+
+
+def init_slstm_layer(key, cfg: ArchConfig, stacked):
+    d, dt = cfg.d_model, cfg.jdtype
+    H, K = cfg.n_heads, cfg.xlstm.conv_width
+    dh, fs = _slstm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    p = {
+        "ln": L.oinit(stacked + (d,), dt),
+        "conv_w": L.ninit(ks[0], stacked + (K, d), dt, scale=K ** -0.5),
+        "w_gates": L.ninit(ks[1], stacked + (d, 4 * d), jnp.float32),
+        "r_gates": L.ninit(ks[2], stacked + (H, dh, 4 * dh), jnp.float32,
+                           scale=dh ** -0.5),
+        "b_gates": L.zinit(stacked + (4 * d,), jnp.float32),
+        "gn": L.oinit(stacked + (d,), dt),
+        "ln2": L.oinit(stacked + (d,), dt),
+    }
+    p.update(L.init_mlp(ks[3], d, fs, "swiglu", dt, stacked=stacked))
+    return p
+
+
+def slstm_layer_axes(stacked_rank: int):
+    lead = (None,) * stacked_rank
+    return {
+        "ln": P(*lead, None),
+        "conv_w": P(*lead, None, None),
+        "w_gates": P(*lead, None, None),
+        "r_gates": P(*lead, None, None, None),
+        "b_gates": P(*lead, None),
+        "gn": P(*lead, None),
+        "ln2": P(*lead, None),
+        "w_up": P(*lead, None, "ffn"),
+        "w_down": P(*lead, "ffn", None),
+    }
+
+
+def _slstm_cell(carry, gates_t, r_gates, H, dh):
+    """carry: (c,n,h,m) each (B,H,dh); gates_t: (B,4,H,dh) from W·x."""
+    c, n, h, m = carry
+    rec = jnp.einsum("bhd,hde->bhe", h, r_gates).reshape(
+        h.shape[0], H, 4, dh).transpose(0, 2, 1, 3)             # (B,4,H,dh)
+    gi, gf, gz, go = [gates_t[:, j] + rec[:, j] for j in range(4)]
+    lf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(lf + m, gi)
+    ip = jnp.exp(gi - m_new)
+    fp = jnp.exp(lf + m - m_new)
+    c_new = fp * c + ip * jnp.tanh(gz)
+    n_new = fp * n + ip
+    h_new = jax.nn.sigmoid(go) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_layer_apply(x, p, cfg: ArchConfig, ctx=None, state=None,
+                      inner_chunk: int = 256):
+    """x: (B,S,d). Two-level scan (chunked remat) over the scalar recurrence."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    dh = d // H
+    h_in = L.rms_norm(x, p["ln"], cfg.norm_eps)
+    conv_state = None if state is None else state[4]
+    xc, new_conv = L.causal_conv1d(h_in, p["conv_w"], conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32))
+    xr = h_in.astype(jnp.float32)
+    # W·x for all t: i,f from conv'd; z,o from raw
+    wi, wf, wz, wo = jnp.split(p["w_gates"], 4, axis=-1)
+    bi, bf, bz, bo = jnp.split(p["b_gates"], 4, axis=-1)
+    gi = xc @ wi + bi
+    gf = xc @ wf + bf
+    gz = xr @ wz + bz
+    go = xr @ wo + bo
+    gates = jnp.stack([gi, gf, gz, go], 2).reshape(B, S, 4, H, dh)
+
+    if state is None:
+        z = jnp.zeros((B, H, dh), jnp.float32)
+        carry0 = (z, z, z, jnp.full((B, H, dh), NEG, jnp.float32))
+    else:
+        carry0 = tuple(s.astype(jnp.float32) for s in state[:4])
+
+    cell = functools.partial(_slstm_cell, r_gates=p["r_gates"], H=H, dh=dh)
+
+    if S == 1:
+        carry = cell(carry0, gates[:, 0])
+        hs = carry[2][:, None]
+    else:
+        c = min(inner_chunk, S)
+        NC = S // c if S % c == 0 else 1
+        c = S // NC
+        gch = gates.reshape(B, NC, c, 4, H, dh).transpose(1, 2, 0, 3, 4, 5)
+
+        @jax.checkpoint
+        def outer(carry, gc):  # gc: (c,B,4,H,dh)
+            def inner(cr, g_t):
+                cr = cell(cr, g_t)
+                return cr, cr[2]
+            carry, hseq = jax.lax.scan(inner, carry, gc)
+            return carry, hseq                                  # (c,B,H,dh)
+
+        carry, hs = jax.lax.scan(outer, carry0, gch)
+        hs = hs.reshape(NC * c, B, H, dh).transpose(1, 0, 2, 3)  # (B,S,H,dh)
+    hs = hs.reshape(B, S, d)
+    # group norm per head
+    hn = hs.reshape(B, S, H, dh)
+    hn = hn / jnp.sqrt(jnp.mean(jnp.square(hn), -1, keepdims=True) + cfg.norm_eps)
+    y = (hn.reshape(B, S, d) * p["gn"].astype(jnp.float32)).astype(x.dtype)
+    x = x + y
+    h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + L.mlp_apply(h2, p["w_up"], p["w_down"], "swiglu")
+    new_state = carry + (new_conv,) if state is not None else carry + (new_conv,)
+    return x, new_state
+
+
+# ------------------------------------------------------------------ model
+
+def _layout(cfg: ArchConfig):
+    gs = cfg.xlstm.group_size
+    assert cfg.n_layers % gs == 0
+    return cfg.n_layers // gs, gs - 1   # (n_groups, mlstm_per_group)
+
+
+def init(key, cfg: ArchConfig):
+    G, M = _layout(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "embed": L.ninit(ks[0], (cfg.vocab, cfg.d_model), cfg.jdtype, scale=1.0),
+        "mlstm": init_mlstm_layer(ks[1], cfg, (G, M)),
+        "slstm": init_slstm_layer(ks[2], cfg, (G,)),
+        "final_norm": L.oinit((cfg.d_model,), cfg.jdtype),
+        "lm_head": L.ninit(ks[3], (cfg.d_model, cfg.vocab), cfg.jdtype),
+    }
+
+
+def param_axes(cfg: ArchConfig):
+    return {
+        "embed": P("vocab", None),
+        "mlstm": mlstm_layer_axes(2),
+        "slstm": slstm_layer_axes(1),
+        "final_norm": P(None),
+        "lm_head": P(None, "vocab"),
+    }
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(functools.partial(init, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def _backbone(params, x, cfg: ArchConfig, ctx, remat):
+    """x: (B,S,d) -> (B,S,d). Train/prefill path; returns final states too."""
+    mbody = functools.partial(mlstm_layer_apply, cfg=cfg, ctx=ctx)
+    if remat:
+        mbody = jax.checkpoint(mbody)
+
+    def group(x, xs):
+        mparams, sparams = xs
+
+        def mstep(xx, mp):
+            xx, _ = mbody(xx, mp)
+            return xx, None
+
+        x, _ = jax.lax.scan(mstep, x, mparams)
+        x, _ = slstm_layer_apply(x, sparams, cfg, ctx)
+        if ctx is not None:
+            x = ctx.constrain(x, "batch", "seq_tp", None)
+        return x, None
+
+    x, _ = jax.lax.scan(group, x, (params["mlstm"], params["slstm"]))
+    return x
+
+
+def train_loss(params, batch, cfg: ArchConfig, ctx=None, remat=True):
+    from repro.models.transformer import chunked_xent
+    tokens = batch["tokens"]
+    x = L.embed_lookup(params["embed"], tokens).astype(cfg.jdtype)
+    if ctx is not None:
+        x = ctx.constrain(x, "batch", "seq_tp", None)
+    x = _backbone(params, x, cfg, ctx, remat)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    s_nll, s_mask = chunked_xent(x, params["lm_head"], batch["labels"],
+                                 batch["mask"], ctx)
+    return s_nll / jnp.maximum(s_mask, 1.0)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int = 0, ring: bool = True):
+    """Recurrent state: O(1) in sequence length (the xLSTM selling point)."""
+    G, M = _layout(cfg)
+    di, dh = _mlstm_dims(cfg)
+    H, K = cfg.n_heads, cfg.xlstm.conv_width
+    d = cfg.d_model
+    dhs = d // H
+    f32 = jnp.float32
+    z = jnp.zeros
+    return {
+        "mlstm": (z((G, M, batch, H, dh, dh), f32), z((G, M, batch, H, dh), f32),
+                  jnp.full((G, M, batch, H), NEG, f32),
+                  z((G, M, batch, K - 1, di), cfg.jdtype)),
+        "slstm": (z((G, batch, H, dhs), f32), z((G, batch, H, dhs), f32),
+                  z((G, batch, H, dhs), f32),
+                  jnp.full((G, batch, H, dhs), NEG, f32),
+                  z((G, batch, K - 1, d), cfg.jdtype)),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(params, tokens, cfg: ArchConfig, ctx=None, frontend=None):
+    """Prefill via the chunkwise path, materializing final recurrent states."""
+    B, S = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens).astype(cfg.jdtype)
+    if ctx is not None:
+        x = ctx.constrain(x, "batch", "seq_tp", None)
+
+    def group(x, xs):
+        mparams, sparams = xs
+
+        def mstep(xx, mp):
+            # capture final chunk state by re-running state-returning apply
+            xx, st = mlstm_layer_apply(xx, mp, cfg, ctx)
+            return xx, st
+
+        x, mstates = jax.lax.scan(mstep, x, mparams)
+        x, sstate = slstm_layer_apply(x, sparams, cfg, ctx)
+        if ctx is not None:
+            x = ctx.constrain(x, "batch", "seq_tp", None)
+        return x, (mstates, sstate)
+
+    x, (mstates, sstates) = jax.lax.scan(group, x, (params["mlstm"], params["slstm"]))
+    x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))[:, 0]
+    # conv states: mlstm_layer_apply with state=None returns new_conv from
+    # causal_conv1d trained path (last K-1 inputs)
+    cache = {"mlstm": mstates, "slstm": sstates,
+             "pos": jnp.full((), S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, token, cache, cfg: ArchConfig, ctx=None):
+    B = token.shape[0]
+    x = L.embed_lookup(params["embed"], token[:, 0])[:, None, :].astype(cfg.jdtype)
+
+    def group(x, xs):
+        mparams, mstate, sparams, sstate = xs
+
+        def mstep(carry, xs2):
+            xx = carry
+            mp, st = xs2
+            xx, new_st = mlstm_layer_apply(xx, mp, cfg, ctx, state=st)
+            return xx, new_st
+
+        x, new_mstates = jax.lax.scan(mstep, x, (mparams, mstate))
+        x, new_sstate = slstm_layer_apply(x, sparams, cfg, ctx, state=sstate)
+        return x, (new_mstates, new_sstate)
+
+    x, (nm, ns) = jax.lax.scan(
+        group, x, (params["mlstm"], cache["mlstm"], params["slstm"],
+                   cache["slstm"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(x.dtype))[:, 0]
+    return logits, {"mlstm": nm, "slstm": ns, "pos": cache["pos"] + 1}

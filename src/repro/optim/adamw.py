@@ -1,0 +1,119 @@
+"""AdamW with fp32 master weights, ZeRO-1 state sharding, grad clipping and a
+warmup+cosine schedule. Pure pytree functions (no optax dependency)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params):
+    # copy=True: with f32 params, astype would alias the param buffer and
+    # break donation (same buffer donated twice as params AND master)
+    f32 = lambda p: jnp.array(p, dtype=jnp.float32, copy=True)
+    return {
+        "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "master": jax.tree.map(f32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_init(abstract_params):
+    return jax.eval_shape(init, abstract_params)
+
+
+def zero1_spec(spec: P, shape, mesh) -> P:
+    """Insert the ZeRO axis ("data") into the first unsharded, divisible dim
+    of an optimizer-state tensor; no-op if "data" already used or nothing fits."""
+    if mesh is None or "data" not in mesh.shape:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        if e is None:
+            continue
+        used.update(e if isinstance(e, tuple) else (e,))
+    if "data" in used:
+        return P(*entries)
+    dsize = mesh.shape["data"]
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % dsize == 0 and dim >= dsize:
+            entries[i] = "data"
+            break
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def opt_specs(param_spec_tree, abstract_params, mesh):
+    """PartitionSpec tree for the optimizer state (mu/nu/master ZeRO-sharded)."""
+    state_specs = jax.tree.map(
+        lambda spec, p: zero1_spec(spec, p.shape, mesh),
+        param_spec_tree, abstract_params)
+    return {"mu": state_specs, "nu": state_specs, "master": state_specs,
+            "step": P()}
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(l.astype(jnp.float32)))
+              for l in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply(grads, opt, params, cfg: AdamWConfig, grad_specs=None, mesh=None):
+    """One AdamW step. Returns (new_params, new_opt, metrics)."""
+    step = opt["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, mu, nu, master, p):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(g)
+        mhat = mu / b1c
+        nhat = nu / b2c
+        upd = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        # decoupled weight decay (skip 1-d tensors: norms/biases)
+        if master.ndim > 1:
+            upd = upd + cfg.weight_decay * master
+        master = master - lr * upd
+        return mu, nu, master, master.astype(p.dtype)
+
+    out = jax.tree.map(upd, grads, opt["mu"], opt["nu"], opt["master"], params)
+    # unzip the 4-tuples
+    mu = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    nu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    master = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(lambda t: t[3], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_opt = {"mu": mu, "nu": nu, "master": master, "step": step}
+    return new_params, new_opt, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,105 @@
+"""Gradient compression for cross-pod data parallelism.
+
+int8 block-quantized all-reduce with error feedback (EF-SGD style): the
+``pod`` axis crosses the slow inter-pod boundary (DCN/optical), so grads
+are quantized to int8 (32x less wire than fp32, 4x less than bf16) before
+the inter-pod reduction; quantization residual is carried in an error-
+feedback buffer so the optimizer sees an unbiased-in-the-limit gradient.
+
+``compressed_psum`` is the shard_map building block (quantize -> psum of
+int32 accumulators -> dequantize); ``ef_compress`` is the mesh-free
+functional core used by tests and by train drivers on small meshes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x, block: int = 256):
+    """Blockwise symmetric int8 quantization along the last axis."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32), shape, pad
+
+
+def dequantize_int8(q, scale, shape, pad):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def ef_compress(g, ef, block: int = 256) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Error-feedback int8 round trip: returns (g_hat, new_ef)."""
+    target = g + ef
+    q, scale, shape, pad = quantize_int8(target, block)
+    g_hat = dequantize_int8(q, scale, shape, pad)
+    return g_hat, target - g_hat
+
+
+def ef_compress_tree(grads, ef_tree, block: int = 256):
+    out = jax.tree.map(lambda g, e: ef_compress(g, e, block), grads, ef_tree)
+    g_hat = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    return g_hat, new_ef
+
+
+def init_ef(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum(g, axis_name: str, block: int = 256, mean: bool = True):
+    """Inside shard_map: int8-quantize locally, all-gather the int8 payload
+    (+ fp32 block scales) over the slow axis, dequantize EXACTLY with each
+    participant's own scale and sum locally.
+
+    Wire: (g-1)/g x (1 B/elem + 4/block B scales) vs fp32 ring all-reduce
+    2(g-1)/g x 4 B/elem => ~8x less inter-pod traffic. Exact arithmetic
+    given the quantized payloads (the only loss is each sender's local
+    quantization error — carried by the caller's error-feedback buffer)."""
+    q, scale, shape, pad = quantize_int8(g, block)
+    qs = jax.lax.all_gather(q, axis_name)          # (P, nblk, block) int8
+    ss = jax.lax.all_gather(scale, axis_name)      # (P, nblk, 1) f32
+    total = jnp.sum(qs.astype(jnp.float32) * ss, axis=0)
+    flat = total.reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    out = flat.reshape(shape)
+    if mean:
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        out = out / n
+    return out
+
+
+def compressed_psum_ef(g, ef, axis_name: str, block: int = 256,
+                       mean: bool = True):
+    """Error-feedback variant: compresses (g + ef), returns the exact sum
+    of the quantized payloads and the new local residual."""
+    target = g.astype(jnp.float32) + ef
+    q, scale, shape, pad = quantize_int8(target, block)
+    local_dq = dequantize_int8(q, scale, shape, pad)
+    new_ef = target - local_dq
+    qs = jax.lax.all_gather(q, axis_name)
+    ss = jax.lax.all_gather(scale, axis_name)
+    total = jnp.sum(qs.astype(jnp.float32) * ss, axis=0)
+    flat = total.reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    out = flat.reshape(shape)
+    if mean:
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        out = out / n
+    return out, new_ef

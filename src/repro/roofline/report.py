@@ -1,0 +1,96 @@
+"""Render the §Roofline table from experiments/dryrun JSON records.
+
+Per (arch x shape) on the single-pod mesh: the three terms in seconds, the
+dominant bottleneck, MODEL_FLOPS (6ND train / 2ND prefill-decode, active
+params for MoE), useful-FLOPs ratio, and a one-line "what would move the
+dominant term" note.
+
+Usage: PYTHONPATH=src python -m repro.roofline.report [--mesh pod] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.roofline.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+BASE = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+SKIPPED_LONG = ["whisper-medium", "qwen2-7b", "yi-34b", "granite-20b",
+                "minitron-8b", "deepseek-moe-16b", "paligemma-3b"]
+
+NOTES = {
+    ("compute", "train"): "cut remat recompute / larger microbatch",
+    ("compute", "prefill"): "fused flash kernel; fewer replicated attn flops",
+    ("compute", "decode"): "batch more tokens per step (decode is tiny)",
+    ("memory", "train"): "fuse attention (Pallas) to kill score traffic; "
+                         "keep weights resident across microbatches",
+    ("memory", "prefill"): "flash fusion removes O(S*bk) intermediate traffic",
+    ("memory", "decode"): "KV cache read dominates: quantize cache / GQA-pack",
+    ("collective", "train"): "overlap grad RS/AG with backward; shard-stationary layout",
+    ("collective", "prefill"): "avoid per-layer KV all-gather (scheme-A heads or CP)",
+    ("collective", "decode"): "keep decode activations replicated; batch AR of stats",
+}
+
+
+def load(mesh: str):
+    rows = []
+    d = BASE / mesh
+    for f in sorted(d.glob("*.json")):
+        r = json.loads(f.read_text())
+        if "__" in f.stem and r.get("tag"):
+            continue  # tagged experiment variants, not baseline
+        rows.append(r)
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    return rows
+
+
+def fmt_row(r):
+    rl = r["roofline"]
+    kind = ("train" if r["shape"].startswith("train") else
+            "prefill" if r["shape"].startswith("prefill") else "decode")
+    dom = rl["dominant"]
+    bound = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+    useful_s = r["model_flops_per_device"] / PEAK_FLOPS
+    frac = useful_s / bound if bound else 0.0
+    return {
+        "arch": r["arch"], "shape": r["shape"],
+        "compute_s": rl["compute_s"], "memory_s": rl["memory_s"],
+        "collective_s": rl["collective_s"], "dominant": dom,
+        "model_flops": r["model_flops_total"],
+        "useful_ratio": r.get("useful_flops_ratio", 0.0),
+        "roofline_frac": frac,
+        "hbm_gb": r["memory"]["peak_hbm_bytes"] / 2**30,
+        "note": NOTES.get((dom, kind), ""),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = [fmt_row(r) for r in load(args.mesh)]
+    if args.md:
+        print("| arch | shape | compute_s | memory_s | collective_s | "
+              "dominant | useful/HLO | roofline_frac | HBM GiB/dev | "
+              "lever |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
+        for w in rows:
+            print(f"| {w['arch']} | {w['shape']} | {w['compute_s']:.4f} | "
+                  f"{w['memory_s']:.4f} | {w['collective_s']:.4f} | "
+                  f"{w['dominant']} | {w['useful_ratio']:.3f} | "
+                  f"{w['roofline_frac']:.3f} | {w['hbm_gb']:.1f} | "
+                  f"{w['note']} |")
+        for a in SKIPPED_LONG:
+            print(f"| {a} | long_500k | — | — | — | skipped | — | — | — | "
+                  f"full attention: sub-quadratic required (DESIGN.md §4) |")
+    else:
+        for w in rows:
+            print(w)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Sharding context: logical-axis -> mesh-axis resolution with divisibility
+fallback.
+
+Models annotate tensors with *logical* axes ("batch", "vocab", "qdim", ...).
+``ShardCtx`` resolves them against the active mesh: a logical axis maps to a
+tuple of candidate mesh axes; the longest prefix whose size product divides
+the dim (and whose mesh axes are still unused in this spec) wins. This is
+what makes one sharding ruleset work across all 10 archs (28 heads, 25 heads,
+kv=1 ... nothing has to divide 16 except the merged dims, which always do).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> ordered mesh-axis candidates (joint sharding tuple)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "batch_data": ("data",),          # data-only (pod kept for grad hierarchy)
+    "expert": ("model",),
+    "vocab": ("model",),
+    "qdim": ("model",),               # merged n_heads*head_dim
+    "kvdim": ("model",),              # merged n_kv_heads*head_dim
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "d_model": (),                    # activations' feature dim: replicated
+    "d_model_shard": ("model",),      # row-parallel weight input dim (unused by default)
+    "seq": (),
+    "seq_tp": ("model",),             # scheme-B attention: sequence over model
+    # cache seq: prefers data+model jointly; when batch already took "data"
+    # (decode_32k) the resolver falls back to model-only; when batch is 1
+    # (long_500k) the cache spreads over all 256 chips.
+    "cache_seq": ("data", "model"),
+    "frames": (),
+    "state": (),
+    "zero": ("data",),                # ZeRO-1 optimizer-state sharding
+    "inner": ("model",),              # SSM/xLSTM inner projection dim
+    "replicated": (),
+}
+
+
+@dataclasses.dataclass
+class ShardCtx:
+    mesh: Optional[Mesh] = None
+    rules: dict = dataclasses.field(default_factory=lambda: dict(DEFAULT_RULES))
+
+    def axis_size(self, name: str) -> int:
+        if self.mesh is None or name not in self.mesh.shape:
+            return 1
+        return self.mesh.shape[name]
+
+    def spec(self, axes: Sequence[Optional[str]], dims: Sequence[int]) -> P:
+        """Resolve logical axes for a tensor of shape ``dims`` to a PartitionSpec.
+
+        ``axes`` may be a tuple of logical names or a PartitionSpec carrying
+        logical names (models annotate with ``P("vocab", None)`` so the axes
+        pytrees have leaf semantics). Shorter ``axes`` are right-padded.
+        """
+        if self.mesh is None:
+            return P()
+        axes = tuple(axes) + (None,) * (len(dims) - len(tuple(axes)))
+        used = set()
+        out = []
+        for ax, dim in zip(axes, dims):
+            if ax is None:
+                out.append(None)
+                continue
+            cands = self.rules.get(ax, ())
+            cands = tuple(a for a in cands if a in self.mesh.shape and a not in used)
+            picked: Tuple[str, ...] = ()
+            # longest prefix of candidates whose product divides the dim
+            for k in range(len(cands), 0, -1):
+                prefix = cands[:k]
+                size = 1
+                for a in prefix:
+                    size *= self.mesh.shape[a]
+                if size > 1 and dim % size == 0:
+                    picked = prefix
+                    break
+            if picked:
+                used.update(picked)
+                out.append(picked if len(picked) > 1 else picked[0])
+            else:
+                out.append(None)
+        while out and out[-1] is None:
+            out.pop()
+        return P(*out)
+
+    def sharding(self, axes, dims) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(axes, dims))
+
+    def constrain(self, x, *axes):
+        """with_sharding_constraint against resolved logical axes (no-op w/o mesh)."""
+        if self.mesh is None:
+            return x
+        spec = self.spec(axes, x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+
+def tree_specs(ctx: ShardCtx, abstract_tree, axes_tree):
+    """Map parallel (ShapeDtypeStruct, logical-axes-as-PartitionSpec) pytrees
+    to a concrete PartitionSpec tree. Axes leaves are ``P(<logical>, ...)``
+    (PartitionSpec is an unregistered pytree type, i.e. a leaf)."""
+    return jax.tree.map(lambda sds, axes: ctx.spec(axes, sds.shape),
+                        abstract_tree, axes_tree)
+
+
+def tree_shardings(ctx: ShardCtx, abstract_tree, axes_tree):
+    return jax.tree.map(
+        lambda sds, axes: NamedSharding(ctx.mesh, ctx.spec(axes, sds.shape)),
+        abstract_tree, axes_tree)

@@ -1,0 +1,165 @@
+"""ERSAP-analog streaming inference engine (paper §5 workload + §6 queue).
+
+Pipeline: RequestSource (Poisson sender) -> FIFO queue -> batcher ->
+serving replicas (real prefill+decode on the mesh) -> sink. Each replica
+is a JIRIAF pod on a VirtualNode, exports metrics (queue depth, served,
+latency) through the §4.6 monitoring stack, and the control loop couples
+the §4.4 HPA and the §6 digital twin to elastic replica scaling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.hpa import HPA, HPAConfig, MetricSample
+from repro.core.jrm import VirtualNode
+from repro.core.metrics import (Endpoint, Prometheus, Registry, Service,
+                                ServiceMonitor)
+from repro.core.state_machine import Container, Pod
+from repro.core.digital_twin.control import ControlPolicy, replicas_for_control
+from repro.core.digital_twin.dbn import DigitalTwin
+from repro.data.pipeline import Request, RequestSource
+from repro.models import model_api as MA
+
+
+@dataclass
+class ReplicaStats:
+    served: int = 0
+    tokens: int = 0
+
+
+@dataclass
+class StreamEngine:
+    cfg: ArchConfig
+    serving: object                   # ElasticServing
+    nodes: List[VirtualNode]
+    max_batch: int = 8
+    service_rate: float = 40.0        # requests/s one replica can absorb
+    queue: List[Request] = field(default_factory=list)
+    source: RequestSource = field(default_factory=RequestSource)
+    pods: Dict[str, Pod] = field(default_factory=dict)
+    registries: Dict[str, Registry] = field(default_factory=dict)
+    prom: Prometheus = field(default_factory=Prometheus)
+    stats: Dict[str, ReplicaStats] = field(default_factory=dict)
+    completed: list = field(default_factory=list)
+    control: int = 16
+    twin: DigitalTwin = field(default_factory=DigitalTwin)
+    policy: ControlPolicy = field(default_factory=ControlPolicy)
+    hpa: Optional[HPA] = None
+    base_replicas: int = 1
+    use_twin: bool = True
+    history: list = field(default_factory=list)
+
+    # ------------------------------------------------------------ setup
+    def deploy(self, now: float = 0.0):
+        """Create one pod per current replica on the least-loaded nodes and
+        wire the monitoring stack (Service + ServiceMonitor + Prometheus)."""
+        svc = Service("ersap-metrics", selector={"app": "ersap"},
+                      labels={"monitored": "true"})
+        for i in range(self.serving.replicas):
+            name = f"ersap-{i}"
+            if name in self.pods:
+                continue
+            pod = Pod(name=name,
+                      containers=[Container(name="ersap-engine")],
+                      labels={"app": "ersap"},
+                      tolerations=[{"key": "virtual-kubelet.io/provider",
+                                    "value": "mock"}],
+                      request_chips=self.serving.tp)
+            node = min(self.nodes, key=lambda n: n.used_chips())
+            node.create_pod(pod, now)
+            self.pods[name] = pod
+            reg = Registry(port=2221)
+            self.registries[name] = reg
+            self.stats[name] = ReplicaStats()
+            svc.add_endpoint(Endpoint(
+                pod=name, pod_ip=node.pod_ip, port=2221,
+                cp_port=20000 + i, registry=reg))
+        # retire pods beyond replica count (scale down)
+        for i in range(self.serving.replicas, len(self.pods)):
+            name = f"ersap-{i}"
+            pod = self.pods.pop(name, None)
+            if pod and pod.node:
+                node = next(n for n in self.nodes if n.name == pod.node)
+                node.delete_pod(name, now)
+                self.registries.pop(name, None)
+        self.prom.services = [svc]
+        if not self.prom.monitors:
+            self.prom.monitors = [ServiceMonitor(
+                "ersap-mon", service_selector={"monitored": "true"})]
+
+    # ------------------------------------------------------------- tick
+    def tick(self, now: float, dt: float, lam: float):
+        """One engine step of simulated time dt with arrival rate lam."""
+        self.queue.extend(self.source.arrivals(now, dt, lam))
+        # per-replica service capacity this tick (mu * dt, M/M/1 analog —
+        # doubling replicas doubles capacity, the paper's 16->32 threads)
+        budget = int(self.service_rate * dt)
+        for i in range(self.serving.replicas):
+            name = f"ersap-{i}"
+            reg = self.registries.get(name)
+            if reg is None:
+                continue
+            n_take = min(len(self.queue), budget)
+            took, self.queue = self.queue[:n_take], self.queue[n_take:]
+            for j in range(0, len(took), self.max_batch):
+                chunk = took[j:j + self.max_batch]
+                self._process(chunk, name, now)
+            reg.gauge("ersap_queue_len").set(len(self.queue))
+            reg.counter("ersap_served_total")
+        self.prom.scrape(now)
+        self.history.append((now, len(self.queue), self.serving.replicas,
+                             self.control))
+        return len(self.queue)
+
+    def _process(self, requests: List[Request], replica: str, now: float):
+        """Actually run the model: batched prefill + greedy decode."""
+        if not requests:
+            return
+        B = len(requests)
+        plen = requests[0].prompt_len
+        rng = np.random.default_rng(int(now * 1000) % (2**31))
+        toks = rng.integers(0, self.cfg.vocab, (B, plen)).astype(np.int32)
+        logits, cache = self.serving.prefill_fn(self.serving.params, toks)
+        cache = MA.grow_cache(self.cfg, cache,
+                              plen + (self.cfg.n_meta_tokens or 0)
+                              + max(r.max_new for r in requests) + 1)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        n_new = max(r.max_new for r in requests)
+        for _ in range(n_new):
+            logits, cache = self.serving.decode_fn(self.serving.params, tok,
+                                                   cache)
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        reg = self.registries[replica]
+        st = self.stats[replica]
+        st.served += B
+        st.tokens += B * n_new
+        reg.counter("ersap_served_total").inc(B)
+        reg.counter("ersap_tokens_total").inc(B * n_new)
+        for r in requests:
+            reg.histogram("ersap_latency_s").observe(max(now - r.arrival, 0.0))
+            self.completed.append((r.rid, now))
+
+    # ---------------------------------------------------------- control
+    def control_step(self, now: float):
+        """Assimilate queue depth into the twin; recommend capacity; apply
+        via elastic scaling. HPA path available for the reactive baseline."""
+        qlen = max(len(self.queue), 1e-3)
+        self.twin.assimilate(qlen, self.control)
+        if self.use_twin:
+            self.control = self.policy.recommend(self.twin, self.control, now)
+            desired = replicas_for_control(self.control, self.base_replicas)
+        else:
+            samples = {name: MetricSample(qlen / max(len(self.pods), 1), now)
+                       for name in self.pods}
+            desired = self.hpa.evaluate(list(self.pods.values()), samples, now)
+        desired = min(desired, self.serving.max_replicas())
+        if desired != self.serving.replicas:
+            self.serving.scale_to(desired, now)
+            self.deploy(now)
+        return desired

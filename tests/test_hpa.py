@@ -1,0 +1,88 @@
+"""HPA per paper §4.4: Eq. (1), readiness gating, stabilization."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hpa import (HPA, HPAConfig, MetricSample, desired_replicas,
+                            pod_is_unready)
+from repro.core.state_machine import Container, Pod, create_pod_container
+
+
+def ready_pod(name, now):
+    p = Pod(name, [Container("c")])
+    create_pod_container(p.containers[0], now)
+    p.set_conditions_create(now)
+    return p
+
+
+def test_eq1_paper_example():
+    """§4.4.4: 4 replicas at 90% vs target 50% -> ceil(7.2) = 8."""
+    assert desired_replicas(4, 90.0, 50.0) == 8
+
+
+@settings(max_examples=100, deadline=None)
+@given(current=st.integers(1, 64),
+       metric=st.floats(0.01, 1e4),
+       target=st.floats(0.01, 1e4))
+def test_eq1_properties(current, metric, target):
+    d = desired_replicas(current, metric, target)
+    assert d == math.ceil(current * metric / target)
+    assert d >= 1 or metric == 0
+    # monotonicity in the metric
+    assert desired_replicas(current, metric * 2, target) >= d
+
+
+def test_readiness_gating_initialization_period():
+    """Port of the §4.4.2 snippet: within cpuInitializationPeriod a pod is
+    unready if not Ready or its sample predates readiness + window."""
+    cfg = HPAConfig(target=50.0)
+    pod = ready_pod("p", now=0.0)
+    fresh = MetricSample(10.0, timestamp=200.0, window=60.0)
+    stale = MetricSample(10.0, timestamp=30.0, window=60.0)
+    assert not pod_is_unready(pod, fresh, now=100.0, cfg=cfg)
+    assert pod_is_unready(pod, stale, now=100.0, cfg=cfg)
+    # after the initialization period, Ready pods count regardless
+    assert not pod_is_unready(pod, stale, now=1000.0, cfg=cfg)
+    # missing start_time => unready
+    p2 = Pod("q", [Container("c")])
+    assert pod_is_unready(p2, fresh, now=100.0, cfg=cfg)
+
+
+def test_hpa_scale_up_and_stabilized_scale_down():
+    cfg = HPAConfig(target=50.0, max_replicas=10,
+                    scale_down_stabilization=300.0,
+                    cpu_initialization_period=0.0)
+    hpa = HPA(cfg)
+    pods = [ready_pod(f"p{i}", now=-1000.0) for i in range(4)]
+    hot = {p.name: MetricSample(90.0, timestamp=0.0) for p in pods}
+    assert hpa.evaluate(pods, hot, now=0.0) == 8
+    # load drops: scale-down is held while the 8-recommendation from t=0 is
+    # still inside the 300s window...
+    pods8 = [ready_pod(f"p{i}", now=-1000.0) for i in range(8)]
+    cold = {p.name: MetricSample(10.0, timestamp=200.0) for p in pods8}
+    held = hpa.evaluate(pods8, cold, now=200.0)
+    assert held == 8        # max recommendation in window still 8
+    # ...and released once that recommendation ages out of the window
+    later = {p.name: MetricSample(10.0, timestamp=700.0) for p in pods8}
+    assert hpa.evaluate(pods8, later, now=700.0) < 8
+
+
+def test_hpa_tolerance_deadband():
+    cfg = HPAConfig(target=50.0, tolerance=0.1,
+                    cpu_initialization_period=0.0)
+    hpa = HPA(cfg)
+    pods = [ready_pod(f"p{i}", now=-100.0) for i in range(4)]
+    near = {p.name: MetricSample(52.0, timestamp=0.0) for p in pods}
+    assert hpa.evaluate(pods, near, now=0.0) == 4   # within 10% deadband
+
+
+@settings(max_examples=50, deadline=None)
+@given(metric=st.floats(1.0, 500.0), n=st.integers(1, 12))
+def test_hpa_bounds_property(metric, n):
+    cfg = HPAConfig(target=50.0, min_replicas=2, max_replicas=6,
+                    cpu_initialization_period=0.0)
+    hpa = HPA(cfg)
+    pods = [ready_pod(f"p{i}", now=-100.0) for i in range(n)]
+    samples = {p.name: MetricSample(metric, timestamp=0.0) for p in pods}
+    d = hpa.evaluate(pods, samples, now=0.0)
+    assert 2 <= d <= 6 or d == n

@@ -1,0 +1,174 @@
+"""JRM/JFM/JMS/JCS/JFE behaviors (paper §3, §4.1-4.2, §4.5, §5.1)."""
+import pytest
+
+from repro.core.jcs import CentralService
+from repro.core.jfe import FrontEnd
+from repro.core.jfm import FacilityManager
+from repro.core.jms import MatchingService
+from repro.core.jrm import SliceSpec, VirtualNode, start_vk
+from repro.core.state_machine import Container, Pod
+
+TOL = [{"key": "virtual-kubelet.io/provider", "value": "mock"}]
+
+
+def mkpod(name="p", chips=1, hbm=2 << 30, affinity=(), selector=None):
+    return Pod(name, [Container("c")], tolerations=list(TOL),
+               affinity=list(affinity), node_selector=selector or {},
+               request_chips=chips, request_hbm_bytes=hbm)
+
+
+def test_walltime_lease_notready_but_not_terminated():
+    n = start_vk("vk", walltime=100.0, now=0.0)
+    assert n.tick(50.0)
+    assert n.labels(50.0)["jiriaf.alivetime"] == "50"
+    assert not n.tick(101.0)          # lease expired -> NotReady
+    assert n.pods is not None         # VK not terminated (paper §4.2.3)
+    # walltime=0 => no alivetime label, no expiry
+    n0 = start_vk("vk0", walltime=0.0, now=0.0)
+    assert "jiriaf.alivetime" not in n0.labels(1e9)
+    assert n0.tick(1e9)
+
+
+def test_affinity_paper_example():
+    """§4.2.3 example: nodetype In [cpu], site In [nersc], alivetime Gt 10."""
+    expr = [
+        {"key": "jiriaf.nodetype", "operator": "In", "values": ["cpu"]},
+        {"key": "jiriaf.site", "operator": "In", "values": ["nersc"]},
+        {"key": "jiriaf.alivetime", "operator": "Gt", "values": ["10"]},
+    ]
+    good = start_vk("a", nodetype="cpu", site="nersc", walltime=100, now=0.0)
+    assert good.matches(expr, now=0.0)
+    assert not good.matches(expr, now=95.0)       # alivetime 5 < 10
+    wrong_site = start_vk("b", nodetype="cpu", site="jlab", walltime=100, now=0)
+    assert not wrong_site.matches(expr, now=0.0)
+
+
+def test_taint_requires_toleration():
+    n = start_vk("vk", now=0.0)
+    bad = Pod("bad", [Container("c")])
+    with pytest.raises(PermissionError):
+        n.create_pod(bad, 0.0)
+    ok = mkpod()
+    n.create_pod(ok, 0.0)
+    assert ok.node == "vk"
+
+
+def test_jfm_scrape_stale_and_straggler():
+    nodes = [start_vk(f"n{i}", now=0.0, slice_spec=SliceSpec(chips=4))
+             for i in range(4)]
+    for i, n in enumerate(nodes):
+        n.tick(10.0, latency=0.1 if i < 3 else 5.0)
+    nodes[0].last_heartbeat = -100.0          # stale
+    fm = FacilityManager()
+    pool = fm.scrape(nodes, now=10.0)
+    assert not pool["n0"].ready
+    assert pool["n3"].straggler and not pool["n1"].straggler
+    assert fm.total_free_chips() == 12        # 3 ready x 4 chips
+
+
+def test_jms_best_fit_and_constraints():
+    big = start_vk("big", now=0.0, slice_spec=SliceSpec(chips=8))
+    small = start_vk("small", now=0.0, slice_spec=SliceSpec(chips=2))
+    lease = start_vk("short", walltime=50.0, now=0.0,
+                     slice_spec=SliceSpec(chips=2))
+    nodes = [big, small, lease]
+    for n in nodes:
+        n.tick(0.0)
+    fm = FacilityManager()
+    fm.scrape(nodes, 0.0)
+    jms = MatchingService(fm)
+    # best fit: 2-chip pod goes to the tightest node with enough walltime
+    res = jms.bind(mkpod(chips=2), nodes, 0.0, expected_duration=100.0)
+    assert res.node == "small"            # lease node excluded (50s < 100+60)
+    fm.scrape(nodes, 0.0)
+    res2 = jms.match(mkpod("p2", chips=16), nodes, 0.0)
+    assert res2.node is None
+
+
+def test_jms_prefers_non_straggler():
+    a = start_vk("a", now=0.0, slice_spec=SliceSpec(chips=4))
+    b = start_vk("b", now=0.0, slice_spec=SliceSpec(chips=4))
+    a.tick(0.0, latency=9.0)
+    b.tick(0.0, latency=0.1)
+    c = start_vk("c", now=0.0, slice_spec=SliceSpec(chips=4))
+    c.tick(0.0, latency=0.1)
+    fm = FacilityManager()
+    fm.scrape([a, b, c], 0.0)
+    res = MatchingService(fm).match(mkpod(chips=4), [a, b, c], 0.0)
+    assert res.node in ("b", "c")
+
+
+def test_jcs_pilot_staggered_ports_and_walltime_margin():
+    fe = FrontEnd()
+    wf = fe.add_wf("vk-nersc", 5, walltime=300.0)
+    jcs = CentralService(fe)
+    pilot = jcs.launch_pilot(wf, now=0.0)
+    assert len(pilot.nodes) == 5
+    nodes = jcs.node_list()
+    # staggered bring-up (sleep 3 per paper §5.1)
+    assert nodes[1].created_at - nodes[0].created_at == pytest.approx(3.0)
+    # §4.5.4: JRM walltime is 60s less than the Slurm walltime
+    assert nodes[0].walltime == pytest.approx(240.0)
+    # port ranges per §4.5.2
+    for t in pilot.tunnels:
+        if t.kind == "kubelet":
+            assert 10000 <= t.local_port <= 19999
+        if t.kind.startswith("custom-metrics"):
+            assert 20000 <= t.local_port <= 49999
+    jcs.teardown(wf.wf_id, 10.0)
+    assert fe.table[wf.wf_id].state == "COMPLETED"
+    assert not jcs.node_list()
+
+
+def test_jfe_workflow_verbs():
+    fe = FrontEnd()
+    wf = fe.add_wf("vk", 2)
+    assert [w.wf_id for w in fe.get_wf()] == [wf.wf_id]
+    gone = fe.delete_wf(wf.wf_id)
+    assert gone.state == "ARCHIVED" and not fe.get_wf()
+
+
+def test_node_failure_reschedule():
+    """Fault-tolerance loop: a pod's node dies (heartbeat stops), JFM marks
+    it NotReady, and JMS reschedules the pod onto a surviving node."""
+    a = start_vk("a", now=0.0, slice_spec=SliceSpec(chips=4))
+    b = start_vk("b", now=0.0, slice_spec=SliceSpec(chips=4))
+    nodes = [a, b]
+    for n in nodes:
+        n.tick(0.0)
+    fm = FacilityManager(stale_after=30.0)
+    fm.scrape(nodes, 0.0)
+    jms = MatchingService(fm)
+    pod = mkpod("worker", chips=4)
+    res = jms.bind(pod, nodes, 0.0)
+    victim = next(n for n in nodes if n.name == res.node)
+    survivor = next(n for n in nodes if n.name != res.node)
+    # victim stops heartbeating; JFM declares it dead on next scrape
+    survivor.tick(100.0)
+    pool = fm.scrape(nodes, 100.0)
+    assert not pool[victim.name].ready
+    assert pool[survivor.name].ready
+    # reschedule: new incarnation of the pod binds to the survivor
+    pod2 = mkpod("worker-retry", chips=4)
+    res2 = jms.bind(pod2, nodes, 100.0)
+    assert res2.node == survivor.name
+    assert pod2.phase.value == "Running"
+
+
+def test_walltime_drain_then_requeue_flow():
+    """§4.5.4 end-to-end at the control-plane level: lease near expiry ->
+    node drains -> JMS refuses new long work on it but accepts elsewhere."""
+    short = start_vk("short", walltime=100.0, now=0.0,
+                     slice_spec=SliceSpec(chips=4))
+    fresh = start_vk("fresh", walltime=10_000.0, now=0.0,
+                     slice_spec=SliceSpec(chips=4))
+    nodes = [short, fresh]
+    now = 50.0  # inside short's 60s drain margin (alive_left = 50)
+    for n in nodes:
+        n.tick(now)
+    assert short.draining(now) and not fresh.draining(now)
+    fm = FacilityManager()
+    fm.scrape(nodes, now)
+    jms = MatchingService(fm)
+    res = jms.bind(mkpod(chips=4), nodes, now, expected_duration=300.0)
+    assert res.node == "fresh"

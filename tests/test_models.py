@@ -1,0 +1,164 @@
+"""Per-arch smoke tests (reduced configs): one forward/train step on CPU,
+output shapes + no NaNs; prefill/decode consistency per family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config, shapes_for
+from repro.models import model_api as MA
+
+
+def make_batch(cfg, B=2, S=32, key=None):
+    key = key or jax.random.PRNGKey(1)
+    k1, k2, k3 = jax.random.split(key, 3)
+    batch = {"tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab),
+             "labels": jax.random.randint(k2, (B, S), 0, cfg.vocab),
+             "mask": jnp.ones((B, S), jnp.float32)}
+    if cfg.frontend:
+        batch["frontend"] = jax.random.normal(
+            k3, (B, cfg.frontend_seq, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch).reduced()
+    mod = MA.get_module(cfg)
+    params = mod.init(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg)
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p, b: mod.train_loss(p, b, cfg)))(params, batch)
+    assert loss.shape == ()
+    assert jnp.isfinite(loss)
+    flat = jax.tree.leaves(grads)
+    assert all(jnp.all(jnp.isfinite(g)) for g in flat)
+    # param tree structure matches grads
+    assert jax.tree.structure(params) == jax.tree.structure(grads)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_prefill_decode_shapes(arch):
+    cfg = get_config(arch).reduced()
+    mod = MA.get_module(cfg)
+    params = mod.init(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    batch = make_batch(cfg, B, S)
+    logits, cache = jax.jit(lambda p, t: mod.prefill(
+        p, t, cfg, frontend=batch.get("frontend")))(params, batch["tokens"])
+    assert logits.shape == (B, cfg.vocab)
+    assert jnp.all(jnp.isfinite(logits))
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, cache2 = jax.jit(lambda p, t, c: mod.decode_step(
+        p, t, c, cfg))(params, tok, cache)
+    assert logits2.shape == (B, cfg.vocab)
+    assert jnp.all(jnp.isfinite(logits2))
+    assert int(cache2["pos"]) == int(cache["pos"]) + 1
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "yi-34b", "granite-20b",
+                                  "minitron-8b", "xlstm-1.3b", "hymba-1.5b",
+                                  "whisper-medium"])
+def test_prefill_decode_consistency(arch):
+    """prefill(full) last logits == prefill(half) + token-by-token decode."""
+    cfg = get_config(arch).reduced()
+    mod = MA.get_module(cfg)
+    params = mod.init(jax.random.PRNGKey(0), cfg)
+    B, S, Sp = 2, 24, 12
+    batch = make_batch(cfg, B, S)
+    fe = batch.get("frontend")
+    full, _ = jax.jit(lambda p, t: mod.prefill(p, t, cfg, frontend=fe))(
+        params, batch["tokens"])
+    _, cache = jax.jit(lambda p, t: mod.prefill(p, t, cfg, frontend=fe))(
+        params, batch["tokens"][:, :Sp])
+    cache = MA.grow_cache(cfg, cache, S + (cfg.frontend_seq or 0)
+                          + (cfg.n_meta_tokens or 0))
+    dec = jax.jit(lambda p, t, c: mod.decode_step(p, t, c, cfg))
+    lg = None
+    for i in range(Sp, S):
+        lg, cache = dec(params, batch["tokens"][:, i:i + 1], cache)
+    assert jnp.max(jnp.abs(lg - full)) < 5e-2
+
+
+@pytest.mark.parametrize("arch", ["deepseek-moe-16b", "llama4-scout-17b-a16e"])
+def test_moe_dropless_consistency(arch):
+    """With capacity >= S the MoE path is exact; prefill == decode chain."""
+    cfg = get_config(arch).reduced()
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+        cfg.moe, capacity_factor=float(cfg.moe.n_routed / cfg.moe.top_k)))
+    mod = MA.get_module(cfg)
+    params = mod.init(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    full, _ = jax.jit(lambda p, t: mod.prefill(p, t, cfg))(params, toks)
+    cache = mod.init_cache(cfg, B, S + 4)
+    dec = jax.jit(lambda p, t, c: mod.decode_step(p, t, c, cfg))
+    lg = None
+    for i in range(S):
+        lg, cache = dec(params, toks[:, i:i + 1], cache)
+    assert jnp.max(jnp.abs(lg - full)) < 5e-2
+
+
+def test_moe_capacity_drops_tokens_but_stays_finite():
+    cfg = get_config("deepseek-moe-16b").reduced()
+    mod = MA.get_module(cfg)
+    params = mod.init(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, 2, 32)
+    loss = jax.jit(lambda p, b: mod.train_loss(p, b, cfg))(params, batch)
+    assert jnp.isfinite(loss)
+
+
+def test_all_configs_match_assignment():
+    """Spot-check the exact assigned hyperparameters."""
+    c = get_config("qwen2-7b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab, c.qkv_bias) == (28, 3584, 28, 4, 18944, 152064, True)
+    c = get_config("yi-34b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (60, 7168, 56, 8, 20480, 64000)
+    c = get_config("granite-20b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (52, 6144, 48, 1, 24576, 49152)
+    c = get_config("minitron-8b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab, c.mlp) == (32, 4096, 32, 8, 16384, 256000, "relu2")
+    c = get_config("llama4-scout-17b-a16e")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.vocab,
+            c.moe.n_routed, c.moe.top_k) == (48, 5120, 40, 8, 202048, 16, 1)
+    c = get_config("deepseek-moe-16b")
+    assert (c.n_layers, c.d_model, c.moe.n_routed, c.moe.top_k,
+            c.moe.n_shared, c.moe.d_ff_expert, c.vocab) == \
+        (28, 2048, 64, 6, 2, 1408, 102400)
+    c = get_config("paligemma-3b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab, c.frontend) == (18, 2048, 8, 1, 16384, 257216, "vision")
+    c = get_config("whisper-medium")
+    assert (c.n_layers, c.encdec.n_enc_layers, c.d_model, c.n_heads,
+            c.d_ff, c.vocab, c.encdec.enc_seq) == \
+        (24, 24, 1024, 16, 4096, 51865, 1500)
+    c = get_config("xlstm-1.3b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab, c.d_ff) == \
+        (48, 2048, 4, 50304, 0)
+    c = get_config("hymba-1.5b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab, c.ssm.state_dim) == (32, 1600, 25, 5, 5504, 32001, 16)
+
+
+def test_long_500k_gating():
+    """long_500k only for sub-quadratic archs (DESIGN.md §4)."""
+    subq = {a for a in ARCH_IDS
+            if any(s.name == "long_500k" for s in
+                   shapes_for(get_config(a)))}
+    assert subq == {"xlstm-1.3b", "hymba-1.5b", "llama4-scout-17b-a16e"}
+
+
+def test_ring_cache_bounded_for_long_context():
+    """Sub-quadratic archs keep O(window/chunk) decode state at 500k."""
+    from repro.configs.base import SHAPES
+    for arch in ("llama4-scout-17b-a16e", "hymba-1.5b", "xlstm-1.3b"):
+        cfg = get_config(arch)
+        cache, _ = MA.cache_specs(cfg, SHAPES["long_500k"])
+        leaves = jax.tree.leaves(cache)
+        total = sum(l.size * l.dtype.itemsize for l in leaves)
+        assert total < 4 << 30, f"{arch} long-context state too big: {total}"

@@ -1,0 +1,119 @@
+"""Paper §4.3: container/pod lifecycle state machines (Tables 6/7)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.state_machine import (CREATE_STAGES, CREATE_UIDS, GET_UIDS,
+                                      Condition, ConditionStatus, Container,
+                                      ContainerPhase, Pod, PodPhase,
+                                      create_pod_container,
+                                      get_pods_container)
+
+
+def test_table6_uid_indices_verbatim():
+    assert CREATE_UIDS == {
+        "create-cont-readDefaultVolDirError": 0,
+        "create-cont-copyFileError": 1,
+        "create-cont-cmdStartError": 2,
+        "create-cont-getPgidError": 3,
+        "create-cont-createStdoutFileError": 4,
+        "create-cont-createStderrFileError": 5,
+        "create-cont-cmdWaitError": 6,
+        "create-cont-writePgidError": 7,
+        "create-cont-containerStarted": 8,
+    }
+
+
+def test_table7_uid_indices_verbatim():
+    assert GET_UIDS == {
+        "get-cont-create": 0,
+        "get-cont-getPidsError": 1,
+        "get-cont-getStderrFileInfoError": 2,
+        "get-cont-stderrNotEmpty": 3,
+        "get-cont-completed": 4,
+        "get-cont-running": 5,
+    }
+
+
+def test_create_happy_path():
+    c = Container("w")
+    st_ = create_pod_container(c, now=1.0)
+    assert st_.uid == "create-cont-containerStarted"
+    assert st_.uid_index == 8
+    assert st_.phase == ContainerPhase.RUNNING
+    assert st_.pgid is not None
+    assert st_.started_at == 1.0
+
+
+@pytest.mark.parametrize("stage", CREATE_STAGES)
+def test_create_failure_at_every_stage(stage):
+    c = Container("w", fail_at=stage)
+    st_ = create_pod_container(c, now=0.0)
+    assert st_.phase == ContainerPhase.TERMINATED
+    assert st_.uid.endswith("Error")
+    assert st_.uid_index == CREATE_UIDS[st_.uid]
+    assert c.stderr
+
+
+def test_get_pods_running_then_completed():
+    c = Container("w")
+    create_pod_container(c, 0.0)
+    st_ = get_pods_container(c, 1.0)
+    assert st_.uid == "get-cont-running" and st_.uid_index == 5
+    c._finished = True
+    st_ = get_pods_container(c, 2.0)
+    assert st_.uid == "get-cont-completed" and st_.uid_index == 4
+    assert st_.exit_code == 0
+
+
+def test_get_pods_stderr_not_empty_fails_pod():
+    c = Container("w")
+    create_pod_container(c, 0.0)
+    c.stderr = "RuntimeError: boom"
+    st_ = get_pods_container(c, 1.0)
+    assert st_.uid == "get-cont-stderrNotEmpty" and st_.uid_index == 3
+    pod = Pod("p", [c])
+    assert pod.phase == PodPhase.FAILED
+
+
+def test_pod_phase_and_conditions():
+    conts = [Container("a"), Container("b")]
+    pod = Pod("p", conts)
+    assert pod.phase == PodPhase.PENDING
+    for c in conts:
+        create_pod_container(c, 5.0)
+    pod.set_conditions_create(5.0)
+    assert pod.phase == PodPhase.RUNNING and pod.ready
+    types = {c.type: c for c in pod.conditions}
+    assert types["PodScheduled"].status == ConditionStatus.TRUE
+    assert types["PodInitialized"].status == ConditionStatus.TRUE
+    assert types["PodReady"].status == ConditionStatus.TRUE
+    # retrieval phase keeps PodReady transition pinned to first container start
+    for c in conts:
+        get_pods_container(c, 9.0)
+    pod.set_conditions_get(9.0)
+    assert pod.condition("PodReady").last_transition_time == 5.0
+    # all containers complete -> Succeeded
+    for c in conts:
+        c._finished = True
+        get_pods_container(c, 10.0)
+    assert pod.phase == PodPhase.SUCCEEDED
+
+
+@settings(max_examples=50, deadline=None)
+@given(fail_stage=st.sampled_from([None] + CREATE_STAGES),
+       finishes=st.booleans(), errors=st.booleans())
+def test_lifecycle_invariants(fail_stage, finishes, errors):
+    """Property: UID always consistent with table index; terminal states
+    are absorbing w.r.t. GetPods; exit codes match stderr semantics."""
+    c = Container("w", fail_at=fail_stage)
+    create_pod_container(c, 0.0)
+    if fail_stage is None and errors:
+        c.stderr = "x"
+    if fail_stage is None and finishes:
+        c._finished = True
+    s1 = get_pods_container(c, 1.0)
+    assert s1.uid_index == GET_UIDS[s1.uid]
+    s2 = get_pods_container(c, 2.0)
+    if s1.phase == ContainerPhase.TERMINATED:
+        assert s2.phase == ContainerPhase.TERMINATED
+        assert (s2.exit_code == 0) == (not c.stderr and fail_stage is None)

@@ -1,0 +1,151 @@
+"""Optimizer, schedule, data pipeline, checkpointing, grad compression."""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import checkpointer as ckpt
+from repro.data.pipeline import DataConfig, RequestSource, SyntheticDataset
+from repro.optim import adamw
+from repro.optim.compression import (dequantize_int8, ef_compress,
+                                     ef_compress_tree, init_ef,
+                                     quantize_int8)
+
+
+# ------------------------------------------------------------------ adamw
+
+def test_adamw_converges_on_quadratic():
+    params = {"w": jnp.array([5.0, -3.0, 2.0])}
+    opt = adamw.init(params)
+    cfg = adamw.AdamWConfig(lr=0.2, weight_decay=0.0, warmup_steps=0,
+                            total_steps=100, clip_norm=100.0)
+    for _ in range(100):
+        grads = {"w": 2 * params["w"]}
+        params, opt, m = adamw.apply(grads, opt, params, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.3
+
+
+def test_schedule_warmup_and_cosine():
+    cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_frac=0.1)
+    assert float(adamw.schedule(cfg, jnp.asarray(0))) == 0.0
+    assert float(adamw.schedule(cfg, jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(adamw.schedule(cfg, jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(adamw.schedule(cfg, jnp.asarray(100))) == pytest.approx(0.1)
+    # monotone decreasing after warmup
+    vals = [float(adamw.schedule(cfg, jnp.asarray(s))) for s in range(10, 100, 10)]
+    assert all(b <= a for a, b in zip(vals, vals[1:]))
+
+
+def test_grad_clip_scales_update():
+    params = {"w": jnp.zeros(4)}
+    opt = adamw.init(params)
+    cfg = adamw.AdamWConfig(lr=1e-3, clip_norm=1.0, warmup_steps=0)
+    _, _, m = adamw.apply({"w": jnp.full(4, 100.0)}, opt, params, cfg)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+# ------------------------------------------------------------------- data
+
+def test_data_deterministic_and_checkpointable():
+    cfg = DataConfig(batch=4, seq=16, vocab=97)
+    d1 = SyntheticDataset(cfg)
+    b1 = [d1.next_batch() for _ in range(3)]
+    d2 = SyntheticDataset(cfg)
+    d2.next_batch()
+    state = d2.state()
+    d3 = SyntheticDataset(cfg)
+    d3.restore(state)
+    b3 = d3.next_batch()
+    np.testing.assert_array_equal(b1[1]["tokens"], b3["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1[0]["tokens"][:, 1:],
+                                  b1[0]["labels"][:, :-1])
+
+
+def test_request_source_poisson_rate():
+    src = RequestSource(seed=1)
+    n = sum(len(src.arrivals(t * 1.0, 1.0, lam=5.0)) for t in range(500))
+    assert 2200 < n < 2800      # ~2500 expected
+
+
+# ------------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones(4, jnp.bfloat16)},
+            "s": jnp.asarray(3, jnp.int32)}
+    for step in (1, 2, 3, 4):
+        ckpt.save(tmp_path, step, tree, keep=2)
+    assert ckpt.latest_step(tmp_path) == 4
+    dirs = sorted(p.name for p in pathlib.Path(tmp_path).glob("step_*"))
+    assert len(dirs) == 2
+    restored, meta = ckpt.restore(tmp_path, jax.eval_shape(lambda: tree))
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+    assert meta["step"] == 4
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    ckpt.save(tmp_path, 1, {"a": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        ckpt.restore(tmp_path, {"a": jax.ShapeDtypeStruct((3, 3), jnp.float32)})
+
+
+def test_checkpoint_async(tmp_path):
+    t = ckpt.save_async(tmp_path, 7, {"a": jnp.ones(8)})
+    t.join(timeout=30)
+    restored, meta = ckpt.restore(
+        tmp_path, {"a": jax.ShapeDtypeStruct((8,), jnp.float32)})
+    assert float(restored["a"].sum()) == 8.0
+
+
+# ------------------------------------------------------------ compression
+
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 3.0
+    q, scale, shape, pad = quantize_int8(x, block=256)
+    x2 = dequantize_int8(q, scale, shape, pad)
+    # max error <= scale/2 per block
+    err = jnp.abs(x - x2)
+    assert float(err.max()) <= float(scale.max()) * 0.51
+
+
+def test_error_feedback_unbiased_over_time():
+    """Sum of EF-compressed grads converges to sum of true grads."""
+    key = jax.random.PRNGKey(1)
+    ef = jnp.zeros(512)
+    total_true = jnp.zeros(512)
+    total_hat = jnp.zeros(512)
+    for i in range(50):
+        g = jax.random.normal(jax.random.fold_in(key, i), (512,)) * 0.01
+        g_hat, ef = ef_compress(g, ef, block=128)
+        total_true += g
+        total_hat += g_hat
+    resid = float(jnp.abs(total_true - total_hat).max())
+    # residual equals |ef| which is bounded by one quantization step
+    assert resid < 5e-4
+    np.testing.assert_allclose(total_hat + ef, total_true, atol=1e-5)
+
+
+def test_ef_tree_wrapper():
+    params = {"a": jnp.ones((8, 8)), "b": jnp.ones(16)}
+    ef = init_ef(params)
+    grads = jax.tree.map(lambda p: p * 0.1, params)
+    g_hat, ef2 = ef_compress_tree(grads, ef)
+    assert jax.tree.structure(g_hat) == jax.tree.structure(grads)
+    assert float(jnp.abs(g_hat["a"] - 0.1).max()) < 1e-3
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), scale=st.floats(1e-4, 1e3))
+def test_quantization_property(seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (300,)) * scale
+    q, s, shape, pad = quantize_int8(x, block=64)
+    x2 = dequantize_int8(q, s, shape, pad)
+    assert x2.shape == x.shape
+    # relative block error bounded by 1/127 of block max
+    assert float(jnp.abs(x - x2).max()) <= scale * 10.0 / 127 + 1e-6
