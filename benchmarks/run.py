@@ -182,38 +182,79 @@ def bench_dbn_control():
 # ------------------------------------------------------------------ §5.1
 
 def bench_deployment_40():
+    """§5.1 through the declarative control plane: 40 nodes registered in
+    the Cluster store, a 40-replica Deployment declared, controllers +
+    queue scheduler converge it in one reconcile step."""
+    from repro.core.cluster import Cluster, Deployment, PodTemplate
+    from repro.core.controllers import ControlPlane
     from repro.core.jcs import CentralService
     from repro.core.jfe import FrontEnd
     from repro.core.jfm import FacilityManager
-    from repro.core.jms import MatchingService
     from repro.core.jrm import SliceSpec
-    from repro.core.state_machine import Container, Pod
 
     def scenario():
         fe = FrontEnd()
         wf = fe.add_wf("vk-nersc", 40, walltime=10800.0)
         jcs = CentralService(fe)
         jcs.launch_pilot(wf, now=0.0, slice_spec=SliceSpec(chips=4))
-        nodes = jcs.node_list()
-        for n in nodes:
-            n.tick(120.0)
-        fm = FacilityManager()
-        fm.scrape(nodes, 120.0)
-        jms = MatchingService(fm)
-        tol = [{"key": "virtual-kubelet.io/provider", "value": "mock"}]
-        bound = 0
-        for i in range(40):
-            pod = Pod(f"ersap{i}", [Container("engine")], tolerations=tol,
-                      request_chips=4, request_hbm_bytes=8 << 30)
-            res = jms.bind(pod, nodes, 120.0, expected_duration=3600.0)
-            bound += res.node is not None
-            fm.scrape(nodes, 120.0)
-        return len(nodes), bound
+        cluster = Cluster()
+        for n in jcs.node_list():
+            cluster.register_node(n, 0.0)
+            cluster.heartbeat(n.name, 120.0)
+        FacilityManager().feed(cluster, 120.0)
+        cluster.apply_deployment(Deployment(
+            "ersap", 40, template=PodTemplate(
+                tolerations=[{"key": "virtual-kubelet.io/provider",
+                              "value": "mock"}],
+                request_chips=4, request_hbm_bytes=8 << 30,
+                expected_duration=3600.0)), 120.0)
+        plane = ControlPlane(cluster)
+        plane.step(120.0)
+        bound = sum(1 for r in cluster.pods.values() if r.bound)
+        return len(cluster.nodes), bound
 
     us = _timeit(scenario, n=5)
     nodes, bound = scenario()
     row("deployment_40node_5.1", us,
         f"nodes={nodes};pods_bound={bound};nodes_per_s={nodes / (us / 1e6):.0f}")
+
+
+def bench_control_plane_churn():
+    """Drain -> checkpoint -> evict -> reschedule loop (§4.5.4): half the
+    nodes on short leases; the NodeLifecycleController drains them and the
+    scheduler re-places every displaced replica on surviving nodes."""
+    from repro.core.cluster import Cluster, Deployment, PodTemplate
+    from repro.core.controllers import ControlPlane
+    from repro.core.jrm import SliceSpec, start_vk
+
+    def scenario():
+        cluster = Cluster()
+        for i in range(8):
+            wall = 200.0 if i % 2 == 0 else 0.0     # half drain mid-run
+            cluster.register_node(
+                start_vk(f"n{i}", walltime=wall, now=0.0,
+                         slice_spec=SliceSpec(chips=8)), 0.0)
+        cluster.apply_deployment(Deployment(
+            "ersap", 16, template=PodTemplate(
+                tolerations=[{"key": "virtual-kubelet.io/provider",
+                              "value": "mock"}],
+                request_chips=2)), 0.0)
+        plane = ControlPlane(cluster)
+        moved = 0
+        for t in range(0, 300, 20):
+            now = float(t)
+            for name in cluster.nodes:
+                cluster.heartbeat(name, now)
+            plane.step(now)
+        moved = sum(1 for r in cluster.pods.values()
+                    if r.restored_from is not None and r.bound)
+        bound = sum(1 for r in cluster.pods.values() if r.bound)
+        return bound, moved, len(cluster.events)
+
+    us = _timeit(scenario, n=5)
+    bound, moved, events = scenario()
+    row("control_plane_churn_4.5.4", us,
+        f"replicas_bound={bound};rescheduled={moved};events={events}")
 
 
 # ---------------------------------------------------------------- kernels
@@ -323,7 +364,7 @@ BENCHES = [
     bench_hpa_formula, bench_hpa_scaling,
     bench_queue_16, bench_queue_32,
     bench_dbn_tracking, bench_dbn_control,
-    bench_deployment_40,
+    bench_deployment_40, bench_control_plane_churn,
     bench_kernel_flash_attention, bench_kernel_mlstm, bench_kernel_ssm,
     bench_kernel_decode_attention,
     bench_roofline,

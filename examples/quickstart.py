@@ -1,5 +1,6 @@
-"""Quickstart: bring up the JIRIAF control plane, lease nodes, schedule a
-model workload pod, and run a real forward pass on it.
+"""Quickstart: bring up the JIRIAF control plane, lease nodes, declare a
+model workload pod in the Cluster store, let the scheduler place it, and
+run a real forward pass on it.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,11 +8,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_config
+from repro.core.cluster import Cluster
 from repro.core.jcs import CentralService
 from repro.core.jfe import FrontEnd
 from repro.core.jfm import FacilityManager
-from repro.core.jms import MatchingService
 from repro.core.jrm import SliceSpec
+from repro.core.scheduler import Scheduler
 from repro.core.state_machine import Container, Pod
 from repro.models import model_api as MA
 
@@ -21,20 +23,22 @@ wf = fe.add_wf("vk-quick", nnodes=2, nodetype="tpu", site="local",
                walltime=600.0)
 print(f"[jfe] workflow {wf.wf_id}: {wf.nnodes} x {wf.nodetype} @ {wf.site}")
 
-# 2. central service launches pilot JRMs (JCS -> JRM/VK)
+# 2. central service launches pilot JRMs (JCS -> JRM/VK) and registers
+#    them in the Cluster object store
 jcs = CentralService(fe)
 pilot = jcs.launch_pilot(wf, now=0.0, slice_spec=SliceSpec(chips=4))
-nodes = jcs.node_list()
-for n in nodes:
-    n.tick(5.0)
+cluster = Cluster()
+for n in jcs.node_list():
+    cluster.register_node(n, 0.0)
+    cluster.heartbeat(n.name, 5.0)
 print(f"[jcs] pilot up: {pilot.nodes} ({len(pilot.tunnels)} SSH tunnels)")
 
-# 3. facility manager scrapes the pool (JFM)
+# 3. facility manager feeds node heartbeats into the store (JFM)
 fm = FacilityManager()
-fm.scrape(nodes, 5.0)
+fm.feed(cluster, 5.0)
 print(f"[jfm] {fm.total_free_chips()} free chips")
 
-# 4. matching service binds a model-serving pod (JMS)
+# 4. declare the pod; the reconciling scheduler binds it
 cfg = get_config("qwen2-7b").reduced()
 pod = Pod("qwen-serve", [Container("decode-worker")],
           tolerations=[{"key": "virtual-kubelet.io/provider", "value": "mock"}],
@@ -43,9 +47,11 @@ pod = Pod("qwen-serve", [Container("decode-worker")],
                     {"key": "jiriaf.alivetime", "operator": "Gt",
                      "values": ["60"]}],
           request_chips=2, request_hbm_bytes=1 << 30)
-res = MatchingService(fm).bind(pod, nodes, 5.0, expected_duration=120.0)
-print(f"[jms] pod bound to {res.node}; conditions="
+cluster.submit(pod, 5.0, expected_duration=120.0)
+decisions = Scheduler(cluster).run_once(5.0)
+print(f"[scheduler] {decisions[0].pod} -> {decisions[0].node}; conditions="
       f"{[(c.type, c.status.value) for c in pod.conditions]}")
+print(f"[events] {cluster.event_reasons('qwen-serve')}")
 
 # 5. the pod's container actually runs the model
 mod = MA.get_module(cfg)
@@ -55,11 +61,12 @@ logits, cache = jax.jit(lambda p, t: mod.prefill(p, t, cfg))(params, toks)
 print(f"[workload] prefill logits {logits.shape}, "
       f"next tokens {jnp.argmax(logits, -1).tolist()}")
 
-# 6. lifecycle: monitor (Table 7 states), then complete
-node = next(n for n in nodes if n.name == res.node)
+# 6. lifecycle: monitor (Table 7 states), then complete via the public
+#    terminate transition (no private-state poking)
+node = cluster.nodes[pod.node]
 node.get_pods(6.0)
 print(f"[jrm] container state: {pod.containers[0].state.uid} "
       f"(index {pod.containers[0].state.uid_index})")
-pod.containers[0]._finished = True
+pod.containers[0].finish()
 node.get_pods(7.0)
 print(f"[jrm] final: {pod.containers[0].state.uid} -> pod {pod.phase.value}")

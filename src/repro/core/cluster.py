@@ -1,0 +1,349 @@
+"""Cluster — the declarative control plane's API-server analog.
+
+The seed wired JRM/JMS/JFM together imperatively: callers hand-created
+pods by naming convention and mutated nodes directly. This module is the
+pivot to Kubernetes semantics (paper §3-§4): *desired state* lives in a
+typed object store, *controllers* reconcile it, and every state change is
+observable through a watch bus and an Event store.
+
+Module map (object-store / scheduler / controller split):
+
+  cluster.py  (this file)
+      Typed object store for Nodes, Pods, Deployments, Events.
+      - ``Cluster`` keeps the authoritative dicts, assigns/evicts pods on
+        ``VirtualNode``s (the kubelet action), and emits ``WatchEvent``s
+        (ADDED/MODIFIED/DELETED) to subscribers plus human-readable
+        ``ClusterEvent``s (Scheduled / Draining / Evicted / Rescheduled
+        ...) to the event store — the §4.5.4 walltime loop becomes an
+        auditable trail.
+      - ``Deployment`` + ``PodTemplate`` hold desired state only
+        (``replicas``); nothing here creates pods.
+      - ``NodeStatus`` is the JFM-fed heartbeat record (jfm.feed()).
+
+  scheduler.py
+      Queue-based scheduler (refactor of JMS): pending pods go through
+      pluggable filter stages (ready, tolerations, selector/affinity,
+      resources, walltime lease) and score stages (non-straggler,
+      best-fit HBM), with retry/backoff for unschedulable pods and
+      drain-aware priority preemption.
+
+  controllers.py
+      ``DeploymentController`` converges ``spec.replicas`` -> pods;
+      ``NodeLifecycleController`` watches walltime leases, checkpoints
+      pods on draining nodes via ``repro.checkpoint``, evicts them and
+      hands their state to the replacement pod (closing §4.5.4);
+      ``ControlPlane`` bundles both with the scheduler into one
+      ``step(now)`` reconcile loop.
+
+Writers (HPA, the digital-twin policy, users) only touch *spec* fields;
+observers (StreamEngine, benchmarks, tests) read *status* and the event
+trail. That inversion is what unlocks node churn, multi-site pools, and
+preemption without request loss in one architecture.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.jrm import VirtualNode
+from repro.core.state_machine import Container, Pod, PodPhase
+
+# Watch event types (k8s watch semantics)
+ADDED = "ADDED"
+MODIFIED = "MODIFIED"
+DELETED = "DELETED"
+
+KIND_NODE = "Node"
+KIND_POD = "Pod"
+KIND_DEPLOYMENT = "Deployment"
+
+
+@dataclass
+class WatchEvent:
+    kind: str                 # Node | Pod | Deployment
+    type: str                 # ADDED | MODIFIED | DELETED
+    name: str
+    obj: object = None
+
+
+@dataclass
+class ClusterEvent:
+    """k8s Event analog: one line of the audit trail."""
+    time: float
+    kind: str
+    name: str                 # object the event is about
+    reason: str               # Scheduled | Draining | Evicted | ...
+    message: str = ""
+
+
+@dataclass
+class NodeStatus:
+    """Heartbeat-derived node condition, fed by jfm.FacilityManager."""
+    ready: bool = True
+    schedulable: bool = True          # False once cordoned for draining
+    heartbeat_age: float = 0.0
+    heartbeat_latency: float = 0.0
+    straggler: bool = False
+    last_transition: float = 0.0
+
+
+def _default_containers(name: str) -> List[Container]:
+    return [Container(name="engine")]
+
+
+@dataclass
+class PodTemplate:
+    """Spec stamped onto every pod a Deployment owns."""
+    labels: Dict[str, str] = field(default_factory=dict)
+    tolerations: List[dict] = field(default_factory=list)
+    node_selector: Dict[str, str] = field(default_factory=dict)
+    affinity: List[dict] = field(default_factory=list)
+    request_chips: int = 0
+    request_hbm_bytes: int = 0
+    expected_duration: float = 0.0
+    priority: int = 0
+    container_factory: Callable[[str], List[Container]] = _default_containers
+    # drain support: returns the pod's checkpointable runtime state
+    # (a pytree of numpy-convertible leaves) for repro.checkpoint
+    checkpoint_state: Optional[Callable[[str], dict]] = None
+
+    def instantiate(self, name: str) -> Pod:
+        return Pod(name=name,
+                   containers=self.container_factory(name),
+                   labels=dict(self.labels),
+                   node_selector=dict(self.node_selector),
+                   affinity=[dict(a) for a in self.affinity],
+                   tolerations=[dict(t) for t in self.tolerations],
+                   request_chips=self.request_chips,
+                   request_hbm_bytes=self.request_hbm_bytes)
+
+
+@dataclass
+class Deployment:
+    """Desired state only: ``replicas`` is written by HPA / the digital
+    twin / users; the DeploymentController converges actual pods to it."""
+    name: str
+    replicas: int
+    template: PodTemplate = field(default_factory=PodTemplate)
+    next_ordinal: int = 0             # monotonic pod-name counter
+
+    def next_pod_name(self) -> str:
+        name = f"{self.name}-{self.next_ordinal}"
+        self.next_ordinal += 1
+        return name
+
+
+@dataclass
+class PodRecord:
+    """A pod plus the control-plane metadata the bare state-machine Pod
+    doesn't carry (owner, priority, scheduling bookkeeping)."""
+    pod: Pod
+    owner: Optional[str] = None            # owning Deployment name
+    priority: int = 0
+    expected_duration: float = 0.0
+    submitted_at: float = 0.0
+    # scheduler bookkeeping (retry/backoff)
+    attempts: int = 0
+    next_retry: float = 0.0
+    last_reason: str = ""
+    # drain/reschedule lineage
+    restored_from: Optional[str] = None    # predecessor pod name
+    restored_state: Optional[dict] = None  # checkpointed runtime state
+
+    @property
+    def name(self) -> str:
+        return self.pod.name
+
+    @property
+    def bound(self) -> bool:
+        return self.pod.node is not None
+
+
+class Cluster:
+    """Typed object store + watch bus + event trail (see module map)."""
+
+    def __init__(self):
+        self.nodes: Dict[str, VirtualNode] = {}
+        self.node_status: Dict[str, NodeStatus] = {}
+        self.pods: Dict[str, PodRecord] = {}
+        self.deployments: Dict[str, Deployment] = {}
+        self.events: List[ClusterEvent] = []
+        self._watchers: Dict[str, List[Callable[[WatchEvent], None]]] = {}
+        self._uid = itertools.count(1)
+
+    # ------------------------------------------------------- watch bus
+    def watch(self, kind: str, callback: Callable[[WatchEvent], None]):
+        self._watchers.setdefault(kind, []).append(callback)
+
+    def _emit(self, kind: str, type_: str, name: str, obj=None):
+        ev = WatchEvent(kind, type_, name, obj)
+        for cb in self._watchers.get(kind, []):
+            cb(ev)
+
+    # ----------------------------------------------------- event store
+    def record(self, now: float, kind: str, name: str, reason: str,
+               message: str = ""):
+        self.events.append(ClusterEvent(now, kind, name, reason, message))
+
+    def events_for(self, name: str) -> List[ClusterEvent]:
+        return [e for e in self.events if e.name == name]
+
+    def event_reasons(self, name: Optional[str] = None) -> List[str]:
+        evs = self.events if name is None else self.events_for(name)
+        return [e.reason for e in evs]
+
+    # ----------------------------------------------------------- nodes
+    def register_node(self, node: VirtualNode, now: float = 0.0):
+        self.nodes[node.name] = node
+        self.node_status[node.name] = NodeStatus(
+            ready=node.ready, last_transition=now)
+        self._emit(KIND_NODE, ADDED, node.name, node)
+        self.record(now, KIND_NODE, node.name, "Registered",
+                    f"site={node.site} chips={node.slice_spec.chips}")
+        return node
+
+    def deregister_node(self, name: str, now: float = 0.0):
+        node = self.nodes.pop(name, None)
+        self.node_status.pop(name, None)
+        if node is not None:
+            self._emit(KIND_NODE, DELETED, name, node)
+        return node
+
+    def heartbeat(self, name: str, now: float, latency: float = 0.0):
+        """Node-side heartbeat: ticks the VK lease clock and refreshes the
+        status record. JFM's feed() refines straggler/staleness on top."""
+        node = self.nodes[name]
+        node.tick(now, latency=latency)
+        st = self.node_status[name]
+        st.heartbeat_age = 0.0
+        st.heartbeat_latency = latency
+        if st.ready != node.ready:
+            st.ready = node.ready
+            st.last_transition = now
+            self.record(now, KIND_NODE, name,
+                        "Ready" if node.ready else "NotReady",
+                        f"alive_left={node.alive_left(now):.0f}")
+            self._emit(KIND_NODE, MODIFIED, name, node)
+        return node.ready
+
+    def set_node_status(self, name: str, now: float, *, ready: bool,
+                        heartbeat_age: float = 0.0,
+                        heartbeat_latency: float = 0.0,
+                        straggler: bool = False):
+        """JFM feed path: overwrite the scraped condition."""
+        st = self.node_status.setdefault(name, NodeStatus())
+        changed = st.ready != ready
+        st.heartbeat_age = heartbeat_age
+        st.heartbeat_latency = heartbeat_latency
+        st.straggler = straggler
+        if changed:
+            st.ready = ready
+            st.last_transition = now
+            self.record(now, KIND_NODE, name,
+                        "Ready" if ready else "NotReady",
+                        f"heartbeat_age={heartbeat_age:.0f}")
+            self._emit(KIND_NODE, MODIFIED, name)
+
+    def cordon(self, name: str, now: float, reason: str = "Draining"):
+        st = self.node_status[name]
+        if st.schedulable:
+            st.schedulable = False
+            self.record(now, KIND_NODE, name, reason,
+                        f"alive_left={self.nodes[name].alive_left(now):.0f}")
+            self._emit(KIND_NODE, MODIFIED, name, self.nodes[name])
+
+    def schedulable_nodes(self, now: float) -> List[VirtualNode]:
+        out = []
+        for name, node in self.nodes.items():
+            st = self.node_status.get(name)
+            if st is None or not st.ready or not st.schedulable:
+                continue
+            if node.draining(now):
+                continue
+            out.append(node)
+        return out
+
+    # ------------------------------------------------------------ pods
+    def submit(self, pod: Pod, now: float, *, owner: Optional[str] = None,
+               priority: int = 0, expected_duration: float = 0.0,
+               restored_from: Optional[str] = None,
+               restored_state: Optional[dict] = None) -> PodRecord:
+        """Declare a pod. It enters the scheduler queue as Pending; nobody
+        hand-picks a node here."""
+        if pod.name in self.pods:
+            raise ValueError(f"pod {pod.name} already exists")
+        rec = PodRecord(pod=pod, owner=owner, priority=priority,
+                        expected_duration=expected_duration,
+                        submitted_at=now, restored_from=restored_from,
+                        restored_state=restored_state)
+        self.pods[pod.name] = rec
+        self._emit(KIND_POD, ADDED, pod.name, rec)
+        self.record(now, KIND_POD, pod.name, "Created",
+                    f"owner={owner or '-'}")
+        return rec
+
+    def assign(self, pod_name: str, node_name: str, now: float) -> PodRecord:
+        """Bind decision -> kubelet CreatePod on the chosen node."""
+        rec = self.pods[pod_name]
+        node = self.nodes[node_name]
+        node.create_pod(rec.pod, now)
+        reason = "Rescheduled" if rec.restored_from else "Scheduled"
+        self.record(now, KIND_POD, pod_name, reason, f"node={node_name}")
+        self._emit(KIND_POD, MODIFIED, pod_name, rec)
+        return rec
+
+    def evict(self, pod_name: str, now: float, reason: str = "Evicted",
+              message: str = "") -> Optional[PodRecord]:
+        """Graceful removal (SIGTERM analog): terminate containers through
+        the public state-machine transition and delete the pod object."""
+        rec = self.pods.pop(pod_name, None)
+        if rec is None:
+            return None
+        if rec.pod.node is not None:
+            node = self.nodes.get(rec.pod.node)
+            if node is not None:
+                node.delete_pod(pod_name, now)
+        self.record(now, KIND_POD, pod_name, reason,
+                    message or f"node={rec.pod.node or '-'}")
+        self._emit(KIND_POD, DELETED, pod_name, rec)
+        return rec
+
+    def pending_pods(self) -> List[PodRecord]:
+        return [r for r in self.pods.values() if not r.bound]
+
+    def pods_on(self, node_name: str) -> List[PodRecord]:
+        return [r for r in self.pods.values() if r.pod.node == node_name]
+
+    def pods_of(self, deployment: str, live_only: bool = True) -> List[PodRecord]:
+        out = []
+        for r in self.pods.values():
+            if r.owner != deployment:
+                continue
+            if live_only and r.bound and r.pod.phase in (
+                    PodPhase.SUCCEEDED, PodPhase.FAILED):
+                continue
+            out.append(r)
+        return out
+
+    # ----------------------------------------------------- deployments
+    def apply_deployment(self, dep: Deployment, now: float = 0.0) -> Deployment:
+        existing = self.deployments.get(dep.name)
+        self.deployments[dep.name] = dep
+        self._emit(KIND_DEPLOYMENT, MODIFIED if existing else ADDED,
+                   dep.name, dep)
+        if existing is None:
+            self.record(now, KIND_DEPLOYMENT, dep.name, "Created",
+                        f"replicas={dep.replicas}")
+        return dep
+
+    def scale(self, name: str, replicas: int, now: float,
+              source: str = "user") -> Deployment:
+        """Desired-replica write — the only thing HPA / the twin do."""
+        dep = self.deployments[name]
+        if replicas != dep.replicas:
+            self.record(now, KIND_DEPLOYMENT, name, "Scaled",
+                        f"{dep.replicas}->{replicas} by {source}")
+            dep.replicas = replicas
+            self._emit(KIND_DEPLOYMENT, MODIFIED, name, dep)
+        return dep

@@ -1,0 +1,191 @@
+"""Controllers — reconcile desired state in the Cluster store (paper §3/§4).
+
+``DeploymentController`` converges ``Deployment.replicas`` -> pods: it
+creates missing pods (into the scheduler's pending queue), retires excess
+ones newest-first, and replaces pods whose node vanished. Replacement pods
+inherit the checkpointed runtime state their predecessor left behind.
+
+``NodeLifecycleController`` closes the §4.5.4 walltime loop the seed only
+annotated: when a node's lease enters the drain margin it cordons the
+node, checkpoints every pod on it via ``repro.checkpoint`` (atomic on-disk
+save; restored through the same path), evicts the pods, and parks their
+state so the DeploymentController's replacements pick it up and the
+scheduler re-places them on healthy nodes. Expired or heartbeat-dead nodes
+are marked NotReady and their pods evicted without the graceful
+checkpoint (the crash path of test_node_failure_reschedule).
+
+``ControlPlane`` bundles store + scheduler + controllers into a single
+``step(now)`` so drivers (StreamEngine, launch/serve, benchmarks) run one
+reconcile call per tick.
+"""
+from __future__ import annotations
+
+import pathlib
+import tempfile
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set
+
+import numpy as np
+
+from repro.checkpoint import checkpointer
+from repro.core.cluster import KIND_POD, Cluster, PodRecord
+from repro.core.scheduler import Scheduler
+
+
+@dataclass
+class DeploymentController:
+    cluster: Cluster
+    # state parked by the NodeLifecycleController, keyed by deployment:
+    # [(predecessor pod name, runtime state), ...]
+    pending_restores: Dict[str, List] = field(default_factory=dict)
+
+    def park_state(self, deployment: str, pod_name: str, state: dict):
+        self.pending_restores.setdefault(deployment, []).append(
+            (pod_name, state))
+
+    def reconcile(self, now: float) -> List[str]:
+        """One pass: returns names of pods created this pass."""
+        created = []
+        for dep in self.cluster.deployments.values():
+            live = self.cluster.pods_of(dep.name)
+            # scale down: prefer retiring still-pending pods, then newest
+            while len(live) > dep.replicas:
+                victim = max(live, key=lambda r: (not r.bound,
+                                                  r.submitted_at))
+                self.cluster.evict(victim.name, now, reason="ScaledDown",
+                                   message=f"deployment={dep.name}")
+                live.remove(victim)
+            # scale up / replace evicted pods
+            while len(live) < dep.replicas:
+                name = dep.next_pod_name()
+                restored_from = restored_state = None
+                stash = self.pending_restores.get(dep.name)
+                if stash:
+                    restored_from, restored_state = stash.pop(0)
+                rec = self.cluster.submit(
+                    dep.template.instantiate(name), now, owner=dep.name,
+                    priority=dep.template.priority,
+                    expected_duration=dep.template.expected_duration,
+                    restored_from=restored_from,
+                    restored_state=restored_state)
+                live.append(rec)
+                created.append(name)
+            # any state still parked here wasn't consumed by a same-pass
+            # replacement (replicas shrank meanwhile) — drop it, or a
+            # future unrelated scale-up would inherit a retired pod's
+            # counters
+            self.pending_restores.pop(dep.name, None)
+        return created
+
+
+@dataclass
+class NodeLifecycleController:
+    cluster: Cluster
+    deployment_ctrl: Optional[DeploymentController] = None
+    ckpt_dir: Optional[str] = None       # defaults to a temp dir on first use
+    stale_after: float = 30.0            # no heartbeat for this long = dead
+    _drained: Set[str] = field(default_factory=set)
+    _ckpt_steps: Dict[str, int] = field(default_factory=dict)
+
+    def _checkpoint(self, rec: PodRecord, now: float) -> Optional[dict]:
+        """Snapshot the pod's runtime state through repro.checkpoint: the
+        same atomic save/restore path training and elastic scaling use."""
+        dep = self.cluster.deployments.get(rec.owner or "")
+        provider = dep.template.checkpoint_state if dep else None
+        if provider is None:
+            return None
+        state = provider(rec.name)
+        if state is None:
+            return None
+        if self.ckpt_dir is None:
+            self.ckpt_dir = tempfile.mkdtemp(prefix="jiriaf-drain-")
+        tree = {k: np.asarray(v) for k, v in state.items()}
+        step = self._ckpt_steps.get(rec.name, 0)
+        pod_dir = pathlib.Path(self.ckpt_dir) / rec.name
+        checkpointer.save(pod_dir, step, tree,
+                          meta={"pod": rec.name, "node": rec.pod.node or "",
+                                "time": now})
+        self._ckpt_steps[rec.name] = step + 1
+        # restore from disk so the round trip is exercised, not assumed
+        restored, _meta = checkpointer.restore(pod_dir, tree, step=step)
+        self.cluster.record(now, KIND_POD, rec.name, "Checkpointed",
+                            f"dir={pod_dir} step={step}")
+        return {k: np.asarray(v) for k, v in restored.items()}
+
+    def _drain_node(self, name: str, now: float):
+        self.cluster.cordon(name, now, reason="Draining")
+        for rec in self.cluster.pods_on(name):
+            state = self._checkpoint(rec, now)
+            evicted = self.cluster.evict(
+                rec.name, now, reason="Evicted",
+                message=f"node {name} draining")
+            if evicted is None:
+                continue
+            if evicted.owner and self.deployment_ctrl is not None:
+                self.deployment_ctrl.park_state(
+                    evicted.owner, evicted.name, state or {})
+        self._drained.add(name)
+
+    def _fail_node(self, name: str, now: float, why: str):
+        st = self.cluster.node_status[name]
+        if st.ready:
+            self.cluster.set_node_status(name, now, ready=False,
+                                         heartbeat_age=st.heartbeat_age)
+        for rec in self.cluster.pods_on(name):
+            evicted = self.cluster.evict(rec.name, now, reason="Evicted",
+                                         message=f"node {name} {why}")
+            # crash path: no checkpoint to park, replacement starts fresh
+            if evicted and evicted.owner and self.deployment_ctrl is not None:
+                self.deployment_ctrl.park_state(
+                    evicted.owner, evicted.name, {})
+
+    def reconcile(self, now: float):
+        for name, node in list(self.cluster.nodes.items()):
+            st = self.cluster.node_status.get(name)
+            if st is None:
+                continue
+            if node.walltime > 0 and node.alive_left(now) <= 0:
+                if node.ready or st.ready or self.cluster.pods_on(name):
+                    node.ready = False
+                    self._fail_node(name, now, "walltime expired")
+                continue
+            # staleness from the node's own heartbeat clock, so dead nodes
+            # are caught even when no JFM feed refreshes heartbeat_age
+            age = max(st.heartbeat_age, now - node.last_heartbeat)
+            stale = age > self.stale_after
+            if (stale or not st.ready) and \
+                    (st.ready or self.cluster.pods_on(name)):
+                self._fail_node(name, now,
+                                "heartbeat stale" if stale else "not ready")
+                continue
+            if not st.ready:
+                continue
+            if node.draining(now) and name not in self._drained:
+                self._drain_node(name, now)
+
+
+@dataclass
+class ControlPlane:
+    """Store + scheduler + controllers behind one reconcile call."""
+    cluster: Cluster
+    scheduler: Scheduler = None
+    deployments: DeploymentController = None
+    nodes: NodeLifecycleController = None
+
+    def __post_init__(self):
+        if self.scheduler is None:
+            self.scheduler = Scheduler(self.cluster)
+        if self.deployments is None:
+            self.deployments = DeploymentController(self.cluster)
+        if self.nodes is None:
+            self.nodes = NodeLifecycleController(
+                self.cluster, deployment_ctrl=self.deployments)
+        elif self.nodes.deployment_ctrl is None:
+            self.nodes.deployment_ctrl = self.deployments
+
+    def step(self, now: float):
+        """One control-plane tick: lifecycle first (drains/evictions free
+        capacity and park state), then replica convergence, then binding."""
+        self.nodes.reconcile(now)
+        self.deployments.reconcile(now)
+        return self.scheduler.run_once(now)

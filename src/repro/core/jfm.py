@@ -44,6 +44,22 @@ class FacilityManager:
                            n.heartbeat_latency > self.straggler_factor * median))
         return self.pool
 
+    def feed(self, cluster, now: float) -> Dict[str, ResourceRecord]:
+        """Declarative-control-plane role: JFM is a node-heartbeat feeder.
+
+        Scrapes every node registered in the Cluster store and writes the
+        derived condition (ready/staleness/straggler) back as NodeStatus,
+        so the scheduler and the NodeLifecycleController consume one
+        authoritative view instead of each poking nodes directly."""
+        pool = self.scrape(list(cluster.nodes.values()), now)
+        for name, rec in pool.items():
+            cluster.set_node_status(
+                name, now, ready=rec.ready,
+                heartbeat_age=rec.heartbeat_age,
+                heartbeat_latency=rec.heartbeat_latency,
+                straggler=rec.straggler)
+        return pool
+
     def available(self) -> List[ResourceRecord]:
         return [r for r in self.pool.values() if r.ready and r.free_chips > 0]
 

@@ -1,21 +1,24 @@
 """JMS — JIRIAF Matching Service: aligns leased resources with user
-requests (paper §3). Affinity/taint-aware best-fit bin-packing; the
-resource vector is (chips, HBM bytes) with HBM taken from the dry-run's
-``memory_analysis()`` for the requested (arch x shape) — see launch/train.
+requests (paper §3).
 
-Placement policy (TPU adaptation):
-  1. filter: Ready, tolerated taints, nodeSelector + affinity match,
-     walltime left > pod's expected duration + drain margin,
-  2. prefer non-straggler nodes (heartbeat-latency label from JFM),
-  3. best-fit on free HBM (tightest fit that still holds the pod).
+Since the declarative-control-plane refactor this is a thin one-shot
+facade over ``repro.core.scheduler``: the same filter stages (Ready,
+tolerations, nodeSelector/affinity, chips+HBM resources, walltime lease >
+expected duration + drain margin) and score stages (non-straggler
+preference, best-fit HBM) that the queue-based ``Scheduler`` runs against
+the Cluster store. Legacy callers that hold a bare node list + a
+FacilityManager pool keep working; new code should declare pods into a
+``Cluster`` and let the scheduler/controllers converge.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import List, Optional
 
+from repro.core.cluster import Cluster
 from repro.core.jfm import FacilityManager
 from repro.core.jrm import VirtualNode
+from repro.core.scheduler import Scheduler
 from repro.core.state_machine import Pod
 
 
@@ -30,41 +33,35 @@ class MatchResult:
 class MatchingService:
     fm: FacilityManager
 
-    def filter_nodes(self, pod: Pod, nodes: List[VirtualNode], now: float,
-                     expected_duration: float = 0.0) -> List[VirtualNode]:
-        out = []
+    def _transient(self, nodes: List[VirtualNode], now: float) -> Scheduler:
+        """Project the (nodes, JFM pool) view into a throwaway Cluster so
+        the shared filter/score stages apply unmodified."""
+        cluster = Cluster()
+        for n in nodes:
+            cluster.register_node(n, now)
         for n in nodes:
             rec = self.fm.pool.get(n.name)
-            if rec is None or not rec.ready:
-                continue
-            if not n.tolerates(pod):
-                continue
-            lab = n.labels(now)
-            if any(lab.get(k) != v for k, v in pod.node_selector.items()):
-                continue
-            if pod.affinity and not n.matches(pod.affinity, now):
-                continue
-            if n.free_chips() < pod.request_chips:
-                continue
-            if n.free_hbm() < pod.request_hbm_bytes:
-                continue
-            left = n.alive_left(now)
-            if left != float("inf") and \
-                    left < expected_duration + n.drain_margin:
-                continue
-            out.append(n)
-        return out
+            st = cluster.node_status[n.name]
+            st.ready = bool(rec and rec.ready)
+            st.straggler = bool(rec and rec.straggler)
+        return Scheduler(cluster, enable_preemption=False)
+
+    def filter_nodes(self, pod: Pod, nodes: List[VirtualNode], now: float,
+                     expected_duration: float = 0.0) -> List[VirtualNode]:
+        sched = self._transient(nodes, now)
+        rec = sched.cluster.submit(_spec_only(pod), now,
+                                   expected_duration=expected_duration)
+        return [n for n in nodes if sched.feasible(rec, n, now) is None]
 
     def match(self, pod: Pod, nodes: List[VirtualNode], now: float,
               expected_duration: float = 0.0) -> MatchResult:
-        cands = self.filter_nodes(pod, nodes, now, expected_duration)
-        if not cands:
+        sched = self._transient(nodes, now)
+        rec = sched.cluster.submit(_spec_only(pod), now,
+                                   expected_duration=expected_duration)
+        node, reason = sched.select_node(rec, now)
+        if node is None:
             return MatchResult(pod.name, None, "no node satisfies request")
-        recs = self.fm.pool
-        # non-stragglers first, then tightest HBM fit
-        cands.sort(key=lambda n: (recs[n.name].straggler,
-                                  n.free_hbm() - pod.request_hbm_bytes))
-        return MatchResult(pod.name, cands[0].name, "best-fit")
+        return MatchResult(pod.name, node.name, "best-fit")
 
     def bind(self, pod: Pod, nodes: List[VirtualNode], now: float,
              expected_duration: float = 0.0) -> MatchResult:
@@ -73,3 +70,9 @@ class MatchingService:
             node = next(n for n in nodes if n.name == res.node)
             node.create_pod(pod, now)
         return res
+
+
+def _spec_only(pod: Pod) -> Pod:
+    """The transient cluster must not mutate the caller's pod."""
+    import dataclasses
+    return dataclasses.replace(pod, containers=list(pod.containers))

@@ -101,8 +101,7 @@ class VirtualNode:
         pod = self.pods.pop(name, None)
         if pod:
             for cont in pod.containers:
-                cont._finished = True
-                get_pods_container(cont, now)
+                cont.terminate(now)
         return pod
 
     def tolerates(self, pod: Pod) -> bool:

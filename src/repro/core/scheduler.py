@@ -1,0 +1,272 @@
+"""Reconciling scheduler — queue-based refactor of the JMS (paper §3).
+
+The seed's ``MatchingService.bind`` filtered, sorted, and mutated nodes in
+one imperative shot. Here scheduling is a control loop over the Cluster
+store's pending queue:
+
+  * pluggable **filter stages** (predicates: Ready/schedulable,
+    tolerations, nodeSelector, affinity, chips/HBM resources, walltime
+    lease vs expected duration + drain margin),
+  * pluggable **score stages** (non-straggler preference, best-fit HBM —
+    the tightest feasible fit wins),
+  * **retry with exponential backoff** for unschedulable pods (the queue
+    is re-examined every ``run_once``; failures emit FailedScheduling
+    events instead of silently dropping),
+  * **drain-aware preemption**: a pod that cannot fit may evict strictly
+    lower-priority pods from a healthy (never draining) node; victims are
+    requeued, not lost.
+
+``MatchingService`` (jms.py) remains as a thin one-shot facade over the
+same filter/score stages for legacy callers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Tuple
+
+from repro.core.cluster import KIND_POD, Cluster, PodRecord
+from repro.core.jrm import VirtualNode
+
+# A filter returns None when the node is feasible, else a reject reason.
+FilterStage = Callable[[PodRecord, VirtualNode, "Scheduler", float],
+                       Optional[str]]
+# A scorer returns a number; higher is better.
+ScoreStage = Callable[[PodRecord, VirtualNode, "Scheduler", float], float]
+
+
+# ------------------------------------------------------------ filter stages
+
+def filter_node_ready(rec, node, sched, now):
+    st = sched.cluster.node_status.get(node.name)
+    if st is None or not st.ready:
+        return "node not ready"
+    if not st.schedulable:
+        return "node cordoned"
+    if node.draining(now):
+        return "node draining"
+    return None
+
+
+def filter_tolerations(rec, node, sched, now):
+    if not node.tolerates(rec.pod):
+        return "taint not tolerated"
+    return None
+
+
+def filter_node_selector(rec, node, sched, now):
+    lab = node.labels(now)
+    for k, v in rec.pod.node_selector.items():
+        if lab.get(k) != v:
+            return f"nodeSelector {k}={v} unmatched"
+    return None
+
+
+def filter_affinity(rec, node, sched, now):
+    if rec.pod.affinity and not node.matches(rec.pod.affinity, now):
+        return "affinity unmatched"
+    return None
+
+
+def filter_resources(rec, node, sched, now):
+    if node.free_chips() < rec.pod.request_chips:
+        return "insufficient chips"
+    if node.free_hbm() < rec.pod.request_hbm_bytes:
+        return "insufficient HBM"
+    return None
+
+
+def filter_walltime(rec, node, sched, now):
+    """§4.5.4: only place work that can finish before the drain margin."""
+    left = node.alive_left(now)
+    if left != float("inf") and \
+            left < rec.expected_duration + node.drain_margin:
+        return "walltime lease too short"
+    return None
+
+
+DEFAULT_FILTERS: List[FilterStage] = [
+    filter_node_ready, filter_tolerations, filter_node_selector,
+    filter_affinity, filter_resources, filter_walltime,
+]
+
+
+# ------------------------------------------------------------- score stages
+
+# Scorers are compared LEXICOGRAPHICALLY in list order: a later stage only
+# breaks ties left by every earlier stage, so magnitudes never leak across
+# stages.
+
+def score_non_straggler(rec, node, sched, now):
+    """Stage 1: avoid straggler nodes (heartbeat-latency signal from JFM)."""
+    st = sched.cluster.node_status.get(node.name)
+    return -1.0 if (st is not None and st.straggler) else 0.0
+
+
+def score_bestfit_hbm(rec, node, sched, now):
+    """Stage 2: tightest absolute HBM fit that still holds the pod (the
+    seed JMS policy)."""
+    return -(node.free_hbm() - rec.pod.request_hbm_bytes)
+
+
+def score_spread(rec, node, sched, now):
+    """Stage 3: balance pods across nodes so one drained lease takes out
+    as few replicas as possible."""
+    return -node.used_chips() / max(float(node.slice_spec.chips), 1.0)
+
+
+DEFAULT_SCORERS: List[ScoreStage] = [score_non_straggler, score_bestfit_hbm,
+                                     score_spread]
+
+
+@dataclass
+class Decision:
+    pod: str
+    node: Optional[str]
+    reason: str = ""
+    preempted: Tuple[str, ...] = ()
+
+
+@dataclass
+class Scheduler:
+    cluster: Cluster
+    filters: List[FilterStage] = field(
+        default_factory=lambda: list(DEFAULT_FILTERS))
+    scorers: List[ScoreStage] = field(
+        default_factory=lambda: list(DEFAULT_SCORERS))
+    backoff_base: float = 5.0
+    backoff_max: float = 60.0
+    enable_preemption: bool = True
+
+    # ------------------------------------------------------ single pod
+    def feasible(self, rec: PodRecord, node: VirtualNode,
+                 now: float) -> Optional[str]:
+        for f in self.filters:
+            reason = f(rec, node, self, now)
+            if reason is not None:
+                return reason
+        return None
+
+    def score(self, rec: PodRecord, node: VirtualNode,
+              now: float) -> Tuple[float, ...]:
+        """Lexicographic key: scorers[0] dominates, later ones break ties."""
+        return tuple(s(rec, node, self, now) for s in self.scorers)
+
+    def select_node(self, rec: PodRecord,
+                    now: float) -> Tuple[Optional[VirtualNode], str]:
+        reasons = []
+        cands = []
+        for node in self.cluster.nodes.values():
+            reason = self.feasible(rec, node, now)
+            if reason is None:
+                cands.append(node)
+            else:
+                reasons.append(f"{node.name}: {reason}")
+        if not cands:
+            return None, "; ".join(reasons) or "no nodes registered"
+        best = max(cands, key=lambda n: self.score(rec, n, now))
+        return best, "best-fit"
+
+    # ------------------------------------------------------ preemption
+    def _try_preempt(self, rec: PodRecord, now: float) -> Optional[Decision]:
+        """Evict strictly lower-priority pods from one healthy node so
+        ``rec`` fits. Victims are requeued (declared again as pending) —
+        preemption moves work, it never loses it."""
+        best = None
+        for node in self.cluster.nodes.values():
+            # every non-resource constraint still applies to the preemptor:
+            # only capacity may be freed by evicting, never tolerations,
+            # selectors, affinity, or the walltime lease (which also keeps
+            # draining nodes out)
+            infeasible = any(
+                f(rec, node, self, now) is not None
+                for f in self.filters if f is not filter_resources)
+            if infeasible:
+                continue
+            victims = sorted(
+                (v for v in self.cluster.pods_on(node.name)
+                 if v.priority < rec.priority),
+                key=lambda v: v.priority)
+            freed_chips = node.free_chips()
+            freed_hbm = node.free_hbm()
+            chosen = []
+            for v in victims:
+                if freed_chips >= rec.pod.request_chips and \
+                        freed_hbm >= rec.pod.request_hbm_bytes:
+                    break
+                chosen.append(v)
+                freed_chips += v.pod.request_chips
+                freed_hbm += v.pod.request_hbm_bytes
+            if not chosen or freed_chips < rec.pod.request_chips or \
+                    freed_hbm < rec.pod.request_hbm_bytes:
+                # zero victims means select_node already rejected this node
+                # for a non-preemptable reason — nothing to free here
+                continue
+            cost = sum(v.priority for v in chosen), len(chosen)
+            if best is None or cost < best[0]:
+                best = (cost, node, chosen)
+        if best is None:
+            return None
+        _, node, chosen = best
+        names = []
+        for v in chosen:
+            evicted = self.cluster.evict(
+                v.name, now, reason="Preempted",
+                message=f"for {rec.name} (priority {rec.priority})")
+            if evicted is None:
+                continue
+            # requeue the victim: same spec, fresh scheduling bookkeeping
+            requeued = self.cluster.submit(
+                _reset_pod(evicted.pod), now, owner=evicted.owner,
+                priority=evicted.priority,
+                expected_duration=evicted.expected_duration,
+                restored_from=evicted.restored_from,
+                restored_state=evicted.restored_state)
+            requeued.next_retry = now   # eligible immediately
+            names.append(v.name)
+        self.cluster.assign(rec.name, node.name, now)
+        return Decision(rec.name, node.name, "preempted", tuple(names))
+
+    # ------------------------------------------------------- main loop
+    def run_once(self, now: float) -> List[Decision]:
+        """One reconcile pass over the pending queue: highest priority
+        first, then FIFO; pods in backoff are skipped until their retry
+        time."""
+        out = []
+        pending = sorted(self.cluster.pending_pods(),
+                         key=lambda r: (-r.priority, r.submitted_at))
+        for rec in pending:
+            if rec.name not in self.cluster.pods:
+                continue                     # preempted away this pass
+            if rec.next_retry > now:
+                continue
+            node, reason = self.select_node(rec, now)
+            if node is not None:
+                self.cluster.assign(rec.name, node.name, now)
+                out.append(Decision(rec.name, node.name, reason))
+                continue
+            if self.enable_preemption:
+                dec = self._try_preempt(rec, now)
+                if dec is not None:
+                    out.append(dec)
+                    continue
+            rec.attempts += 1
+            rec.last_reason = reason
+            backoff = min(self.backoff_base * (2 ** (rec.attempts - 1)),
+                          self.backoff_max)
+            rec.next_retry = now + backoff
+            self.cluster.record(now, KIND_POD, rec.name, "FailedScheduling",
+                                f"attempt={rec.attempts} retry_in={backoff:.0f}s"
+                                f": {reason}")
+            out.append(Decision(rec.name, None, reason))
+        return out
+
+
+def _reset_pod(pod):
+    """Fresh incarnation of an evicted pod's spec for requeueing."""
+    import dataclasses
+
+    from repro.core.state_machine import Container
+    return dataclasses.replace(
+        pod, node=None, start_time=None, conditions=[],
+        containers=[Container(name=c.name, command=c.command,
+                              fail_at=c.fail_at) for c in pod.containers])

@@ -116,6 +116,20 @@ class Container:
     # hooks let tests inject failures at any CreatePod stage
     fail_at: Optional[str] = None
 
+    def finish(self):
+        """Workload signals natural completion; the next GetPods walk
+        observes it and transitions to get-cont-completed."""
+        self._finished = True
+
+    def terminate(self, now: float) -> ContainerState:
+        """Public SIGTERM analog (paper: kill the pgid process group).
+
+        Marks the workload finished and immediately re-derives the state
+        through the GetPods walk, so callers never have to poke
+        ``_finished`` directly."""
+        self._finished = True
+        return get_pods_container(self, now)
+
 
 _PGID_COUNTER = [1000]
 

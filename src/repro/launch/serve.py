@@ -2,15 +2,19 @@
 re-done as a TPU streaming-inference deployment with the §6 digital twin
 in the control loop.
 
-Flow: JFE add_wf -> JCS pilot launch (staggered JRM/VK bring-up, SSH port
-map) -> JFM scrape -> JMS binds serving pods -> StreamEngine serves real
-batched prefill+decode -> Prometheus scrapes -> DBN twin (or reactive HPA)
-drives elastic replica scaling as the arrival rate follows the §6.2
-ground-truth pressure trajectory.
+Flow (declarative control plane): JFE add_wf -> JCS pilot launch
+(staggered JRM/VK bring-up, SSH port map) -> nodes registered in the
+Cluster store -> JFM feeds heartbeats as NodeStatus -> StreamEngine
+declares an "ersap" Deployment -> DeploymentController + Scheduler
+converge pods -> real batched prefill+decode -> Prometheus scrapes ->
+DBN twin (or reactive HPA) writes desired replicas on the Deployment as
+the arrival rate follows the §6.2 ground-truth pressure trajectory. A
+``--walltime`` lease makes the NodeLifecycleController drain nodes
+mid-run: checkpoint, evict, reschedule — visible in the event trail.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --devices 8 \
-      --tp 2 --nodes 4 --ticks 80 [--controller hpa]
+      --tp 2 --nodes 4 --ticks 80 [--controller hpa] [--walltime 300]
 """
 import argparse
 import os
@@ -30,12 +34,12 @@ import jax                                        # noqa: E402
 import numpy as np                                # noqa: E402
 
 from repro.configs.base import get_config         # noqa: E402
+from repro.core.cluster import Cluster            # noqa: E402
 from repro.core.elastic import ElasticServing     # noqa: E402
 from repro.core.hpa import HPA, HPAConfig         # noqa: E402
 from repro.core.jcs import CentralService         # noqa: E402
 from repro.core.jfe import FrontEnd               # noqa: E402
 from repro.core.jfm import FacilityManager        # noqa: E402
-from repro.core.jms import MatchingService        # noqa: E402
 from repro.core.jrm import SliceSpec              # noqa: E402
 from repro.core.digital_twin.queue_model import ground_truth, lam_of_state  # noqa: E402
 from repro.models import model_api as MA          # noqa: E402
@@ -53,6 +57,9 @@ def main(argv=None):
     ap.add_argument("--controller", choices=["twin", "hpa"], default="twin")
     ap.add_argument("--lam-scale", type=float, default=0.02,
                     help="arrival rate = lam_of_state(s) * scale req/s")
+    ap.add_argument("--walltime", type=float, default=0.0,
+                    help="per-node lease (s); >0 exercises the drain ->"
+                         " checkpoint -> reschedule loop mid-run")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).reduced()
@@ -60,16 +67,17 @@ def main(argv=None):
     # ---- JIRIAF control plane bring-up (paper §3 component flow) ----
     fe = FrontEnd()
     wf = fe.add_wf("vk-tpu-", args.nodes, nodetype="tpu", site="tpu-pod",
-                   walltime=0.0)
+                   walltime=args.walltime)
     jcs = CentralService(fe)
     pilot = jcs.launch_pilot(wf, now=0.0, slice_spec=SliceSpec(
         chips=max(args.devices // args.nodes, 1)))
     nodes = jcs.node_list()
-    fm = FacilityManager()
-    jms = MatchingService(fm)
+    cluster = Cluster()
     for n in nodes:
-        n.tick(0.0)
-    fm.scrape(nodes, 0.0)
+        cluster.register_node(n, 0.0)
+        cluster.heartbeat(n.name, 0.0)
+    fm = FacilityManager()
+    fm.feed(cluster, 0.0)
     print(f"[jcs] pilot {pilot.wf_id}: {len(pilot.nodes)} JRM nodes, "
           f"{len(pilot.tunnels)} SSH tunnels")
     print(f"[jfm] pool: {fm.total_free_chips()} free chips on "
@@ -90,9 +98,10 @@ def main(argv=None):
                           use_twin=(args.controller == "twin"),
                           hpa=HPA(HPAConfig(target=8.0, max_replicas=
                                             serving.max_replicas(),
-                                            scale_down_stabilization=120.0)))
+                                            scale_down_stabilization=120.0)),
+                          cluster=cluster)
     engine.deploy(0.0)
-    print(f"[jms] {len(engine.pods)} serving pods bound; "
+    print(f"[scheduler] {len(engine.pods)} serving pods bound; "
           f"controller={args.controller}")
 
     # ---- drive with the §6.2 pressure trajectory ----
@@ -100,27 +109,30 @@ def main(argv=None):
     for t, s in enumerate(gt):
         now = t * args.dt
         lam = lam_of_state(s) * args.lam_scale
+        for n in nodes:
+            cluster.heartbeat(n.name, now)
+        fm.feed(cluster, now)
+        engine.reconcile(now)          # controllers converge every tick
         qlen = engine.tick(now, args.dt, lam)
         if t % 2 == 1:
             engine.control_step(now)
-        for n in nodes:
-            n.tick(now)
-        fm.scrape(nodes, now)
         if t % 10 == 0:
-            served = sum(st.served for st in engine.stats.values())
             print(f"t={t:3d} state={s:.1f} lam={lam:6.1f} queue={qlen:4d} "
                   f"replicas={engine.serving.replicas} "
-                  f"control={engine.control} served={served}")
+                  f"control={engine.control} served={engine.total_served}")
 
-    served = sum(st.served for st in engine.stats.values())
-    toks = sum(st.tokens for st in engine.stats.values())
     lat = [engine.registries[r].histogram("ersap_latency_s").mean
            for r in engine.registries if
            engine.registries[r].metrics.get("ersap_latency_s")]
-    print(f"[done] served={served} requests, {toks} tokens; "
+    print(f"[done] served={engine.total_served} requests, "
+          f"{engine.total_tokens} tokens; "
           f"scale events={engine.serving.scale_events}; "
           f"mean latency={np.mean(lat) if lat else 0:.1f}s; "
           f"final queue={len(engine.queue)}")
+    trail = {}
+    for ev in cluster.events:
+        trail[ev.reason] = trail.get(ev.reason, 0) + 1
+    print(f"[events] {dict(sorted(trail.items()))}")
     return engine
 
 

@@ -313,6 +313,10 @@ def analyze(hlo: str, default_group: int = 1) -> LoopAwareCounts:
             elif op in ("call", "conditional", "custom-call") and inst.called:
                 for c in inst.called:
                     walk(c, mult, stack + (comp_name,))
+                # traffic is accounted inside the callee; charging the call
+                # wrapper's operands too would double-count (CPU XLA wraps
+                # each fusion in a parallel-task `call`)
+                continue
             # HBM traffic: operands + result for every top-level kernel-ish op
             if op not in _SKIP_TRAFFIC and op != "while":
                 if op in ("dynamic-slice", "slice"):

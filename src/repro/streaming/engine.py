@@ -1,14 +1,23 @@
 """ERSAP-analog streaming inference engine (paper §5 workload + §6 queue).
 
 Pipeline: RequestSource (Poisson sender) -> FIFO queue -> batcher ->
-serving replicas (real prefill+decode on the mesh) -> sink. Each replica
-is a JIRIAF pod on a VirtualNode, exports metrics (queue depth, served,
-latency) through the §4.6 monitoring stack, and the control loop couples
-the §4.4 HPA and the §6 digital twin to elastic replica scaling.
+serving replicas (real prefill+decode on the mesh) -> sink.
+
+Declarative control plane: the engine no longer hand-creates pods by
+naming convention. It declares a ``Deployment`` ("ersap") in the Cluster
+store; the DeploymentController converges ``spec.replicas`` -> pods, the
+Scheduler places them (spread across nodes, straggler-averse), and the
+NodeLifecycleController drains walltime-expiring nodes — checkpointing
+each replica's runtime state via ``repro.checkpoint`` so the rescheduled
+replica resumes its counters. The HPA and the digital-twin policy are
+both *desired-replica writers*: ``control_step`` computes a target and
+writes ``Deployment.replicas``; reconciliation does the rest. Metrics
+(queue depth, served, latency) flow through the §4.6 monitoring stack,
+whose Service endpoints are rebuilt from live pods every sync (retired
+replicas leave no stale scrape targets).
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -16,15 +25,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.cluster import Cluster, Deployment, PodTemplate
+from repro.core.controllers import ControlPlane
 from repro.core.hpa import HPA, HPAConfig, MetricSample
 from repro.core.jrm import VirtualNode
 from repro.core.metrics import (Endpoint, Prometheus, Registry, Service,
                                 ServiceMonitor)
-from repro.core.state_machine import Container, Pod
+from repro.core.state_machine import Pod
 from repro.core.digital_twin.control import ControlPolicy, replicas_for_control
 from repro.core.digital_twin.dbn import DigitalTwin
 from repro.data.pipeline import Request, RequestSource
 from repro.models import model_api as MA
+
+DEPLOYMENT = "ersap"
 
 
 @dataclass
@@ -42,7 +55,6 @@ class StreamEngine:
     service_rate: float = 40.0        # requests/s one replica can absorb
     queue: List[Request] = field(default_factory=list)
     source: RequestSource = field(default_factory=RequestSource)
-    pods: Dict[str, Pod] = field(default_factory=dict)
     registries: Dict[str, Registry] = field(default_factory=dict)
     prom: Prometheus = field(default_factory=Prometheus)
     stats: Dict[str, ReplicaStats] = field(default_factory=dict)
@@ -54,40 +66,91 @@ class StreamEngine:
     base_replicas: int = 1
     use_twin: bool = True
     history: list = field(default_factory=list)
+    # declarative control plane (built from ``nodes`` unless injected)
+    cluster: Optional[Cluster] = None
+    plane: Optional[ControlPlane] = None
+    total_served: int = 0
+    total_tokens: int = 0
+    _cp_ports: Dict[str, int] = field(default_factory=dict)
 
     # ------------------------------------------------------------ setup
+    @property
+    def pods(self) -> Dict[str, Pod]:
+        """Live bound pods of the ersap Deployment (status view)."""
+        if self.cluster is None:
+            return {}
+        return {r.name: r.pod
+                for r in self.cluster.pods_of(DEPLOYMENT) if r.bound}
+
+    def _ensure_plane(self, now: float):
+        if self.cluster is None:
+            self.cluster = Cluster()
+        for n in self.nodes:
+            if n.name not in self.cluster.nodes:
+                self.cluster.register_node(n, now)
+        if self.plane is None:
+            self.plane = ControlPlane(self.cluster)
+
+    def _replica_state(self, name: str) -> Optional[dict]:
+        st = self.stats.get(name)
+        if st is None:
+            return None
+        return {"served": st.served, "tokens": st.tokens}
+
     def deploy(self, now: float = 0.0):
-        """Create one pod per current replica on the least-loaded nodes and
-        wire the monitoring stack (Service + ServiceMonitor + Prometheus)."""
+        """Declare (or re-declare) the serving Deployment at the current
+        replica count and reconcile until pods and monitoring converge."""
+        self._ensure_plane(now)
+        if DEPLOYMENT not in self.cluster.deployments:
+            self.cluster.apply_deployment(Deployment(
+                DEPLOYMENT, self.serving.replicas,
+                template=PodTemplate(
+                    labels={"app": "ersap"},
+                    tolerations=[{"key": "virtual-kubelet.io/provider",
+                                  "value": "mock"}],
+                    request_chips=self.serving.tp,
+                    checkpoint_state=self._replica_state)), now)
+        else:
+            self.cluster.scale(DEPLOYMENT, self.serving.replicas, now,
+                               source="engine")
+        self.reconcile(now)
+
+    def reconcile(self, now: float):
+        """One control-plane step + engine-side sync (registries, stats,
+        Service endpoints follow the pod set — nothing leaks on retire)."""
+        self._ensure_plane(now)
+        self.plane.step(now)
+        self._sync(now)
+
+    def _sync(self, now: float):
+        live = {r.name: r for r in self.cluster.pods_of(DEPLOYMENT)
+                if r.bound}
+        for name in list(self.registries):
+            if name not in live:
+                self.registries.pop(name, None)
+                self.stats.pop(name, None)
+        for name, rec in sorted(live.items()):
+            if name in self.registries:
+                continue
+            self.registries[name] = Registry(port=2221)
+            st = ReplicaStats()
+            if rec.restored_state:
+                st.served = int(rec.restored_state.get("served", 0))
+                st.tokens = int(rec.restored_state.get("tokens", 0))
+            self.stats[name] = st
+        # Service endpoints rebuilt from live pods only (§4.6.3 port remap
+        # stays unique per pod even though all VK pods share one pod IP)
         svc = Service("ersap-metrics", selector={"app": "ersap"},
                       labels={"monitored": "true"})
-        for i in range(self.serving.replicas):
-            name = f"ersap-{i}"
-            if name in self.pods:
+        for name, rec in sorted(live.items()):
+            node = self.cluster.nodes.get(rec.pod.node)
+            if node is None:
                 continue
-            pod = Pod(name=name,
-                      containers=[Container(name="ersap-engine")],
-                      labels={"app": "ersap"},
-                      tolerations=[{"key": "virtual-kubelet.io/provider",
-                                    "value": "mock"}],
-                      request_chips=self.serving.tp)
-            node = min(self.nodes, key=lambda n: n.used_chips())
-            node.create_pod(pod, now)
-            self.pods[name] = pod
-            reg = Registry(port=2221)
-            self.registries[name] = reg
-            self.stats[name] = ReplicaStats()
+            if name not in self._cp_ports:
+                self._cp_ports[name] = 20000 + len(self._cp_ports)
             svc.add_endpoint(Endpoint(
                 pod=name, pod_ip=node.pod_ip, port=2221,
-                cp_port=20000 + i, registry=reg))
-        # retire pods beyond replica count (scale down)
-        for i in range(self.serving.replicas, len(self.pods)):
-            name = f"ersap-{i}"
-            pod = self.pods.pop(name, None)
-            if pod and pod.node:
-                node = next(n for n in self.nodes if n.name == pod.node)
-                node.delete_pod(name, now)
-                self.registries.pop(name, None)
+                cp_port=self._cp_ports[name], registry=self.registries[name]))
         self.prom.services = [svc]
         if not self.prom.monitors:
             self.prom.monitors = [ServiceMonitor(
@@ -95,16 +158,14 @@ class StreamEngine:
 
     # ------------------------------------------------------------- tick
     def tick(self, now: float, dt: float, lam: float):
-        """One engine step of simulated time dt with arrival rate lam."""
+        """One engine step of simulated time dt with arrival rate lam.
+        Capacity follows the *actual* replica set in the cluster store."""
         self.queue.extend(self.source.arrivals(now, dt, lam))
         # per-replica service capacity this tick (mu * dt, M/M/1 analog —
         # doubling replicas doubles capacity, the paper's 16->32 threads)
         budget = int(self.service_rate * dt)
-        for i in range(self.serving.replicas):
-            name = f"ersap-{i}"
-            reg = self.registries.get(name)
-            if reg is None:
-                continue
+        for name in sorted(self.registries):
+            reg = self.registries[name]
             n_take = min(len(self.queue), budget)
             took, self.queue = self.queue[:n_take], self.queue[n_take:]
             for j in range(0, len(took), self.max_batch):
@@ -139,6 +200,8 @@ class StreamEngine:
         st = self.stats[replica]
         st.served += B
         st.tokens += B * n_new
+        self.total_served += B
+        self.total_tokens += B * n_new
         reg.counter("ersap_served_total").inc(B)
         reg.counter("ersap_tokens_total").inc(B * n_new)
         for r in requests:
@@ -147,19 +210,25 @@ class StreamEngine:
 
     # ---------------------------------------------------------- control
     def control_step(self, now: float):
-        """Assimilate queue depth into the twin; recommend capacity; apply
-        via elastic scaling. HPA path available for the reactive baseline."""
+        """Assimilate queue depth into the twin; both the twin policy and
+        the reactive HPA are desired-replica *writers* on the Deployment —
+        the controllers/scheduler converge the pod set."""
         qlen = max(len(self.queue), 1e-3)
         self.twin.assimilate(qlen, self.control)
         if self.use_twin:
             self.control = self.policy.recommend(self.twin, self.control, now)
             desired = replicas_for_control(self.control, self.base_replicas)
+            source = "digital-twin"
         else:
-            samples = {name: MetricSample(qlen / max(len(self.pods), 1), now)
-                       for name in self.pods}
-            desired = self.hpa.evaluate(list(self.pods.values()), samples, now)
-        desired = min(desired, self.serving.max_replicas())
+            pods = self.pods
+            samples = {name: MetricSample(qlen / max(len(pods), 1), now)
+                       for name in pods}
+            desired = self.hpa.evaluate(list(pods.values()), samples, now)
+            source = "hpa"
+        desired = max(1, min(desired, self.serving.max_replicas()))
         if desired != self.serving.replicas:
             self.serving.scale_to(desired, now)
-            self.deploy(now)
+        if self.cluster is not None and DEPLOYMENT in self.cluster.deployments:
+            self.cluster.scale(DEPLOYMENT, desired, now, source=source)
+            self.reconcile(now)
         return desired

@@ -1,0 +1,93 @@
+"""Minimal deterministic stand-in for ``hypothesis`` so the tier-1 suite
+runs in clean environments (the CI workflow installs the real library and
+exercises the full path).
+
+Supports exactly what this repo's tests use: ``@settings(max_examples=N,
+deadline=None)``, ``@given(**kwargs)`` with the strategies ``integers``,
+``floats``, ``booleans``, ``sampled_from``, and ``data()`` with
+``data.draw(...)``. Examples are drawn from a seeded PRNG, so failures
+reproduce run-to-run. Example counts are capped (property sweeps stay
+cheap without the real shrinker's value).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+_MAX_EXAMPLES_CAP = 25
+_DEFAULT_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def example_from(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies``."""
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def sampled_from(seq):
+        items = list(seq)
+        return _Strategy(lambda rng: items[rng.randrange(len(items))])
+
+    @staticmethod
+    def data():
+        return _Strategy(lambda rng: _Data(rng))
+
+
+st = strategies
+
+
+class _Data:
+    """Stand-in for the interactive ``data()`` strategy object."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy, label=None):
+        return strategy.example_from(self._rng)
+
+
+def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = min(max_examples, _MAX_EXAMPLES_CAP)
+        return fn
+    return deco
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        _DEFAULT_EXAMPLES)
+            for i in range(n):
+                rng = random.Random(1_000_003 * (i + 1))
+                drawn = {name: strat.example_from(rng)
+                         for name, strat in strategy_kwargs.items()}
+                fn(*args, **drawn, **kwargs)
+        # hide strategy-filled params so pytest doesn't treat them as
+        # fixtures (real hypothesis does the same)
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items()
+            if name not in strategy_kwargs])
+        return wrapper
+    return deco

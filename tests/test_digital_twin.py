@@ -1,7 +1,10 @@
 """Digital twin per paper §6: Eq. (3), Tables 8/9, DBN tracking, control."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # clean env: deterministic fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.digital_twin.control import ControlPolicy, replicas_for_control
 from repro.core.digital_twin.dbn import (DigitalTwin, observation_means,

@@ -1,7 +1,10 @@
 """HPA per paper §4.4: Eq. (1), readiness gating, stabilization."""
 import math
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # clean env: deterministic fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.hpa import (HPA, HPAConfig, MetricSample, desired_replicas,
                             pod_is_unready)

@@ -1,6 +1,13 @@
 """Sharding resolver + ZeRO spec rules + sharded-vs-unsharded equivalence."""
+import os
 import subprocess
 import sys
+
+SUB_ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+# without this, jax spends minutes probing for accelerator platforms in
+# the stripped subprocess environment
+if "JAX_PLATFORMS" in os.environ:
+    SUB_ENV["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
 
 import jax
 import jax.numpy as jnp
@@ -38,11 +45,13 @@ def test_divisible_dims_get_model_axis():
 def test_non_divisible_heads_fall_back_to_replicated():
     c = ctx16()
     # 28 heads % 16 != 0 -> None
+    # (singleton-tuple spelling P(("data",)) only compares equal to this on
+    # newer jax; the bare form means the same sharding on every version)
     assert c.spec(("batch", None, "heads", None), (256, 4096, 28, 128)) == \
-        P(("data",))
+        P("data")
     # 32 heads divides -> sharded
     sp = c.spec(("batch", None, "heads", None), (256, 4096, 32, 128))
-    assert sp == P(("data",), None, "model")
+    assert sp == P("data", None, "model")
 
 
 def test_axis_used_once_per_spec():
@@ -123,8 +132,7 @@ assert d < 1e-3, d
 print("OK")
 """
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                                       "HOME": "/root"}, cwd="/root/repo",
+                       text=True, env=dict(SUB_ENV), cwd="/root/repo",
                        timeout=420)
     assert "OK" in r.stdout, r.stdout + r.stderr
 
@@ -136,7 +144,6 @@ def test_dryrun_one_cell_compiles_on_512_devices():
         [sys.executable, "-m", "repro.launch.dryrun", "--arch", "hymba-1.5b",
          "--shape", "long_500k", "--mesh", "pod", "--out", "/tmp/dryrun_test"],
         capture_output=True, text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
-        cwd="/root/repo", timeout=420)
+        env=dict(SUB_ENV), cwd="/root/repo", timeout=420)
     assert r.returncode == 0, r.stdout + r.stderr
     assert "ok" in r.stdout

@@ -1,6 +1,9 @@
 """Paper §4.3: container/pod lifecycle state machines (Tables 6/7)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # clean env: deterministic fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.state_machine import (CREATE_STAGES, CREATE_UIDS, GET_UIDS,
                                       Condition, ConditionStatus, Container,

@@ -5,7 +5,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # clean env: deterministic fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.checkpoint import checkpointer as ckpt
 from repro.data.pipeline import DataConfig, RequestSource, SyntheticDataset

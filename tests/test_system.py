@@ -7,7 +7,13 @@ import sys
 
 import pytest
 
+import os
+
 ENV = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}
+# without this, jax spends minutes probing for accelerator platforms in
+# the stripped subprocess environment
+if "JAX_PLATFORMS" in os.environ:
+    ENV["JAX_PLATFORMS"] = os.environ["JAX_PLATFORMS"]
 CWD = "/root/repo"
 
 
