@@ -1,6 +1,11 @@
 """Benchmark harness: one function per paper table/figure.
 
-Output: ``name,us_per_call,derived`` CSV rows.
+Output: ``name,us_per_call,derived`` CSV rows on stdout, plus a
+machine-readable ``BENCH_run.json`` (every row) written next to the repo
+root so the perf trajectory is tracked across PRs.
+``bench_serving_throughput`` additionally persists ``BENCH_serving.json``
+(chunked-vs-runtime tokens/s, trace counts).
+
   Table 6/7  -> bench_lifecycle_create / bench_lifecycle_monitor
   Eq.1/4.4.4 -> bench_hpa_formula
   4.4.5      -> bench_hpa_scaling
@@ -8,8 +13,12 @@ Output: ``name,us_per_call,derived`` CSV rows.
   Fig. 8     -> bench_dbn_tracking
   Fig. 9     -> bench_dbn_control
   5.1        -> bench_deployment_40
+  serving    -> bench_serving_throughput (slot-slab runtime vs chunked)
   kernels    -> bench_kernel_* (interpret-mode Pallas vs jnp oracle)
   dry-run    -> bench_roofline (reads experiments/dryrun)
+
+CLI: ``--only SUBSTR`` runs matching benches, ``--fast`` shrinks the
+serving workload for CI smoke, ``--json-dir DIR`` relocates the JSONs.
 """
 from __future__ import annotations
 
@@ -18,6 +27,11 @@ import pathlib
 import time
 
 import numpy as np
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+RESULTS: list = []
+FAST = False
+JSON_DIR = ROOT
 
 
 def _timeit(fn, n=100, warmup=3):
@@ -31,6 +45,15 @@ def _timeit(fn, n=100, warmup=3):
 
 def row(name, us, derived):
     print(f"{name},{us:.1f},{derived}")
+    metrics = {}
+    for part in str(derived).split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            try:
+                metrics[k] = float(v)
+            except ValueError:
+                metrics[k] = v
+    RESULTS.append({"name": name, "us": round(us, 1), "derived": metrics})
 
 
 # ---------------------------------------------------------- Tables 6 & 7
@@ -257,6 +280,81 @@ def bench_control_plane_churn():
         f"replicas_bound={bound};rescheduled={moved};events={events}")
 
 
+# ------------------------------------------------------- serving runtime
+
+def bench_serving_throughput():
+    """Slot-slab continuous-batching runtime vs the pre-PR chunked path on
+    qwen2-7b ``.reduced()``: same request set (randomized prompt_len /
+    max_new), tokens/s of *useful* tokens (sum of max_new). Both paths get
+    a warm-up pass so the headline number is steady-state; cold (compiling)
+    pass time is reported alongside — retrace avoidance is most of the
+    cold-path story. Persists BENCH_serving.json."""
+    import jax
+    from repro.configs.base import get_config
+    from repro.core.elastic import ElasticServing
+    from repro.core.jrm import SliceSpec, start_vk
+    from repro.data.pipeline import RequestSource
+    from repro.models import model_api as MA
+    from repro.streaming.engine import StreamEngine
+
+    cfg = get_config("qwen2-7b").reduced()
+    mod = MA.get_module(cfg)
+    host = jax.tree.map(np.asarray, mod.init(jax.random.PRNGKey(0), cfg))
+    serving = ElasticServing(cfg, tp=1).build(1, host_params=host)
+    n_req = 24 if FAST else 96
+
+    def request_set():
+        # mixed generation lengths: the workload where chunked serving
+        # over-decodes every request to its chunk's max (and where the
+        # runtime's per-slot accounting pays exact cost)
+        src = RequestSource(seed=7, prompt_range=(8, 48),
+                            max_new_range=(2, 32))
+        return src.arrivals(0.0, 1.0, lam=float(n_req))
+
+    def run_path(use_runtime):
+        nodes = [start_vk("bench-n0", now=0.0,
+                          slice_spec=SliceSpec(chips=4))]
+        eng = StreamEngine(cfg, serving, nodes, service_rate=1e9,
+                           max_batch=8, use_runtime=use_runtime)
+        eng.deploy(0.0)
+
+        def one_pass(now):
+            eng.queue.extend(request_set())
+            t0 = time.perf_counter()
+            eng.tick(now, 1.0, lam=0.0)
+            return time.perf_counter() - t0
+
+        n_pass = 4
+        cold = one_pass(0.0)
+        warm = min(one_pass(float(t)) for t in range(1, n_pass))
+        tokens = sum(r.max_new for r in request_set())
+        out = {"cold_s": round(cold, 4), "s": round(warm, 4),
+               "tok_per_s": round(tokens / warm, 1), "useful_tokens": tokens}
+        if use_runtime and eng.runtimes:
+            rt = next(iter(eng.runtimes.values()))
+            out["traces"] = dict(rt.kernels.trace_counts)
+            out["trace_bound"] = rt.kernels.max_traces
+        assert len(eng.completed) == n_pass * len(request_set())
+        return out
+
+    chunked = run_path(False)
+    runtime = run_path(True)
+    speedup = chunked["s"] / runtime["s"]
+    cold_speedup = chunked["cold_s"] / runtime["cold_s"]
+    report = {"name": "serving_throughput", "arch": f"{cfg.name}.reduced",
+              "requests": n_req, "fast": FAST, "chunked": chunked,
+              "runtime": runtime, "speedup": round(speedup, 2),
+              "cold_speedup": round(cold_speedup, 2)}
+    (JSON_DIR / "BENCH_serving.json").write_text(
+        json.dumps(report, indent=2) + "\n")
+    row("serving_throughput", runtime["s"] * 1e6,
+        f"runtime_tok_per_s={runtime['tok_per_s']};"
+        f"chunked_tok_per_s={chunked['tok_per_s']};"
+        f"speedup={speedup:.2f};cold_speedup={cold_speedup:.2f};"
+        f"admit_traces={runtime['traces']['admit']};"
+        f"decode_traces={runtime['traces']['decode']}")
+
+
 # ---------------------------------------------------------------- kernels
 
 def bench_kernel_flash_attention():
@@ -365,16 +463,33 @@ BENCHES = [
     bench_queue_16, bench_queue_32,
     bench_dbn_tracking, bench_dbn_control,
     bench_deployment_40, bench_control_plane_churn,
+    bench_serving_throughput,
     bench_kernel_flash_attention, bench_kernel_mlstm, bench_kernel_ssm,
     bench_kernel_decode_attention,
     bench_roofline,
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    global FAST, JSON_DIR
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="run only benches whose name contains this")
+    ap.add_argument("--fast", action="store_true",
+                    help="shrink expensive workloads (CI smoke)")
+    ap.add_argument("--json-dir", default=str(ROOT))
+    args = ap.parse_args(argv)
+    FAST = args.fast
+    JSON_DIR = pathlib.Path(args.json_dir)
+    JSON_DIR.mkdir(parents=True, exist_ok=True)
     print("name,us_per_call,derived")
     for b in BENCHES:
+        if args.only and args.only not in b.__name__:
+            continue
         b()
+    (JSON_DIR / "BENCH_run.json").write_text(
+        json.dumps(RESULTS, indent=2) + "\n")
 
 
 if __name__ == "__main__":

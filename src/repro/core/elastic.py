@@ -1,15 +1,21 @@
 """Elastic data-parallel scaling (HPA/twin decision -> new mesh).
 
 A serving deployment is R replicas x TP chips. Scaling re-builds the mesh
-as (R', TP), re-lowers prefill/decode, and resharsd params onto the new
+as (R', TP), re-lowers prefill/decode, and reshards params onto the new
 topology (device_put through the checkpoint/restore path — the same code
 path that handles node-failure recovery, so elasticity and fault tolerance
-are one mechanism)."""
+are one mechanism).
+
+Compiled artifacts are cached per (replicas, tp): scaling back to a
+previously-seen size reuses the mesh, the jitted prefill/decode closures
+(so jax's own trace cache keeps hitting — re-lowering was the dominant
+scale-up cost), and the serving-runtime kernel set. The decode closure
+donates its cache argument, so the per-token KV update is in-place
+instead of a full slab copy per step."""
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -31,22 +37,23 @@ class ElasticServing:
     prefill_fn: object = None
     decode_fn: object = None
     scale_events: list = field(default_factory=list)
+    build_gen: int = 0                     # bumped on every (re)build
+    # (replicas, tp) -> (mesh, ctx, prefill_fn, decode_fn, param_shardings)
+    _compiled: Dict[Tuple[int, int], tuple] = field(default_factory=dict)
+    _kernels: Dict[tuple, object] = field(default_factory=dict)
 
     def max_replicas(self) -> int:
         return max(len(jax.devices()) // self.tp, 1)
 
-    def build(self, replicas: int, host_params=None, now: float = 0.0):
-        """(Re)build at ``replicas`` data-parallel replicas."""
-        replicas = min(max(replicas, 1), self.max_replicas())
-        if host_params is None:
-            host_params = self.host_params()
+    def _lowered(self, replicas: int):
+        key = (replicas, self.tp)
+        if key in self._compiled:
+            return self._compiled[key]
         mesh = make_mesh((replicas, self.tp), ("data", "model"))
         ctx = ShardCtx(mesh)
         mod = MA.get_module(self.cfg)
         aparams = mod.abstract_params(self.cfg)
         psh = tree_shardings(ctx, aparams, mod.param_axes(self.cfg))
-        params = jax.tree.map(
-            lambda h, s: jax.device_put(h, s), host_params, psh)
         cfgl = self.cfg
 
         def prefill(params, tokens):
@@ -55,14 +62,36 @@ class ElasticServing:
         def decode(params, token, cache):
             return mod.decode_step(params, token, cache, cfgl, ctx)
 
-        self.prefill_fn = jax.jit(prefill)
-        self.decode_fn = jax.jit(decode)
+        entry = (mesh, ctx, jax.jit(prefill),
+                 jax.jit(decode, donate_argnums=(2,)), psh)
+        self._compiled[key] = entry
+        return entry
+
+    def build(self, replicas: int, host_params=None, now: float = 0.0):
+        """(Re)build at ``replicas`` data-parallel replicas."""
+        replicas = min(max(replicas, 1), self.max_replicas())
+        if host_params is None:
+            host_params = self.host_params()
+        mesh, ctx, prefill_fn, decode_fn, psh = self._lowered(replicas)
+        params = jax.tree.map(
+            lambda h, s: jax.device_put(h, s), host_params, psh)
+        self.prefill_fn, self.decode_fn = prefill_fn, decode_fn
         old = self.replicas
         self.mesh, self.ctx, self.params = mesh, ctx, params
         self.replicas = replicas
+        self.build_gen += 1
         if old != replicas:
             self.scale_events.append((now, old, replicas))
         return self
+
+    def runtime_kernels(self, rcfg):
+        """Serving-runtime kernel set for the *current* topology, cached per
+        (replicas, tp, rcfg) so re-scaling to a seen size skips re-tracing."""
+        from repro.streaming.runtime import RuntimeKernels
+        key = (self.replicas, self.tp, rcfg)
+        if key not in self._kernels:
+            self._kernels[key] = RuntimeKernels(self.cfg, rcfg, self.ctx)
+        return self._kernels[key]
 
     def host_params(self):
         if self.params is None:

@@ -79,9 +79,16 @@ class Request:
 
 @dataclass
 class RequestSource:
-    """Poisson arrivals at rate lam(t) — the stream sender of paper §6."""
+    """Poisson arrivals at rate lam(t) — the stream sender of paper §6.
+
+    ``prompt_range`` / ``max_new_range`` (inclusive) randomize per-request
+    shapes — the workload that punishes shape-keyed jit caches and rewards
+    the serving runtime's bucketed compilation. Defaults keep the seed's
+    fixed-shape stream."""
     seed: int = 0
     rid: int = 0
+    prompt_range: tuple = None        # e.g. (8, 48)
+    max_new_range: tuple = None       # e.g. (2, 16)
 
     def __post_init__(self):
         self.rng = np.random.default_rng(self.seed)
@@ -92,6 +99,12 @@ class RequestSource:
         out = []
         for _ in range(n):
             self.rid += 1
+            plen = prompt_len if self.prompt_range is None else \
+                int(self.rng.integers(self.prompt_range[0],
+                                      self.prompt_range[1] + 1))
+            mnew = max_new if self.max_new_range is None else \
+                int(self.rng.integers(self.max_new_range[0],
+                                      self.max_new_range[1] + 1))
             out.append(Request(self.rid, now + self.rng.uniform(0, dt),
-                               prompt_len, max_new))
+                               plen, mnew))
         return out

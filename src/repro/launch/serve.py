@@ -42,6 +42,7 @@ from repro.core.jfe import FrontEnd               # noqa: E402
 from repro.core.jfm import FacilityManager        # noqa: E402
 from repro.core.jrm import SliceSpec              # noqa: E402
 from repro.core.digital_twin.queue_model import ground_truth, lam_of_state  # noqa: E402
+from repro.data.pipeline import RequestSource     # noqa: E402
 from repro.models import model_api as MA          # noqa: E402
 from repro.streaming.engine import StreamEngine   # noqa: E402
 
@@ -60,6 +61,12 @@ def main(argv=None):
     ap.add_argument("--walltime", type=float, default=0.0,
                     help="per-node lease (s); >0 exercises the drain ->"
                          " checkpoint -> reschedule loop mid-run")
+    ap.add_argument("--no-runtime", action="store_true",
+                    help="disable the slot-slab serving runtime (fall back"
+                         " to the chunked prefill+decode path)")
+    ap.add_argument("--vary-shapes", action="store_true",
+                    help="randomize per-request prompt_len/max_new (the"
+                         " workload bucketed compilation is built for)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch).reduced()
@@ -93,9 +100,14 @@ def main(argv=None):
     # one replica is near-critical at high pressure (M/M/1 analog) and the
     # twin's 2x escalation actually drains the queue.
     mu_scaled = 167.0 * args.lam_scale
+    source = RequestSource()
+    if args.vary_shapes:
+        source = RequestSource(prompt_range=(8, 48), max_new_range=(2, 16))
     engine = StreamEngine(cfg, serving, nodes,
                           service_rate=mu_scaled,
                           use_twin=(args.controller == "twin"),
+                          use_runtime=not args.no_runtime,
+                          source=source,
                           hpa=HPA(HPAConfig(target=8.0, max_replicas=
                                             serving.max_replicas(),
                                             scale_down_stabilization=120.0)),
@@ -129,6 +141,13 @@ def main(argv=None):
           f"scale events={engine.serving.scale_events}; "
           f"mean latency={np.mean(lat) if lat else 0:.1f}s; "
           f"final queue={len(engine.queue)}")
+    if engine.runtimes:
+        rt = next(iter(engine.runtimes.values()))
+        tc = rt.kernels.trace_counts
+        blocks = sum(r.steps_dispatched for r in engine.runtimes.values())
+        print(f"[runtime] slot-slab serving: traces admit={tc['admit']} "
+              f"decode={tc['decode']} (bound {rt.kernels.max_traces}); "
+              f"fused blocks={blocks}")
     trail = {}
     for ev in cluster.events:
         trail[ev.reason] = trail.get(ev.reason, 0) + 1

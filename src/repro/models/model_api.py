@@ -139,6 +139,88 @@ def grow_cache(cfg: ArchConfig, cache, max_len: int):
     return new
 
 
+# ------------------------------------------------- serving runtime helpers
+
+def supports_slots(cfg: ArchConfig) -> bool:
+    """True when the family's decode cache is a pure KV slab whose rows are
+    independent requests (dense / moe / vlm -> transformer module). The
+    recurrent families (hybrid, xlstm) and encdec carry scalar-position
+    states the slot runtime cannot address per-row yet."""
+    return get_module(cfg) is transformer
+
+
+def pow2_bucket(n: int, lo: int, hi: int) -> int:
+    """Smallest power-of-two >= n, clamped to [lo, hi]. Padding shapes to
+    these buckets bounds the number of distinct jit traces to O(log)."""
+    b = lo
+    while b < n and b < hi:
+        b *= 2
+    return min(max(b, lo), hi)
+
+
+def bucket_ladder(lo: int, hi: int):
+    out, b = [], lo
+    while b < hi:
+        out.append(b)
+        b *= 2
+    out.append(hi)
+    return tuple(out)
+
+
+def init_slab_cache(cfg: ArchConfig, slots: int, capacity: int):
+    """Fixed-shape slot-slab decode cache: ``slots`` independent requests x
+    ``capacity`` KV entries each, with a per-row position vector (the shape
+    never changes across admissions, so decode compiles exactly once)."""
+    cache = get_module(cfg).init_cache(cfg, slots, capacity)
+    cache["pos"] = jnp.zeros((slots,), jnp.int32)
+    return cache
+
+
+def scatter_prefill(cfg: ArchConfig, slab, prefill_cache, slot_idx, seq_len):
+    """Write a prefilled (B, seq_len) KV cache into slab rows ``slot_idx``
+    ((B,) int32) and stamp their positions. Pure function of fixed shapes —
+    jit it once per (batch-bucket, length-bucket)."""
+    new = dict(slab)
+    for part in ("dense", "moe"):
+        if part not in prefill_cache or part not in slab:
+            continue
+        dst = dict(slab[part])
+        for nm in ("k", "v"):
+            src = prefill_cache[part][nm]          # (L, B, S, kvh, dh)
+            dst[nm] = slab[part][nm].at[:, slot_idx, :src.shape[2]].set(
+                src.astype(slab[part][nm].dtype))
+        new[part] = dst
+    new["pos"] = slab["pos"].at[slot_idx].set(jnp.int32(seq_len))
+    return new
+
+
+def fused_decode(params, tok, cache, active, remaining, cfg: ArchConfig,
+                 ctx=None, steps: int = 8):
+    """``steps`` greedy decode steps fused into one ``lax.scan`` (one device
+    dispatch per block instead of per token). Rows where ``active`` is False
+    are frozen: their position does not advance and their token does not
+    change, so finished requests stop paying for rides they do not take.
+
+    tok: (S, 1) int32; active: (S,) bool; remaining: (S,) int32.
+    Returns (tok, cache, active, remaining, tokens (steps, S))."""
+    mod = get_module(cfg)
+
+    def step(carry, _):
+        tok, cache, active, remaining = carry
+        pos0 = cache["pos"]
+        logits, cache = mod.decode_step(params, tok, cache, cfg, ctx)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        tok = jnp.where(active[:, None], nxt, tok)
+        cache["pos"] = jnp.where(active, cache["pos"], pos0)
+        remaining = remaining - active.astype(jnp.int32)
+        active = active & (remaining > 0)
+        return (tok, cache, active, remaining), nxt[:, 0]
+
+    (tok, cache, active, remaining), toks = jax.lax.scan(
+        step, (tok, cache, active, remaining), None, length=steps)
+    return tok, cache, active, remaining, toks
+
+
 # --------------------------------------------------------------- metadata
 
 def param_count(cfg: ArchConfig) -> int:

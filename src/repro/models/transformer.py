@@ -346,6 +346,12 @@ def decode_step(params, token, cache, cfg: ArchConfig, ctx=None,
                 unroll: bool = False):
     """One decode step. token: (B, 1) int32. Returns (logits (B,V), cache).
 
+    ``cache["pos"]`` may be a scalar (whole batch in lockstep — the classic
+    path) or a (B,) vector of per-row positions (the serving runtime's slot
+    slab, where every row is an independent request at its own depth). All
+    position arithmetic below broadcasts over the batch dim so both layouts
+    share one trace.
+
     ``unroll=True`` replaces the layer scan with a static python loop:
     per-layer caches become independent aliased buffers (no stacked xs/ys
     round-trip through the while carry) — a serving-oriented layout that
@@ -353,15 +359,16 @@ def decode_step(params, token, cache, cfg: ArchConfig, ctx=None,
     §Perf, yi-34b decode hillclimb)."""
     B = token.shape[0]
     pos = cache["pos"]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))   # (B,)
     x = L.embed_lookup(params["embed"], token[:, 0])[:, None, :].astype(cfg.jdtype)
-    positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    positions = pos_b[:, None]                                    # (B, 1)
 
     new_cache = {"pos": pos + 1}
 
     def run(stacked, kc, vc, use_moe):
         nonlocal x
         slots = kc.shape[2]
-        slot = pos % slots                 # ring write for bounded caches
+        slot = pos_b % slots               # (B,) ring write for bounded caches
 
         def step(carry, xs):
             xx = carry
@@ -377,14 +384,15 @@ def decode_step(params, token, cache, cfg: ArchConfig, ctx=None,
             # slot-sharded cache GSPMD lowers DUS to a masked select anyway,
             # but routes it through f32; the where() stays in cache dtype
             # and fully local (EXPERIMENTS.md §Perf, yi-34b decode iter 3).
-            wmask = (jnp.arange(slots, dtype=jnp.int32) == slot)[None, :, None, None]
+            wmask = (jnp.arange(slots, dtype=jnp.int32)[None, :]
+                     == slot[:, None])[:, :, None, None]
             k_l = jnp.where(wmask, k.astype(k_l.dtype), k_l)
             v_l = jnp.where(wmask, v.astype(v_l.dtype), v_l)
             # absolute positions of cache slots (ring-aware); unwritten slots
             # get INT32_MAX so the kv_len mask rejects them.
             slot_ids = jnp.arange(slots, dtype=jnp.int32)[None, :]
-            wraps = (pos // slots) * slots
-            abs_pos = jnp.where(slot_ids <= slot, wraps + slot_ids,
+            wraps = ((pos_b // slots) * slots)[:, None]
+            abs_pos = jnp.where(slot_ids <= slot[:, None], wraps + slot_ids,
                                 wraps - slots + slot_ids)
             kv_pos = jnp.where(abs_pos >= 0, abs_pos,
                                jnp.iinfo(jnp.int32).max)

@@ -1,20 +1,35 @@
 """ERSAP-analog streaming inference engine (paper §5 workload + §6 queue).
 
-Pipeline: RequestSource (Poisson sender) -> FIFO queue -> batcher ->
-serving replicas (real prefill+decode on the mesh) -> sink.
+Pipeline: RequestSource (Poisson sender) -> FIFO queue -> per-replica
+**decode runtimes** (slot-slab continuous batching,
+``repro.streaming.runtime``) -> sink.
 
-Declarative control plane: the engine no longer hand-creates pods by
-naming convention. It declares a ``Deployment`` ("ersap") in the Cluster
-store; the DeploymentController converges ``spec.replicas`` -> pods, the
-Scheduler places them (spread across nodes, straggler-averse), and the
-NodeLifecycleController drains walltime-expiring nodes — checkpointing
-each replica's runtime state via ``repro.checkpoint`` so the rescheduled
-replica resumes its counters. The HPA and the digital-twin policy are
-both *desired-replica writers*: ``control_step`` computes a target and
-writes ``Deployment.replicas``; reconciliation does the rest. Metrics
-(queue depth, served, latency) flow through the §4.6 monitoring stack,
-whose Service endpoints are rebuilt from live pods every sync (retired
-replicas leave no stale scrape targets).
+Serving path (PR 2): each bound replica owns a ``DecodeRuntime`` — a
+fixed-shape KV slab of ``max_batch`` slots with bucketed-compilation
+admission and a fused ``lax.scan`` decode block. ``tick()`` meters
+requests off the FIFO queue by a fractional service budget (no more
+integer-truncation starvation at low rates), submits them to the
+replica's runtime, and pumps it to quiescence: finished requests free
+their slots mid-stream and pending ones are admitted immediately, so the
+number of jit traces stays O(#buckets) and short requests stop riding
+along for their chunk-mates' ``max_new``. Families without a slot-slab
+decode (recurrent caches) and oversized requests fall back to the legacy
+chunked path. The runtime's slot table is part of the replica's
+checkpoint state, so in-flight requests survive the §4.5.4 drain ->
+checkpoint -> evict -> reschedule loop.
+
+Declarative control plane: the engine declares a ``Deployment`` ("ersap")
+in the Cluster store; the DeploymentController converges
+``spec.replicas`` -> pods, the Scheduler places them (spread across
+nodes, straggler-averse), and the NodeLifecycleController drains
+walltime-expiring nodes — checkpointing each replica's runtime state via
+``repro.checkpoint`` so the rescheduled replica resumes its counters and
+its slot table. The HPA and the digital-twin policy are both
+*desired-replica writers*: ``control_step`` computes a target and writes
+``Deployment.replicas``; reconciliation does the rest. Metrics (queue
+depth, served, latency) flow through the §4.6 monitoring stack, whose
+Service endpoints (and control-plane port map) are rebuilt from live pods
+every sync — retired replicas leave no stale scrape targets or ports.
 """
 from __future__ import annotations
 
@@ -36,6 +51,8 @@ from repro.core.digital_twin.control import ControlPolicy, replicas_for_control
 from repro.core.digital_twin.dbn import DigitalTwin
 from repro.data.pipeline import Request, RequestSource
 from repro.models import model_api as MA
+from repro.streaming.runtime import (DecodeRuntime, RuntimeConfig,
+                                     requests_from_state)
 
 DEPLOYMENT = "ersap"
 
@@ -65,13 +82,18 @@ class StreamEngine:
     hpa: Optional[HPA] = None
     base_replicas: int = 1
     use_twin: bool = True
+    use_runtime: bool = True          # slot-slab runtime (when family allows)
+    runtime_cfg: Optional[RuntimeConfig] = None
     history: list = field(default_factory=list)
     # declarative control plane (built from ``nodes`` unless injected)
     cluster: Optional[Cluster] = None
     plane: Optional[ControlPlane] = None
     total_served: int = 0
     total_tokens: int = 0
+    runtimes: Dict[str, DecodeRuntime] = field(default_factory=dict)
     _cp_ports: Dict[str, int] = field(default_factory=dict)
+    _next_cp_port: int = 20000
+    _budget_frac: float = 0.0         # fractional service budget carry
 
     # ------------------------------------------------------------ setup
     @property
@@ -90,12 +112,22 @@ class StreamEngine:
                 self.cluster.register_node(n, now)
         if self.plane is None:
             self.plane = ControlPlane(self.cluster)
+        if self.runtime_cfg is None:
+            self.runtime_cfg = RuntimeConfig(max_batch=self.max_batch)
 
     def _replica_state(self, name: str) -> Optional[dict]:
         st = self.stats.get(name)
         if st is None:
             return None
-        return {"served": st.served, "tokens": st.tokens}
+        state = {"served": st.served, "tokens": st.tokens}
+        rt = self.runtimes.get(name)
+        if rt is not None:
+            # credit partial generation now; the successor replica credits
+            # only the checkpointed remainder at finish, so per-request
+            # token totals stay exact across a reschedule
+            state["tokens"] = st.tokens + rt.partial_tokens()
+            state.update(rt.state())
+        return state
 
     def deploy(self, now: float = 0.0):
         """Declare (or re-declare) the serving Deployment at the current
@@ -117,26 +149,99 @@ class StreamEngine:
 
     def reconcile(self, now: float):
         """One control-plane step + engine-side sync (registries, stats,
-        Service endpoints follow the pod set — nothing leaks on retire)."""
+        runtimes, Service endpoints follow the pod set — nothing leaks on
+        retire)."""
         self._ensure_plane(now)
         self.plane.step(now)
         self._sync(now)
+
+    # ----------------------------------------------------------- runtimes
+    def _make_runtime(self, name: str) -> Optional[DecodeRuntime]:
+        if not (self.use_runtime and MA.supports_slots(self.cfg)):
+            return None
+        kernels = self.serving.runtime_kernels(self.runtime_cfg)
+        return DecodeRuntime(kernels, self.serving.params,
+                             gen=self.serving.build_gen)
+
+    def _credit_partial(self, name: str, rt: DecodeRuntime):
+        """Credit partial generation of in-flight slots before their
+        requests are requeued with max_new = remaining, so partial +
+        finish-time credit sums to exactly the original max_new."""
+        partial = rt.partial_tokens()
+        if not partial:
+            return
+        st = self.stats.get(name)
+        if st is not None:
+            st.tokens += partial
+        self.total_tokens += partial
+
+    def _known_rids(self) -> set:
+        """Request ids already accounted for somewhere in the engine."""
+        rids = {r.rid for r in self.queue}
+        for rt in self.runtimes.values():
+            rids.update(r.rid for r in rt.pending)
+            rids.update(s.req.rid for s in rt.slots if s.busy)
+        rids.update(rid for rid, _ in self.completed)
+        return rids
+
+    def _refresh_runtime(self, name: str) -> Optional[DecodeRuntime]:
+        """Replica's runtime, rebuilt (in-flight preserved) whenever the
+        serving mesh was re-built underneath it."""
+        rt = self.runtimes.get(name)
+        if rt is not None and rt.gen != self.serving.build_gen:
+            self._credit_partial(name, rt)
+            carried = rt.drain()
+            rt = self._make_runtime(name)
+            if rt is not None:
+                rt.submit(carried)
+                self.runtimes[name] = rt
+            else:
+                self.queue = carried + self.queue
+                self.runtimes.pop(name, None)
+        return rt
 
     def _sync(self, now: float):
         live = {r.name: r for r in self.cluster.pods_of(DEPLOYMENT)
                 if r.bound}
         for name in list(self.registries):
             if name not in live:
+                rt = self.runtimes.pop(name, None)
+                if rt is not None:          # zero loss: hand back in-flight
+                    self._credit_partial(name, rt)
+                    self.queue = rt.drain() + self.queue
                 self.registries.pop(name, None)
                 self.stats.pop(name, None)
+        # prune the §4.6.3 control-plane port map with the registries —
+        # ports stay stable for live pods but no longer grow monotonically
+        # across evict/reschedule cycles
+        for name in list(self._cp_ports):
+            if name not in live:
+                self._cp_ports.pop(name)
         for name, rec in sorted(live.items()):
             if name in self.registries:
                 continue
             self.registries[name] = Registry(port=2221)
             st = ReplicaStats()
+            rt = self._make_runtime(name)
+            if rt is not None:
+                self.runtimes[name] = rt
             if rec.restored_state:
                 st.served = int(rec.restored_state.get("served", 0))
                 st.tokens = int(rec.restored_state.get("tokens", 0))
+                # slot table survives drain -> checkpoint -> reschedule:
+                # in-flight requests resume on the replacement replica.
+                # Dedupe against requests already handed back through the
+                # retire path above (the evicted replica's runtime drains
+                # into the queue AND its checkpoint names the same rids —
+                # each request must be served exactly once).
+                known = self._known_rids()
+                restored = [r for r in
+                            requests_from_state(rec.restored_state)
+                            if r.rid not in known]
+                if rt is not None:
+                    rt.submit(restored)
+                else:
+                    self.queue = restored + self.queue
             self.stats[name] = st
         # Service endpoints rebuilt from live pods only (§4.6.3 port remap
         # stays unique per pod even though all VK pods share one pod IP)
@@ -147,7 +252,8 @@ class StreamEngine:
             if node is None:
                 continue
             if name not in self._cp_ports:
-                self._cp_ports[name] = 20000 + len(self._cp_ports)
+                self._cp_ports[name] = self._next_cp_port
+                self._next_cp_port += 1
             svc.add_endpoint(Endpoint(
                 pod=name, pod_ip=node.pod_ip, port=2221,
                 cp_port=self._cp_ports[name], registry=self.registries[name]))
@@ -162,24 +268,64 @@ class StreamEngine:
         Capacity follows the *actual* replica set in the cluster store."""
         self.queue.extend(self.source.arrivals(now, dt, lam))
         # per-replica service capacity this tick (mu * dt, M/M/1 analog —
-        # doubling replicas doubles capacity, the paper's 16->32 threads)
-        budget = int(self.service_rate * dt)
+        # doubling replicas doubles capacity, the paper's 16->32 threads).
+        # The fractional part carries across ticks so mu*dt < 1 meters
+        # slowly instead of truncating to a permanently stalled queue.
+        self._budget_frac += self.service_rate * dt
+        budget = int(self._budget_frac)
+        self._budget_frac -= budget
         for name in sorted(self.registries):
             reg = self.registries[name]
             n_take = min(len(self.queue), budget)
             took, self.queue = self.queue[:n_take], self.queue[n_take:]
-            for j in range(0, len(took), self.max_batch):
-                chunk = took[j:j + self.max_batch]
-                self._process(chunk, name, now)
+            self._process(took, name, now)
             reg.gauge("ersap_queue_len").set(len(self.queue))
-            reg.counter("ersap_served_total")
         self.prom.scrape(now)
         self.history.append((now, len(self.queue), self.serving.replicas,
                              self.control))
         return len(self.queue)
 
     def _process(self, requests: List[Request], replica: str, now: float):
-        """Actually run the model: batched prefill + greedy decode."""
+        """Serve ``requests`` on ``replica``: slot-slab continuous batching
+        when available, legacy chunked prefill+decode otherwise."""
+        if not requests:
+            rt = self._refresh_runtime(replica)
+            if rt is not None and rt.inflight:
+                for fin in rt.pump():       # restored in-flight work
+                    self._finish(replica, fin.req, fin.tokens, now)
+            return
+        rt = self._refresh_runtime(replica)
+        if rt is None:
+            for j in range(0, len(requests), self.max_batch):
+                self._process_chunked(requests[j:j + self.max_batch],
+                                      replica, now)
+            return
+        fitting = [r for r in requests if rt.fits(r)]
+        oversize = [r for r in requests if not rt.fits(r)]
+        rt.submit(fitting)
+        for fin in rt.pump():
+            self._finish(replica, fin.req, fin.tokens, now)
+        for j in range(0, len(oversize), self.max_batch):
+            self._process_chunked(oversize[j:j + self.max_batch],
+                                  replica, now)
+
+    def _finish(self, replica: str, req: Request, n_tokens: int, now: float):
+        reg = self.registries[replica]
+        st = self.stats[replica]
+        st.served += 1
+        st.tokens += n_tokens
+        self.total_served += 1
+        self.total_tokens += n_tokens
+        reg.counter("ersap_served_total").inc(1)
+        reg.counter("ersap_tokens_total").inc(n_tokens)
+        reg.histogram("ersap_latency_s").observe(max(now - req.arrival, 0.0))
+        self.completed.append((req.rid, now))
+
+    def _process_chunked(self, requests: List[Request], replica: str,
+                         now: float):
+        """Pre-PR path (kept for recurrent families + oversize requests):
+        one prefill per chunk shape, Python-loop decode, every request
+        over-decoded to the chunk's max_new."""
         if not requests:
             return
         B = len(requests)
@@ -196,17 +342,8 @@ class StreamEngine:
             logits, cache = self.serving.decode_fn(self.serving.params, tok,
                                                    cache)
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        reg = self.registries[replica]
-        st = self.stats[replica]
-        st.served += B
-        st.tokens += B * n_new
-        self.total_served += B
-        self.total_tokens += B * n_new
-        reg.counter("ersap_served_total").inc(B)
-        reg.counter("ersap_tokens_total").inc(B * n_new)
         for r in requests:
-            reg.histogram("ersap_latency_s").observe(max(now - r.arrival, 0.0))
-            self.completed.append((r.rid, now))
+            self._finish(replica, r, n_new, now)
 
     # ---------------------------------------------------------- control
     def control_step(self, now: float):

@@ -1,0 +1,381 @@
+"""Continuous-batching decode runtime: slot slab + bucketed compilation.
+
+One ``DecodeRuntime`` per serving replica replaces the chunked
+prefill-then-Python-decode path:
+
+- **Slot slab**: a fixed-shape KV cache of ``max_batch`` slots x
+  ``capacity`` entries with a per-slot position vector
+  (``model_api.init_slab_cache``). Admission prefills a request at a
+  bucketed shape and scatters it into free slots; nothing is ever
+  re-allocated or grown per chunk.
+- **Bucketed compilation**: prompts pad to power-of-two length buckets and
+  admissions to power-of-two batch buckets, so the number of distinct jit
+  traces is O(#length-buckets x #batch-buckets) + 1 fused decode trace,
+  independent of the observed request mix. ``RuntimeKernels.trace_counts``
+  exposes the actual trace tally for regression tests.
+- **Fused decode**: ``decode_block`` greedy steps run as one
+  ``jax.lax.scan`` dispatch with the slab donated (``model_api.fused_decode``)
+  instead of one Python-loop dispatch per token.
+- **Continuous batching**: after every block the host harvests finished
+  slots, frees them, and admits pending requests immediately — a short
+  request no longer rides along for its chunk-mates' ``max_new``.
+
+Kernels (the jitted closures) are shared across replicas and cached per
+mesh topology by ``ElasticServing.runtime_kernels``; the slab itself is
+per-replica state. The slot table round-trips through the drain ->
+checkpoint -> reschedule path as plain numpy arrays (``state()`` /
+``restore()``), so in-flight requests survive a node eviction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import Request
+from repro.models import model_api as MA
+
+
+def requests_from_state(state) -> List[Request]:
+    """Decode a checkpointed slot table back into Request objects."""
+    rids = np.asarray(state.get("inflight_rid", ()))
+    if rids.size == 0:
+        return []
+    arrival = np.asarray(state["inflight_arrival"])
+    plen = np.asarray(state["inflight_plen"])
+    rem = np.asarray(state["inflight_remaining"])
+    return [Request(int(rids[i]), float(arrival[i]), int(plen[i]),
+                    int(rem[i])) for i in range(rids.size)]
+
+
+@dataclass(frozen=True)
+class RuntimeConfig:
+    """Static shape policy — one kernels cache entry per distinct value."""
+    max_batch: int = 8            # slots in the slab
+    min_prompt_bucket: int = 8
+    max_prompt_bucket: int = 64
+    max_new_cap: int = 64         # capacity headroom for generation
+    decode_block: int = 16        # max fused steps per scan dispatch
+    admit_tail: int = 4           # decode steps fused into each admission
+
+    @property
+    def capacity(self) -> int:
+        # every admitted request fits without ring-wrapping
+        return self.max_prompt_bucket + self.max_new_cap + 1
+
+    @property
+    def prompt_buckets(self) -> Tuple[int, ...]:
+        return MA.bucket_ladder(self.min_prompt_bucket, self.max_prompt_bucket)
+
+    @property
+    def batch_buckets(self) -> Tuple[int, ...]:
+        return MA.bucket_ladder(1, self.max_batch)
+
+    @property
+    def block_ladder(self) -> Tuple[int, ...]:
+        # fused-step buckets: the host picks the smallest block covering the
+        # longest live request, so tail ticks don't over-run 16 steps deep
+        return MA.bucket_ladder(min(4, self.decode_block), self.decode_block)
+
+    def fits(self, req: Request) -> bool:
+        if req.prompt_len > self.max_prompt_bucket:
+            return False
+        plen = MA.pow2_bucket(req.prompt_len, self.min_prompt_bucket,
+                              self.max_prompt_bucket)
+        return plen + req.max_new + 1 <= self.capacity
+
+
+class RuntimeKernels:
+    """Jitted admission + fused-decode functions with a trace-count guard.
+
+    The python bodies below execute only while jax traces them, so the
+    ``trace_counts`` increments tally *compilations*, not calls — the
+    bucketing contract ("O(#buckets) traces under any request mix") is a
+    plain integer assertion away.
+    """
+
+    def __init__(self, cfg: ArchConfig, rcfg: RuntimeConfig, ctx=None):
+        if not MA.supports_slots(cfg):
+            raise ValueError(f"family {cfg.family!r} has no slot-slab decode")
+        self.cfg, self.rcfg, self.ctx = cfg, rcfg, ctx
+        self.trace_counts = {"admit": 0, "decode": 0}
+        self._admit = {}                 # (batch_bucket, len_bucket) -> fn
+        self._decode = {}                # fused steps -> fn
+
+    @property
+    def max_traces(self) -> int:
+        return (len(self.rcfg.batch_buckets) * len(self.rcfg.prompt_buckets)
+                + len(self.rcfg.block_ladder))
+
+    def admit_fn(self, bb: int, lb: int):
+        key = (bb, lb)
+        if key in self._admit:
+            return self._admit[key]
+        cfg, ctx = self.cfg, self.ctx
+        mod = MA.get_module(cfg)
+
+        tail = self.rcfg.admit_tail
+
+        def admit(params, tokens, cache, tok, active, remaining,
+                  slot_idx, max_new):
+            self.trace_counts["admit"] += 1
+            logits, pcache = mod.prefill(params, tokens, cfg, ctx)
+            cache = MA.scatter_prefill(cfg, cache, pcache, slot_idx,
+                                       tokens.shape[1])
+            first = jnp.argmax(logits, -1).astype(jnp.int32)
+            tok = tok.at[slot_idx].set(first[:, None])
+            # pad rows (batch bucket > group size) target the overflow row
+            # with max_new = 0: they go inert after one masked step
+            active = active.at[slot_idx].set(max_new > 0)
+            remaining = remaining.at[slot_idx].set(max_new)
+            if tail:
+                # fused decode tail: admission and the first few steps of
+                # the whole slab ride one dispatch (half the sync points)
+                tok, cache, active, remaining, _ = MA.fused_decode(
+                    params, tok, cache, active, remaining, cfg, ctx,
+                    steps=tail)
+            return cache, tok, active, remaining
+
+        fn = jax.jit(admit, donate_argnums=(2, 3, 4, 5))
+        self._admit[key] = fn
+        return fn
+
+    def decode_fn(self, steps: int):
+        if steps in self._decode:
+            return self._decode[steps]
+        cfg, ctx = self.cfg, self.ctx
+
+        def block(params, tok, cache, active, remaining):
+            self.trace_counts["decode"] += 1
+            return MA.fused_decode(params, tok, cache, active, remaining,
+                                   cfg, ctx, steps=steps)
+
+        fn = jax.jit(block, donate_argnums=(1, 2, 3, 4))
+        self._decode[steps] = fn
+        return fn
+
+    def put(self, tree):
+        """Commit arrays to the serving mesh (replicated). Mixing
+        mesh-committed params with uncommitted slab buffers makes every
+        dispatch re-shard its inputs (~15x per-call overhead on CPU), so
+        all runtime state goes through here."""
+        if self.ctx is None or self.ctx.mesh is None:
+            return jax.tree.map(jnp.asarray, tree)
+        sh = jax.sharding.NamedSharding(self.ctx.mesh,
+                                        jax.sharding.PartitionSpec())
+        return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+
+@dataclass
+class _Slot:
+    req: Optional[Request] = None
+    remaining: int = 0
+
+    @property
+    def busy(self) -> bool:
+        return self.req is not None
+
+
+@dataclass
+class Finished:
+    req: Request
+    tokens: int                       # generated this runtime (<= req.max_new)
+
+
+@dataclass
+class DecodeRuntime:
+    """Per-replica serving state: the slab + a host-side slot table."""
+    kernels: RuntimeKernels
+    params: object
+    gen: int = 0                      # ElasticServing build generation
+    pending: List[Request] = field(default_factory=list)
+    slots: List[_Slot] = field(default_factory=list)
+    steps_dispatched: int = 0         # fused blocks run (for perf telemetry)
+    record_tokens: bool = False       # keep per-request token ids (tests)
+    token_log: Dict[int, list] = field(default_factory=dict)
+
+    def __post_init__(self):
+        rcfg = self.kernels.rcfg
+        if self.record_tokens and rcfg.admit_tail:
+            raise ValueError("record_tokens needs admit_tail=0 (tail-step "
+                             "token ids never leave the admission dispatch)")
+        self.slots = [_Slot() for _ in range(rcfg.max_batch)]
+        # one extra overflow row: admissions pad their batch up to a
+        # power-of-two bucket and aim the pad rows here, so a group of 7
+        # costs one (8, L) prefill instead of three (4/2/1, L) dispatches
+        rows = rcfg.max_batch + 1
+        self.cache = self.kernels.put(MA.init_slab_cache(
+            self.kernels.cfg, rows, rcfg.capacity))
+        self.tok = self.kernels.put(jnp.zeros((rows, 1), jnp.int32))
+        self.active = self.kernels.put(jnp.zeros((rows,), bool))
+        self.remaining = self.kernels.put(jnp.zeros((rows,), jnp.int32))
+
+    # -------------------------------------------------------------- intake
+    def submit(self, requests: List[Request]):
+        self.pending.extend(requests)
+
+    def fits(self, req: Request) -> bool:
+        return self.kernels.rcfg.fits(req)
+
+    @property
+    def inflight(self) -> int:
+        return sum(s.busy for s in self.slots) + len(self.pending)
+
+    # ---------------------------------------------------------- admission
+    def _free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if not s.busy]
+
+    def _admit_some(self) -> List[Finished]:
+        """Admit pending requests into free slots: group by prompt-length
+        bucket (largest group first), one padded prefill dispatch per
+        group (with a fused decode tail — see ``RuntimeKernels.admit_fn``).
+        Hysteresis: while decode is mid-stream, wait until a couple of
+        slots are free rather than paying one prefill dispatch per freed
+        slot (admission is still within one decode block of arrival)."""
+        if not self.pending:
+            return []
+        rcfg = self.kernels.rcfg
+        free = self._free_slots()
+        busy = rcfg.max_batch - len(free)
+        if busy and len(free) < min(len(self.pending),
+                                    max(2, rcfg.max_batch // 2)):
+            return []
+        done: List[Finished] = []
+        while free and self.pending:
+            groups: Dict[int, List[Request]] = {}
+            for r in self.pending:
+                lb = MA.pow2_bucket(r.prompt_len, rcfg.min_prompt_bucket,
+                                    rcfg.max_prompt_bucket)
+                groups.setdefault(lb, []).append(r)
+            lb, group = max(groups.items(), key=lambda kv: len(kv[1]))
+            # co-schedule similar generation lengths: a homogeneous round
+            # lets the block ladder pick tight fused blocks (a lone
+            # max_new=16 request would otherwise pin 16-step blocks while
+            # its 7 batch-mates idle after step 4)
+            group = sorted(group, key=lambda r: -r.max_new)[:len(free)]
+            taken = set(id(r) for r in group)
+            self.pending = [r for r in self.pending if id(r) not in taken]
+            take, free = free[:len(group)], free[len(group):]
+            done.extend(self._admit_batch(group, take, lb))
+        return done
+
+    def _admit_batch(self, reqs: List[Request], slot_idx: List[int],
+                     lb: int) -> List[Finished]:
+        rng = np.random.default_rng(hash((reqs[0].rid, lb)) % (2 ** 31))
+        cfg, rcfg = self.kernels.cfg, self.kernels.rcfg
+        bb = MA.pow2_bucket(len(reqs), 1, rcfg.max_batch)
+        n_pad = bb - len(reqs)
+        # synthetic workload: the prompt is position-hashed noise; right-pad
+        # to the length bucket and the pad joins the (synthetic) context.
+        # Batch pads to the bucket too — pad rows land in the overflow row.
+        tokens = rng.integers(0, cfg.vocab, (bb, lb)).astype(np.int32)
+        max_new = np.asarray([r.max_new for r in reqs] + [0] * n_pad,
+                             np.int32)
+        idx = np.asarray(list(slot_idx) + [rcfg.max_batch] * n_pad, np.int32)
+        fn = self.kernels.admit_fn(bb, lb)
+        # small host inputs commit inside the dispatch; only the persistent
+        # slab state must live pre-committed on the mesh (see kernels.put)
+        self.cache, self.tok, self.active, self.remaining = fn(
+            self.params, tokens, self.cache, self.tok,
+            self.active, self.remaining, idx, max_new)
+        for r, i in zip(reqs, slot_idx):
+            self.slots[i] = _Slot(req=r, remaining=int(r.max_new))
+        if self.record_tokens:                  # first token (prefill argmax)
+            first = np.asarray(self.tok)[:, 0]
+            for r, i in zip(reqs, slot_idx):
+                self.token_log.setdefault(r.rid, []).append(int(first[i]))
+        # the fused tail advanced every live row (old and new) tail steps
+        return self._harvest(rcfg.admit_tail)
+
+    # -------------------------------------------------------------- decode
+    def _harvest(self, steps: int) -> List[Finished]:
+        done = []
+        for i, s in enumerate(self.slots):
+            if not s.busy:
+                continue
+            s.remaining -= min(steps, s.remaining)
+            if s.remaining == 0:
+                done.append(Finished(s.req, s.req.max_new))
+                self.slots[i] = _Slot()
+        return done
+
+    def _decode_block(self) -> List[Finished]:
+        maxrem = max((s.remaining for s in self.slots if s.busy), default=0)
+        steps = next((b for b in self.kernels.rcfg.block_ladder
+                      if b >= maxrem), self.kernels.rcfg.decode_block)
+        fn = self.kernels.decode_fn(steps)
+        before = {i: s.remaining for i, s in enumerate(self.slots) if s.busy}
+        self.tok, self.cache, self.active, self.remaining, toks = fn(
+            self.params, self.tok, self.cache, self.active, self.remaining)
+        self.steps_dispatched += 1
+        if self.record_tokens:                  # test hook: syncs per block
+            arr = np.asarray(toks)
+            for i, rem in before.items():
+                self.token_log.setdefault(self.slots[i].req.rid, []).extend(
+                    arr[:min(steps, rem), i].tolist())
+        return self._harvest(steps)
+
+    def pump(self) -> List[Finished]:
+        """Run to quiescence: admit -> fused block -> harvest -> admit ...
+        Finished slots free mid-stream; arrivals join the very next block.
+        Loops on pending too: when a whole admission finishes inside its
+        fused tail, the slots it freed must be refilled before returning."""
+        done = self._admit_some()
+        while any(s.busy for s in self.slots) or self.pending:
+            if any(s.busy for s in self.slots):
+                done.extend(self._decode_block())
+            done.extend(self._admit_some())
+        return done
+
+    def step(self) -> List[Finished]:
+        """One admission + one fused block (partial progress — lets callers
+        interleave checkpoints or new arrivals between blocks)."""
+        done = self._admit_some()
+        if not any(s.busy for s in self.slots):
+            return done
+        done.extend(self._decode_block())
+        done.extend(self._admit_some())
+        return done
+
+    # --------------------------------------------------------- checkpoint
+    def partial_tokens(self) -> int:
+        """Tokens generated for still-running requests (credited into the
+        checkpointed counters so finish-time credit of the remainder on
+        the successor replica sums to exactly ``max_new`` per request)."""
+        return sum(s.req.max_new - s.remaining for s in self.slots if s.busy)
+
+    def state(self) -> Dict[str, np.ndarray]:
+        """Slot table + pending queue as flat numpy arrays (what the drain
+        controller can save through ``repro.checkpoint``). Restoration
+        re-prefills — KV is derivable state, the request ledger is not."""
+        live = [(s.req.rid, s.req.arrival, s.req.prompt_len, s.remaining)
+                for s in self.slots if s.busy and s.remaining > 0]
+        live += [(r.rid, r.arrival, r.prompt_len, r.max_new)
+                 for r in self.pending]
+        arr = np.asarray(live, np.float64).reshape(-1, 4)
+        return {
+            "inflight_rid": arr[:, 0].astype(np.int64),
+            "inflight_arrival": arr[:, 1],
+            "inflight_plen": arr[:, 2].astype(np.int64),
+            "inflight_remaining": arr[:, 3].astype(np.int64),
+        }
+
+    def restore(self, state: Dict[str, np.ndarray]):
+        """Re-enqueue checkpointed in-flight requests (counted tokens were
+        already credited by the predecessor; ``max_new`` = what remains)."""
+        self.pending.extend(requests_from_state(state))
+
+    def drain(self) -> List[Request]:
+        """Give back every in-flight request (runtime retirement path)."""
+        out = list(self.pending)
+        self.pending = []
+        for i, s in enumerate(self.slots):
+            if s.busy:
+                out.append(Request(s.req.rid, s.req.arrival,
+                                   s.req.prompt_len, s.remaining))
+                self.slots[i] = _Slot()
+        return out
