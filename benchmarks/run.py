@@ -13,6 +13,8 @@ root so the perf trajectory is tracked across PRs.
   Fig. 8     -> bench_dbn_tracking
   Fig. 9     -> bench_dbn_control
   5.1        -> bench_deployment_40
+  4.5.4      -> bench_control_plane_churn (drain -> reschedule loop)
+  §1/§4      -> bench_federation_churn (full-site kill, cross-site failover)
   serving    -> bench_serving_throughput (slot-slab runtime vs chunked)
   kernels    -> bench_kernel_* (interpret-mode Pallas vs jnp oracle)
   dry-run    -> bench_roofline (reads experiments/dryrun)
@@ -280,6 +282,80 @@ def bench_control_plane_churn():
         f"replicas_bound={bound};rescheduled={moved};events={events}")
 
 
+def bench_federation_churn():
+    """Full-site kill mid-stream (the §1/§4 cross-facility claim): serving
+    replicas spread across two facilities by the site-aware scheduler;
+    halfway through the stream the whole jlab pilot allocation is
+    batch-drained in one checkpoint/evict wave (ControlPlane.drain_site)
+    and its replicas reschedule at the surviving site with their slot
+    tables restored. Asserts zero request loss and cross-site failover."""
+    import jax
+    from repro.configs.base import get_config
+    from repro.core.cluster import Cluster
+    from repro.core.controllers import ControlPlane
+    from repro.core.elastic import ElasticServing
+    from repro.core.jcs import CentralService
+    from repro.core.jfe import FrontEnd
+    from repro.core.jrm import SliceSpec
+    from repro.core.scheduler import Scheduler, SiteTopology
+    from repro.models import model_api as MA
+    from repro.streaming.engine import StreamEngine
+
+    cfg = get_config("qwen2-7b").reduced()
+    mod = MA.get_module(cfg)
+    host = jax.tree.map(np.asarray, mod.init(jax.random.PRNGKey(0), cfg))
+    serving = ElasticServing(cfg, tp=1).build(1, host_params=host)
+
+    fe = FrontEnd()
+    jcs = CentralService(fe)
+    cluster = Cluster()
+    # open-ended leases: the facility outage is the explicit drain_site
+    # wave below, not a walltime expiry
+    wfs = fe.add_multi_wf("fed-", {"jlab": 2, "nersc": 2}, nodetype="tpu",
+                          walltime=0.0)
+    jcs.launch_multi(wfs, now=0.0, slice_spec=SliceSpec(chips=2),
+                     cluster=cluster)
+    topo = SiteTopology.parse("jlab:nersc:40")
+    plane = ControlPlane(cluster, scheduler=Scheduler(cluster, topology=topo))
+    eng = StreamEngine(cfg, serving, jcs.node_list(), service_rate=6.0,
+                       max_batch=4, cluster=cluster, plane=plane)
+    eng.deploy(0.0)
+    cluster.scale("ersap", 2, 0.0, source="bench")
+    eng.reconcile(0.0)
+    sites_before = sorted({cluster.nodes[p.node].site
+                           for p in eng.pods.values()})
+    assert sites_before == ["jlab", "nersc"], "site spread failed"
+
+    dt = 10.0
+    ticks = 8 if FAST else 16
+    kill_at = ticks // 2
+    t0 = time.perf_counter()
+    for t in range(ticks + 6):
+        now = t * dt
+        if t == kill_at:
+            plane.drain_site("jlab", now)     # facility gone, one wave
+        for name, node in cluster.nodes.items():
+            if node.site != "jlab" or t < kill_at:
+                cluster.heartbeat(name, now)
+        eng.reconcile(now)
+        eng.tick(now, dt, lam=1.0 if t < ticks else 0.0)
+    s = time.perf_counter() - t0
+
+    lost = eng.source.rid - len(eng.completed)
+    moved = sum(1 for r in cluster.pods_of("ersap")
+                if r.restored_from is not None and r.bound)
+    sites_after = sorted({cluster.nodes[p.node].site
+                          for p in eng.pods.values()})
+    assert lost == 0, f"{lost} requests lost across the site kill"
+    assert sites_after == ["nersc"], "replicas did not fail over cross-site"
+    assert moved >= 1
+    row("federation_churn", s / (ticks + 6) * 1e6,
+        f"requests={eng.source.rid};completed={len(eng.completed)};"
+        f"lost={lost};rescheduled_cross_site={moved};"
+        f"sites_before={'+'.join(sites_before)};"
+        f"sites_after={'+'.join(sites_after)}")
+
+
 # ------------------------------------------------------- serving runtime
 
 def bench_serving_throughput():
@@ -462,7 +538,7 @@ BENCHES = [
     bench_hpa_formula, bench_hpa_scaling,
     bench_queue_16, bench_queue_32,
     bench_dbn_tracking, bench_dbn_control,
-    bench_deployment_40, bench_control_plane_churn,
+    bench_deployment_40, bench_control_plane_churn, bench_federation_churn,
     bench_serving_throughput,
     bench_kernel_flash_attention, bench_kernel_mlstm, bench_kernel_ssm,
     bench_kernel_decode_attention,

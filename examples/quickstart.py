@@ -1,6 +1,6 @@
-"""Quickstart: bring up the JIRIAF control plane, lease nodes, declare a
-model workload pod in the Cluster store, let the scheduler place it, and
-run a real forward pass on it.
+"""Quickstart: bring up the JIRIAF control plane across two facilities,
+lease nodes, declare a model workload pod in the Cluster store, let the
+site-aware scheduler place it, and run a real forward pass on it.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -13,32 +13,40 @@ from repro.core.jcs import CentralService
 from repro.core.jfe import FrontEnd
 from repro.core.jfm import FacilityManager
 from repro.core.jrm import SliceSpec
-from repro.core.scheduler import Scheduler
+from repro.core.scheduler import Scheduler, SiteTopology
 from repro.core.state_machine import Container, Pod
 from repro.models import model_api as MA
 
-# 1. user files a workflow request (JFE)
+# 1. user files one workflow spanning two facilities (JFE)
 fe = FrontEnd()
-wf = fe.add_wf("vk-quick", nnodes=2, nodetype="tpu", site="local",
-               walltime=600.0)
-print(f"[jfe] workflow {wf.wf_id}: {wf.nnodes} x {wf.nodetype} @ {wf.site}")
+wfs = fe.add_multi_wf("vk-quick", {"jlab": 1, "perlmutter": 1},
+                      nodetype="tpu", walltime=600.0)
+for wf in wfs:
+    print(f"[jfe] workflow {wf.wf_id} (group {wf.group}): "
+          f"{wf.nnodes} x {wf.nodetype} @ {wf.site}")
 
-# 2. central service launches pilot JRMs (JCS -> JRM/VK) and registers
-#    them in the Cluster object store
+# 2. central service launches one pilot per site (JCS -> JRM/VK) and
+#    registers the nodes straight into the Cluster object store
 jcs = CentralService(fe)
-pilot = jcs.launch_pilot(wf, now=0.0, slice_spec=SliceSpec(chips=4))
 cluster = Cluster()
-for n in jcs.node_list():
-    cluster.register_node(n, 0.0)
-    cluster.heartbeat(n.name, 5.0)
-print(f"[jcs] pilot up: {pilot.nodes} ({len(pilot.tunnels)} SSH tunnels)")
+pilots = jcs.launch_multi(wfs, now=0.0, slice_spec=SliceSpec(chips=4),
+                          cluster=cluster)
+for pilot in pilots:
+    print(f"[jcs] pilot up: {pilot.nodes} ({len(pilot.tunnels)} SSH tunnels)")
 
-# 3. facility manager feeds node heartbeats into the store (JFM)
+# 3. facility manager feeds node heartbeats into the store (JFM); the
+#    store aggregates each facility into a SiteView
 fm = FacilityManager()
 fm.feed(cluster, 5.0)
-print(f"[jfm] {fm.total_free_chips()} free chips")
+for site, view in cluster.site_views(5.0).items():
+    print(f"[site] {site}: {view.free_chips} free chips, "
+          f"runway={view.remaining_walltime:.0f}s")
 
-# 4. declare the pod; the reconciling scheduler binds it
+# 4. declare the pod; the reconciling scheduler binds it. The EJFAT input
+#    stream lives at JLab, so data-locality scoring pins the pod there
+#    even though both sites have room.
+topo = SiteTopology(data_sites={"ejfat": "jlab"}).connect(
+    "jlab", "perlmutter", 62.0)
 cfg = get_config("qwen2-7b").reduced()
 pod = Pod("qwen-serve", [Container("decode-worker")],
           tolerations=[{"key": "virtual-kubelet.io/provider", "value": "mock"}],
@@ -47,9 +55,11 @@ pod = Pod("qwen-serve", [Container("decode-worker")],
                     {"key": "jiriaf.alivetime", "operator": "Gt",
                      "values": ["60"]}],
           request_chips=2, request_hbm_bytes=1 << 30)
-cluster.submit(pod, 5.0, expected_duration=120.0)
-decisions = Scheduler(cluster).run_once(5.0)
-print(f"[scheduler] {decisions[0].pod} -> {decisions[0].node}; conditions="
+cluster.submit(pod, 5.0, expected_duration=120.0, data_stream="ejfat")
+decisions = Scheduler(cluster, topology=topo).run_once(5.0)
+node = cluster.nodes[decisions[0].node]
+print(f"[scheduler] {decisions[0].pod} -> {decisions[0].node} "
+      f"(site {node.site}); conditions="
       f"{[(c.type, c.status.value) for c in pod.conditions]}")
 print(f"[events] {cluster.event_reasons('qwen-serve')}")
 
@@ -63,7 +73,6 @@ print(f"[workload] prefill logits {logits.shape}, "
 
 # 6. lifecycle: monitor (Table 7 states), then complete via the public
 #    terminate transition (no private-state poking)
-node = cluster.nodes[pod.node]
 node.get_pods(6.0)
 print(f"[jrm] container state: {pod.containers[0].state.uid} "
       f"(index {pod.containers[0].state.uid_index})")

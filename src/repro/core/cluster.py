@@ -39,12 +39,19 @@ Writers (HPA, the digital-twin policy, users) only touch *spec* fields;
 observers (StreamEngine, benchmarks, tests) read *status* and the event
 trail. That inversion is what unlocks node churn, multi-site pools, and
 preemption without request loss in one architecture.
+
+Multi-site federation: every ``VirtualNode`` carries a ``site`` identity
+(JLab / NERSC / ... — paper §1, §4), and the store exposes per-site pools
+(``site_nodes``) plus aggregate ``SiteView``s (capacity, remaining
+walltime after the drain margin, heartbeat health). Scheduling consumes
+sites through the filter/score stages in ``scheduler.py``; the JCS uses
+``SiteView.remaining_walltime`` to re-provision pilots proactively.
 """
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.jrm import VirtualNode
 from repro.core.state_machine import Container, Pod, PodPhase
@@ -78,6 +85,26 @@ class ClusterEvent:
 
 
 @dataclass
+class SiteView:
+    """Aggregate status of one facility's node pool (the cross-facility
+    §1/§4 claim made queryable): capacity, walltime runway, health."""
+    name: str
+    nodes: int = 0
+    ready_nodes: int = 0
+    draining_nodes: int = 0
+    total_chips: int = 0
+    free_chips: int = 0
+    total_hbm: int = 0
+    free_hbm: int = 0
+    pods: int = 0
+    # sum over ready schedulable nodes of usable lease time (alive_left
+    # minus the §4.5.4 drain margin); inf when any node has no walltime
+    remaining_walltime: float = 0.0
+    min_walltime: float = float("inf")
+    max_heartbeat_age: float = 0.0
+
+
+@dataclass
 class NodeStatus:
     """Heartbeat-derived node condition, fed by jfm.FacilityManager."""
     ready: bool = True
@@ -103,6 +130,11 @@ class PodTemplate:
     request_hbm_bytes: int = 0
     expected_duration: float = 0.0
     priority: int = 0
+    # federation spec: hard site constraints + the input stream whose home
+    # site the data-locality scorer pins toward (scheduler.SiteTopology)
+    site_selector: Tuple[str, ...] = ()
+    site_anti_affinity: Tuple[str, ...] = ()
+    data_stream: Optional[str] = None
     container_factory: Callable[[str], List[Container]] = _default_containers
     # drain support: returns the pod's checkpointable runtime state
     # (a pytree of numpy-convertible leaves) for repro.checkpoint
@@ -143,6 +175,10 @@ class PodRecord:
     priority: int = 0
     expected_duration: float = 0.0
     submitted_at: float = 0.0
+    # federation spec (copied from the PodTemplate; see scheduler stages)
+    site_selector: Tuple[str, ...] = ()
+    site_anti_affinity: Tuple[str, ...] = ()
+    data_stream: Optional[str] = None
     # scheduler bookkeeping (retry/backoff)
     attempts: int = 0
     next_retry: float = 0.0
@@ -169,6 +205,7 @@ class Cluster:
         self.pods: Dict[str, PodRecord] = {}
         self.deployments: Dict[str, Deployment] = {}
         self.events: List[ClusterEvent] = []
+        self.version = 0              # bumps on every watch emission
         self._watchers: Dict[str, List[Callable[[WatchEvent], None]]] = {}
         self._uid = itertools.count(1)
 
@@ -177,6 +214,7 @@ class Cluster:
         self._watchers.setdefault(kind, []).append(callback)
 
     def _emit(self, kind: str, type_: str, name: str, obj=None):
+        self.version += 1
         ev = WatchEvent(kind, type_, name, obj)
         for cb in self._watchers.get(kind, []):
             cb(ev)
@@ -264,9 +302,48 @@ class Cluster:
             out.append(node)
         return out
 
+    # ----------------------------------------------------------- sites
+    def site_names(self) -> List[str]:
+        return sorted({n.site for n in self.nodes.values()})
+
+    def site_nodes(self, site: str) -> List[VirtualNode]:
+        """One facility's node pool."""
+        return [n for n in self.nodes.values() if n.site == site]
+
+    def site_view(self, site: str, now: float) -> SiteView:
+        """Aggregate the facility's capacity, walltime runway, and health."""
+        view = SiteView(name=site)
+        for node in self.site_nodes(site):
+            st = self.node_status.get(node.name)
+            view.nodes += 1
+            view.total_chips += node.slice_spec.chips
+            view.total_hbm += node.slice_spec.hbm_bytes
+            view.pods += len(node.pods)
+            age = max(st.heartbeat_age if st else 0.0,
+                      now - node.last_heartbeat)
+            view.max_heartbeat_age = max(view.max_heartbeat_age, age)
+            left = node.alive_left(now)
+            view.min_walltime = min(view.min_walltime, left)
+            if node.draining(now):
+                view.draining_nodes += 1
+            if st is None or not st.ready:
+                continue
+            view.ready_nodes += 1
+            view.free_chips += node.free_chips()
+            view.free_hbm += node.free_hbm()
+            if st.schedulable:
+                view.remaining_walltime += max(left - node.drain_margin, 0.0)
+        return view
+
+    def site_views(self, now: float) -> Dict[str, SiteView]:
+        return {s: self.site_view(s, now) for s in self.site_names()}
+
     # ------------------------------------------------------------ pods
     def submit(self, pod: Pod, now: float, *, owner: Optional[str] = None,
                priority: int = 0, expected_duration: float = 0.0,
+               site_selector: Tuple[str, ...] = (),
+               site_anti_affinity: Tuple[str, ...] = (),
+               data_stream: Optional[str] = None,
                restored_from: Optional[str] = None,
                restored_state: Optional[dict] = None) -> PodRecord:
         """Declare a pod. It enters the scheduler queue as Pending; nobody
@@ -275,7 +352,9 @@ class Cluster:
             raise ValueError(f"pod {pod.name} already exists")
         rec = PodRecord(pod=pod, owner=owner, priority=priority,
                         expected_duration=expected_duration,
-                        submitted_at=now, restored_from=restored_from,
+                        submitted_at=now, site_selector=tuple(site_selector),
+                        site_anti_affinity=tuple(site_anti_affinity),
+                        data_stream=data_stream, restored_from=restored_from,
                         restored_state=restored_state)
         self.pods[pod.name] = rec
         self._emit(KIND_POD, ADDED, pod.name, rec)

@@ -16,7 +16,11 @@ checkpoint (the crash path of test_node_failure_reschedule).
 
 ``ControlPlane`` bundles store + scheduler + controllers into a single
 ``step(now)`` so drivers (StreamEngine, launch/serve, benchmarks) run one
-reconcile call per tick.
+reconcile call per tick. ``drain_site`` / ``drain_allocation`` extend the
+drain loop to federation scale: a whole facility's node pool (one pilot
+allocation) is cordoned up front and drained as a single checkpoint/evict
+wave, and the displaced replicas reschedule cross-site with their state
+restored.
 """
 from __future__ import annotations
 
@@ -66,6 +70,9 @@ class DeploymentController:
                     dep.template.instantiate(name), now, owner=dep.name,
                     priority=dep.template.priority,
                     expected_duration=dep.template.expected_duration,
+                    site_selector=dep.template.site_selector,
+                    site_anti_affinity=dep.template.site_anti_affinity,
+                    data_stream=dep.template.data_stream,
                     restored_from=restored_from,
                     restored_state=restored_state)
                 live.append(rec)
@@ -126,6 +133,20 @@ class NodeLifecycleController:
                     evicted.owner, evicted.name, state or {})
         self._drained.add(name)
 
+    def drain_allocation(self, names: List[str], now: float):
+        """Batch drain a whole pilot allocation (§4.5.4 at site scale):
+        cordon every node *first* — so a displaced pod can never be
+        re-placed onto a sibling of the same expiring allocation — then
+        run one checkpoint/evict wave. Parked state is restored by the
+        DeploymentController's replacements, which the scheduler is free
+        to re-place cross-site."""
+        for name in names:
+            if name in self.cluster.nodes:
+                self.cluster.cordon(name, now, reason="Draining")
+        for name in names:
+            if name in self.cluster.nodes:
+                self._drain_node(name, now)
+
     def _fail_node(self, name: str, now: float, why: str):
         st = self.cluster.node_status[name]
         if st.ready:
@@ -140,6 +161,7 @@ class NodeLifecycleController:
                     evicted.owner, evicted.name, {})
 
     def reconcile(self, now: float):
+        to_drain = []
         for name, node in list(self.cluster.nodes.items()):
             st = self.cluster.node_status.get(name)
             if st is None:
@@ -161,7 +183,11 @@ class NodeLifecycleController:
             if not st.ready:
                 continue
             if node.draining(now) and name not in self._drained:
-                self._drain_node(name, now)
+                to_drain.append(name)
+        # same-pass expirations (one pilot allocation typically shares a
+        # lease) drain as a single wave: cordon all first, then evict
+        if to_drain:
+            self.drain_allocation(to_drain, now)
 
 
 @dataclass
@@ -187,5 +213,17 @@ class ControlPlane:
         """One control-plane tick: lifecycle first (drains/evictions free
         capacity and park state), then replica convergence, then binding."""
         self.nodes.reconcile(now)
+        self.deployments.reconcile(now)
+        return self.scheduler.run_once(now)
+
+    def drain_site(self, site: str, now: float):
+        """Evacuate one whole facility (kill / maintenance / superseded
+        pilot): batch-drain every node of ``site`` as a single
+        checkpoint/evict wave, then converge replicas and re-bind them —
+        cross-site, with restored state — in the same call."""
+        names = [n.name for n in self.cluster.site_nodes(site)]
+        self.cluster.record(now, "Node", site, "SiteDrain",
+                            f"nodes={len(names)}")
+        self.nodes.drain_allocation(names, now)
         self.deployments.reconcile(now)
         return self.scheduler.run_once(now)

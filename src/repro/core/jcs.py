@@ -1,11 +1,24 @@
-"""JCS — JIRIAF Central Service: initiates pilot jobs through the JRM
-(paper §3). Models the FireWorks/Slurm deployment path of §4.5 and the
+"""JCS — JIRIAF Central Service (paper §3): initiates pilot jobs through
+the JRM, modeling the FireWorks/Slurm deployment path of §4.5 and the
 40-node Perlmutter bring-up of §5.1 (staggered srun of node-setup.sh with
 SSH tunnels), creating VirtualNodes against a simulated facility.
+
+Post-PR-1 role: the JCS *owns* pilot provisioning — it is the only
+component that mints VirtualNodes — and registers them straight into the
+declarative Cluster store when one is attached; scheduling and lifecycle
+are the store's controllers' job, not the JCS's.
+
+Federation (this PR): ``launch_multi`` deploys one pilot per facility for
+a multi-site workflow, and ``reprovision`` closes the §4.5.4 loop
+*proactively* — when a site's aggregate remaining walltime (Cluster
+``SiteView``) drops below the projected demand of the pods running there,
+the JCS launches a fresh pilot at that site before the drain wave hits,
+so capacity exists by the time the NodeLifecycleController evicts.
 """
 from __future__ import annotations
 
 import itertools
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -42,10 +55,12 @@ class CentralService:
     _port: itertools.count = field(default_factory=lambda: itertools.count(0))
 
     def launch_pilot(self, wf: WorkflowRequest, now: float,
-                     slice_spec: Optional[SliceSpec] = None) -> PilotJob:
+                     slice_spec: Optional[SliceSpec] = None,
+                     cluster=None) -> PilotJob:
         """Deploy wf.nnodes JRMs (nersc-slurm.sh analog): staggered start,
         per-node kubelet + exporter tunnels, walltime lease set 60s short of
-        the Slurm walltime (§4.5.4)."""
+        the Slurm walltime (§4.5.4). With ``cluster`` the nodes register
+        (and first-heartbeat) straight into the declarative store."""
         names, tunnels = [], []
         for i in range(1, wf.nnodes + 1):
             off = next(self._port)
@@ -70,10 +85,79 @@ class CentralService:
         wf.state = "RUNNING"
         pilot = PilotJob(wf.wf_id, names, tunnels)
         self.pilots[wf.wf_id] = pilot
+        if cluster is not None:
+            for name in names:
+                cluster.register_node(self.nodes[name], now)
+                cluster.heartbeat(name, max(now, self.nodes[name].created_at))
         return pilot
+
+    def launch_multi(self, wfs: List[WorkflowRequest], now: float,
+                     slice_spec: Optional[SliceSpec] = None,
+                     cluster=None) -> List[PilotJob]:
+        """Multi-facility workflow targeting: one pilot per site-scoped
+        WorkflowRequest (see ``FrontEnd.add_multi_wf``)."""
+        return [self.launch_pilot(wf, now, slice_spec, cluster=cluster)
+                for wf in wfs]
 
     def node_list(self) -> List[VirtualNode]:
         return list(self.nodes.values())
+
+    # -------------------------------------------- proactive provisioning
+    def projected_demand(self, cluster, site: str, now: float,
+                         horizon: float = 600.0) -> float:
+        """Seconds of work the site's pods still owe: remaining expected
+        duration per pod, ``horizon`` for open-ended pods."""
+        total = 0.0
+        for rec in cluster.pods.values():
+            node = cluster.nodes.get(rec.pod.node) if rec.bound else None
+            if node is None or node.site != site:
+                continue
+            if rec.expected_duration > 0:
+                total += max(rec.expected_duration
+                             - (now - rec.submitted_at), 0.0)
+            else:
+                total += horizon
+        return total
+
+    def reprovision(self, cluster, now: float, *, horizon: float = 600.0,
+                    walltime: float = 3600.0,
+                    slice_spec: Optional[SliceSpec] = None) -> List[PilotJob]:
+        """Proactive per-site pilot re-provisioning: for every site whose
+        aggregate remaining walltime (SiteView, drain margin already
+        subtracted) no longer covers its projected demand, launch a fresh
+        pilot there — sized by the shortfall, capped at 1:1 replacement of
+        the expiring nodes — so the batch drain wave reschedules onto
+        capacity that already exists. Self-limiting: launched nodes raise
+        the site's supply, so the next call is a no-op until the new
+        lease erodes too."""
+        launched = []
+        for site, view in cluster.site_views(now).items():
+            demand = self.projected_demand(cluster, site, now, horizon)
+            if view.remaining_walltime >= demand:
+                continue
+            pool = cluster.site_nodes(site)
+            # replace only live capacity that is about to expire; dead or
+            # already-drained nodes linger in the store but add no supply
+            live = [n for n in pool
+                    if (st := cluster.node_status.get(n.name)) is not None
+                    and st.ready and st.schedulable and n.alive_left(now) > 0]
+            expiring = [n for n in live
+                        if n.alive_left(now) - n.drain_margin < horizon]
+            # size the pilot by the shortfall a replacement lease actually
+            # covers, never beyond 1:1 replacement of expiring nodes
+            usable = max(walltime - 120.0, 1.0)   # -60 JRM offset, -60 margin
+            shortfall = demand - view.remaining_walltime
+            n_new = min(max(len(expiring), 1),
+                        max(1, math.ceil(shortfall / usable)))
+            wf = self.frontend.add_wf(
+                f"{site}-re{len(self.pilots)}-", n_new,
+                nodetype=pool[0].nodetype if pool else "cpu", site=site,
+                walltime=walltime)
+            pilot = self.launch_pilot(
+                wf, now, slice_spec or (pool[0].slice_spec if pool else None),
+                cluster=cluster)
+            launched.append(pilot)
+        return launched
 
     def teardown(self, wf_id: int, now: float):
         pilot = self.pilots.get(wf_id)

@@ -1,9 +1,19 @@
-"""JFE — JIRIAF Front End: user workflow request table (paper §3, §4.5.2).
+"""JFE — JIRIAF Front End (paper §3, §4.5.2): user workflow request table.
 
 Mirrors the FireWorks main.sh verbs: add_wf / get_wf / delete_wf. A
 workflow requests N nodes of a nodetype/site with a walltime — exactly the
 env.list fields from §4.5.2 (nnodes, nodetype, walltime, account, qos,
-nodename, site)."""
+nodename, site).
+
+Post-PR-1 role: the JFE owns nothing but the request table — it is the
+user-facing intake ahead of the declarative control plane; the JCS turns
+its rows into pilots and the Cluster store's controllers do the rest.
+
+Federation (this PR): ``add_multi_wf`` files one site-scoped
+WorkflowRequest per facility under a shared ``group`` id, so a single
+user workflow can target JLab + NERSC + ... at once (the §1 cross-
+facility claim); ``JCS.launch_multi`` deploys the group as one pilot per
+site."""
 from __future__ import annotations
 
 import itertools
@@ -22,17 +32,33 @@ class WorkflowRequest:
     account: str = "m3792"
     qos: str = "debug"
     state: str = "READY"      # READY -> RUNNING -> COMPLETED | ARCHIVED
+    group: Optional[str] = None   # multi-site workflow this row belongs to
 
 
 @dataclass
 class FrontEnd:
     _counter: itertools.count = field(default_factory=lambda: itertools.count(1))
+    _groups: itertools.count = field(default_factory=lambda: itertools.count(1))
     table: Dict[int, WorkflowRequest] = field(default_factory=dict)
 
     def add_wf(self, nodename: str, nnodes: int, **kw) -> WorkflowRequest:
         wf = WorkflowRequest(next(self._counter), nodename, nnodes, **kw)
         self.table[wf.wf_id] = wf
         return wf
+
+    def add_multi_wf(self, nodename: str, site_nodes: Dict[str, int],
+                     **kw) -> List[WorkflowRequest]:
+        """One workflow spanning several facilities: a site-scoped request
+        per entry of ``site_nodes`` (site -> nnodes), all sharing one
+        ``group`` id (unique per call — two multi-site workflows never
+        merge)."""
+        group = f"{nodename}g{next(self._groups)}"
+        return [self.add_wf(f"{nodename}{site}-", nnodes, site=site,
+                            group=group, **kw)
+                for site, nnodes in site_nodes.items()]
+
+    def group_wfs(self, group: str) -> List[WorkflowRequest]:
+        return [wf for wf in self.table.values() if wf.group == group]
 
     def get_wf(self) -> List[WorkflowRequest]:
         return list(self.table.values())

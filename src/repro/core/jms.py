@@ -1,14 +1,16 @@
 """JMS — JIRIAF Matching Service: aligns leased resources with user
 requests (paper §3).
 
-Since the declarative-control-plane refactor this is a thin one-shot
-facade over ``repro.core.scheduler``: the same filter stages (Ready,
-tolerations, nodeSelector/affinity, chips+HBM resources, walltime lease >
-expected duration + drain margin) and score stages (non-straggler
-preference, best-fit HBM) that the queue-based ``Scheduler`` runs against
-the Cluster store. Legacy callers that hold a bare node list + a
-FacilityManager pool keep working; new code should declare pods into a
-``Cluster`` and let the scheduler/controllers converge.
+Post-PR-1 role: pure *facade* — owns no state and no policy. It projects
+a bare (node list, JFM pool) view into a throwaway Cluster and runs the
+same filter stages (Ready, tolerations, nodeSelector/affinity, site
+selector/anti-affinity, chips+HBM resources, walltime lease > expected
+duration + drain margin) and score stages (non-straggler, data locality,
+site spread/latency, best-fit HBM, node spread) that the queue-based
+``repro.core.scheduler.Scheduler`` — the owner of matching policy — runs
+against the real Cluster store. Legacy callers keep working; new code
+should declare pods into a ``Cluster`` and let the scheduler/controllers
+converge.
 """
 from __future__ import annotations
 

@@ -9,6 +9,14 @@ TPU adaptation: a node fronts a mesh *slice* (chips + HBM). Containers are
 jitted-workload thunks; the "pgid" is the workload handle. The §4.5.4
 walltime margin is modeled by ``drain_margin``: pods are asked to
 checkpoint when remaining lease < margin.
+
+Post-PR-1 role: *owner* of the node-local truth — pod placement on the
+node, container state machines, the walltime lease clock, and resource
+accounting (free chips/HBM). Everything cluster-scoped (which node a pod
+SHOULD land on, when to drain, replica counts) moved up into the
+declarative control plane (``cluster.py`` + scheduler + controllers); the
+``site`` identity on each node is what the federation layer's per-site
+pools and site-aware scheduling stages key on.
 """
 from __future__ import annotations
 

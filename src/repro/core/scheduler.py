@@ -18,11 +18,27 @@ store's pending queue:
 
 ``MatchingService`` (jms.py) remains as a thin one-shot facade over the
 same filter/score stages for legacy callers.
+
+Multi-site federation (paper §1/§4: one control plane spanning JLab,
+NERSC, ...): a ``SiteTopology`` — the configurable inter-site latency
+matrix plus the map of data streams to their home site — makes site a
+first-class scheduling input:
+
+  * ``filter_site``: hard site selector / anti-affinity on the PodRecord,
+  * ``score_data_locality``: pin a pod toward the site holding its input
+    stream (pay the inter-site latency everywhere else),
+  * ``score_site_spread``: spread an owner's replicas across sites so one
+    facility outage takes out as few replicas as possible,
+  * ``score_site_latency``: among equally-spread sites prefer the one
+    closest (by the latency matrix) to the owner's existing footprint.
+
+All four are neutral when the cluster is single-site or the pod carries
+no site spec, so single-facility behavior is unchanged.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.cluster import KIND_POD, Cluster, PodRecord
 from repro.core.jrm import VirtualNode
@@ -32,6 +48,44 @@ FilterStage = Callable[[PodRecord, VirtualNode, "Scheduler", float],
                        Optional[str]]
 # A scorer returns a number; higher is better.
 ScoreStage = Callable[[PodRecord, VirtualNode, "Scheduler", float], float]
+
+
+@dataclass
+class SiteTopology:
+    """Federation config: symmetric inter-site latency matrix (ms) and the
+    home site of each named data stream (EJFAT/ERSAP source pinning)."""
+    latency_ms: Dict[Tuple[str, str], float] = field(default_factory=dict)
+    data_sites: Dict[str, str] = field(default_factory=dict)
+    default_latency_ms: float = 100.0     # unlisted site pairs
+
+    def latency(self, a: str, b: str) -> float:
+        if a == b:
+            return 0.0
+        return self.latency_ms.get(
+            (a, b), self.latency_ms.get((b, a), self.default_latency_ms))
+
+    def connect(self, a: str, b: str, ms: float) -> "SiteTopology":
+        self.latency_ms[(a, b)] = ms
+        return self
+
+    @staticmethod
+    def parse(spec: str, data_spec: str = "") -> "SiteTopology":
+        """``"jlab:nersc:40,nersc:ornl:18"`` -> latency entries;
+        ``"ejfat=jlab"`` -> data-stream home sites."""
+        topo = SiteTopology()
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            a, b, ms = part.split(":")
+            topo.connect(a, b, float(ms))
+        for part in data_spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            stream, site = part.split("=")
+            topo.data_sites[stream] = site
+        return topo
 
 
 # ------------------------------------------------------------ filter stages
@@ -84,9 +138,18 @@ def filter_walltime(rec, node, sched, now):
     return None
 
 
+def filter_site(rec, node, sched, now):
+    """Federation: hard site selector + anti-affinity on the PodRecord."""
+    if rec.site_selector and node.site not in rec.site_selector:
+        return f"site {node.site} not in selector {list(rec.site_selector)}"
+    if node.site in rec.site_anti_affinity:
+        return f"site {node.site} excluded by anti-affinity"
+    return None
+
+
 DEFAULT_FILTERS: List[FilterStage] = [
     filter_node_ready, filter_tolerations, filter_node_selector,
-    filter_affinity, filter_resources, filter_walltime,
+    filter_affinity, filter_site, filter_resources, filter_walltime,
 ]
 
 
@@ -102,20 +165,77 @@ def score_non_straggler(rec, node, sched, now):
     return -1.0 if (st is not None and st.straggler) else 0.0
 
 
+def _peer_sites(rec, sched) -> Dict[str, int]:
+    """Bound replicas of ``rec``'s owner, counted per site. Memoized on
+    the cluster's watch version: scoring evaluates every candidate node
+    (x2 site stages) per pod, and rescanning the pod table each time
+    turned the §5.1 forty-node bring-up O(pods^2 x nodes)."""
+    if rec.owner is None:
+        return {}
+    key = (rec.owner, sched.cluster.version)
+    cached = sched._peer_site_cache
+    if cached is not None and cached[0] == key:
+        return cached[1]
+    out: Dict[str, int] = {}
+    for peer in sched.cluster.pods_of(rec.owner):
+        node = sched.cluster.nodes.get(peer.pod.node) if peer.bound else None
+        if node is not None:
+            out[node.site] = out.get(node.site, 0) + 1
+    sched._peer_site_cache = (key, out)
+    return out
+
+
+def score_data_locality(rec, node, sched, now):
+    """Stage 2: pin toward the site holding the pod's input stream; any
+    other site pays that stream's inter-site latency."""
+    topo = sched.topology
+    if topo is None or rec.data_stream is None:
+        return 0.0
+    home = topo.data_sites.get(rec.data_stream)
+    if home is None:
+        return 0.0
+    return -topo.latency(home, node.site)
+
+
+def score_site_spread(rec, node, sched, now):
+    """Stage 3: spread an owner's replicas across sites — a whole-facility
+    outage (walltime cliff, network partition) takes out as few replicas
+    as possible."""
+    return -float(_peer_sites(rec, sched).get(node.site, 0))
+
+
+def score_site_latency(rec, node, sched, now):
+    """Stage 4: latency-weighted cross-site spreading — among equally
+    spread candidates, prefer the site closest (by the topology matrix) to
+    where the owner's replicas already run, so cross-site spillover lands
+    on the cheapest link."""
+    topo = sched.topology
+    if topo is None:
+        return 0.0
+    peers = _peer_sites(rec, sched)
+    others = [s for s in peers if s != node.site]
+    if not others:
+        return 0.0
+    return -sum(topo.latency(node.site, s) * peers[s]
+                for s in others) / sum(peers[s] for s in others)
+
+
 def score_bestfit_hbm(rec, node, sched, now):
-    """Stage 2: tightest absolute HBM fit that still holds the pod (the
+    """Stage 5: tightest absolute HBM fit that still holds the pod (the
     seed JMS policy)."""
     return -(node.free_hbm() - rec.pod.request_hbm_bytes)
 
 
 def score_spread(rec, node, sched, now):
-    """Stage 3: balance pods across nodes so one drained lease takes out
+    """Stage 6: balance pods across nodes so one drained lease takes out
     as few replicas as possible."""
     return -node.used_chips() / max(float(node.slice_spec.chips), 1.0)
 
 
-DEFAULT_SCORERS: List[ScoreStage] = [score_non_straggler, score_bestfit_hbm,
-                                     score_spread]
+DEFAULT_SCORERS: List[ScoreStage] = [
+    score_non_straggler, score_data_locality, score_site_spread,
+    score_site_latency, score_bestfit_hbm, score_spread,
+]
 
 
 @dataclass
@@ -136,6 +256,8 @@ class Scheduler:
     backoff_base: float = 5.0
     backoff_max: float = 60.0
     enable_preemption: bool = True
+    topology: Optional[SiteTopology] = None     # federation config
+    _peer_site_cache: Optional[tuple] = field(default=None, repr=False)
 
     # ------------------------------------------------------ single pod
     def feasible(self, rec: PodRecord, node: VirtualNode,
@@ -219,6 +341,9 @@ class Scheduler:
                 _reset_pod(evicted.pod), now, owner=evicted.owner,
                 priority=evicted.priority,
                 expected_duration=evicted.expected_duration,
+                site_selector=evicted.site_selector,
+                site_anti_affinity=evicted.site_anti_affinity,
+                data_stream=evicted.data_stream,
                 restored_from=evicted.restored_from,
                 restored_state=evicted.restored_state)
             requeued.next_retry = now   # eligible immediately

@@ -12,9 +12,20 @@ the arrival rate follows the §6.2 ground-truth pressure trajectory. A
 ``--walltime`` lease makes the NodeLifecycleController drain nodes
 mid-run: checkpoint, evict, reschedule — visible in the event trail.
 
+Multi-site federation: ``--sites "jlab:2,nersc:2"`` brings up one pilot
+per facility (JFE multi-site workflow -> JCS launch_multi), the scheduler
+spreads replicas across sites latency-aware (``--site-latency``), and
+``--kill-site SITE --kill-tick T`` batch-drains a whole facility mid-run
+— its replicas checkpoint and reschedule cross-site with zero request
+loss. ``--reprovision`` lets the JCS top up any site whose walltime
+runway drops below projected demand (pair with ``--walltime`` to watch
+the fleet survive perpetual lease churn).
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --devices 8 \
-      --tp 2 --nodes 4 --ticks 80 [--controller hpa] [--walltime 300]
+      --tp 2 --nodes 4 --ticks 80 [--controller hpa] [--walltime 300] \
+      [--sites "jlab:2,nersc:2" --site-latency "jlab:nersc:40" \
+       --kill-site jlab --kill-tick 40]
 """
 import argparse
 import os
@@ -35,12 +46,14 @@ import numpy as np                                # noqa: E402
 
 from repro.configs.base import get_config         # noqa: E402
 from repro.core.cluster import Cluster            # noqa: E402
+from repro.core.controllers import ControlPlane   # noqa: E402
 from repro.core.elastic import ElasticServing     # noqa: E402
 from repro.core.hpa import HPA, HPAConfig         # noqa: E402
 from repro.core.jcs import CentralService         # noqa: E402
 from repro.core.jfe import FrontEnd               # noqa: E402
 from repro.core.jfm import FacilityManager        # noqa: E402
 from repro.core.jrm import SliceSpec              # noqa: E402
+from repro.core.scheduler import Scheduler, SiteTopology  # noqa: E402
 from repro.core.digital_twin.queue_model import ground_truth, lam_of_state  # noqa: E402
 from repro.data.pipeline import RequestSource     # noqa: E402
 from repro.models import model_api as MA          # noqa: E402
@@ -61,6 +74,20 @@ def main(argv=None):
     ap.add_argument("--walltime", type=float, default=0.0,
                     help="per-node lease (s); >0 exercises the drain ->"
                          " checkpoint -> reschedule loop mid-run")
+    ap.add_argument("--sites", default="",
+                    help='multi-site pilot spec "site:nnodes,..." (e.g.'
+                         ' "jlab:2,nersc:2"); overrides --nodes')
+    ap.add_argument("--site-latency", default="",
+                    help='inter-site latency matrix "a:b:ms,..." for'
+                         " latency-weighted cross-site spreading")
+    ap.add_argument("--kill-site", default="",
+                    help="batch-drain this whole site at --kill-tick"
+                         " (checkpoint/evict wave, cross-site reschedule)")
+    ap.add_argument("--kill-tick", type=int, default=-1)
+    ap.add_argument("--reprovision", action="store_true",
+                    help="JCS proactively launches a fresh pilot when a"
+                         " site's walltime runway drops below projected"
+                         " demand (pair with --walltime)")
     ap.add_argument("--no-runtime", action="store_true",
                     help="disable the slot-slab serving runtime (fall back"
                          " to the chunked prefill+decode path)")
@@ -68,25 +95,52 @@ def main(argv=None):
                     help="randomize per-request prompt_len/max_new (the"
                          " workload bucketed compilation is built for)")
     args = ap.parse_args(argv)
+    if args.kill_site:
+        if not (0 <= args.kill_tick < args.ticks):
+            ap.error("--kill-site needs --kill-tick in [0, --ticks)")
+        known = {part.split(":")[0].strip()
+                 for part in args.sites.split(",") if part.strip()}
+        if args.kill_site not in known:
+            ap.error(f"--kill-site {args.kill_site!r} not in --sites spec")
 
     cfg = get_config(args.arch).reduced()
 
     # ---- JIRIAF control plane bring-up (paper §3 component flow) ----
     fe = FrontEnd()
-    wf = fe.add_wf("vk-tpu-", args.nodes, nodetype="tpu", site="tpu-pod",
-                   walltime=args.walltime)
     jcs = CentralService(fe)
-    pilot = jcs.launch_pilot(wf, now=0.0, slice_spec=SliceSpec(
-        chips=max(args.devices // args.nodes, 1)))
-    nodes = jcs.node_list()
     cluster = Cluster()
+    if args.sites:
+        site_nodes = {s: int(n) for s, n in
+                      (part.split(":") for part in args.sites.split(","))}
+        n_nodes = sum(site_nodes.values())
+        wfs = fe.add_multi_wf("vk-tpu-", site_nodes, nodetype="tpu",
+                              walltime=args.walltime)
+        pilots = jcs.launch_multi(
+            wfs, now=0.0, cluster=cluster,
+            slice_spec=SliceSpec(chips=max(args.devices // n_nodes, 1)))
+    else:
+        wf = fe.add_wf("vk-tpu-", args.nodes, nodetype="tpu", site="tpu-pod",
+                       walltime=args.walltime)
+        pilots = [jcs.launch_pilot(wf, now=0.0, cluster=cluster,
+                                   slice_spec=SliceSpec(
+                                       chips=max(args.devices // args.nodes,
+                                                 1)))]
+    nodes = jcs.node_list()
     for n in nodes:
-        cluster.register_node(n, 0.0)
         cluster.heartbeat(n.name, 0.0)
     fm = FacilityManager()
     fm.feed(cluster, 0.0)
-    print(f"[jcs] pilot {pilot.wf_id}: {len(pilot.nodes)} JRM nodes, "
-          f"{len(pilot.tunnels)} SSH tunnels")
+    topo = SiteTopology.parse(args.site_latency) if args.site_latency \
+        else None
+    plane = ControlPlane(cluster, scheduler=Scheduler(cluster,
+                                                      topology=topo))
+    for pilot in pilots:
+        print(f"[jcs] pilot {pilot.wf_id}: {len(pilot.nodes)} JRM nodes, "
+              f"{len(pilot.tunnels)} SSH tunnels")
+    for site, view in cluster.site_views(0.0).items():
+        print(f"[site] {site}: {view.ready_nodes}/{view.nodes} ready, "
+              f"{view.free_chips} free chips, "
+              f"runway={view.remaining_walltime:.0f}s")
     print(f"[jfm] pool: {fm.total_free_chips()} free chips on "
           f"{len(fm.available())} ready nodes")
 
@@ -111,18 +165,33 @@ def main(argv=None):
                           hpa=HPA(HPAConfig(target=8.0, max_replicas=
                                             serving.max_replicas(),
                                             scale_down_stabilization=120.0)),
-                          cluster=cluster)
+                          cluster=cluster, plane=plane)
     engine.deploy(0.0)
     print(f"[scheduler] {len(engine.pods)} serving pods bound; "
           f"controller={args.controller}")
 
     # ---- drive with the §6.2 pressure trajectory ----
     gt = ground_truth(args.ticks)
+    killed_sites = set()
     for t, s in enumerate(gt):
         now = t * args.dt
         lam = lam_of_state(s) * args.lam_scale
-        for n in nodes:
-            cluster.heartbeat(n.name, now)
+        if args.kill_site and t == args.kill_tick:
+            print(f"[federation] t={t}: batch-draining site "
+                  f"{args.kill_site} ({len(cluster.site_nodes(args.kill_site))}"
+                  f" nodes) — cross-site failover")
+            plane.drain_site(args.kill_site, now)
+            killed_sites.add(args.kill_site)
+        if args.reprovision:
+            for pilot in jcs.reprovision(
+                    cluster, now, horizon=args.walltime or 600.0,
+                    walltime=args.walltime or 600.0):
+                wf = fe.table[pilot.wf_id]
+                print(f"[jcs] t={t}: runway low at {wf.site} — reprovision"
+                      f" pilot {pilot.wf_id} ({len(pilot.nodes)} nodes)")
+        for name, node in cluster.nodes.items():
+            if node.site not in killed_sites:
+                cluster.heartbeat(name, now)
         fm.feed(cluster, now)
         engine.reconcile(now)          # controllers converge every tick
         qlen = engine.tick(now, args.dt, lam)
@@ -148,6 +217,13 @@ def main(argv=None):
         print(f"[runtime] slot-slab serving: traces admit={tc['admit']} "
               f"decode={tc['decode']} (bound {rt.kernels.max_traces}); "
               f"fused blocks={blocks}")
+    if len(cluster.site_names()) > 1:
+        per_site = {}
+        for pod in engine.pods.values():
+            node = cluster.nodes.get(pod.node)
+            if node is not None:
+                per_site[node.site] = per_site.get(node.site, 0) + 1
+        print(f"[federation] replicas by site: {dict(sorted(per_site.items()))}")
     trail = {}
     for ev in cluster.events:
         trail[ev.reason] = trail.get(ev.reason, 0) + 1

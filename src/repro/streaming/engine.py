@@ -239,6 +239,9 @@ class StreamEngine:
                             requests_from_state(rec.restored_state)
                             if r.rid not in known]
                 if rt is not None:
+                    # content store rides the checkpoint: restored rids
+                    # replay their exact prompt tokens
+                    rt.ingest_content(rec.restored_state)
                     rt.submit(restored)
                 else:
                     self.queue = restored + self.queue

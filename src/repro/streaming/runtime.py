@@ -25,6 +25,13 @@ mesh topology by ``ElasticServing.runtime_kernels``; the slab itself is
 per-replica state. The slot table round-trips through the drain ->
 checkpoint -> reschedule path as plain numpy arrays (``state()`` /
 ``restore()``), so in-flight requests survive a node eviction.
+
+Request content store: each request's prompt tokens are materialized
+once — deterministically from (rid, length bucket), independent of its
+admission chunk-mates — kept in ``DecodeRuntime.content``, and carried
+through ``state()``/``restore()``. A restored rid therefore replays its
+*exact* prompt tokens on the successor replica, so greedy output across a
+drain is token-identical to an undisturbed run.
 """
 from __future__ import annotations
 
@@ -194,6 +201,9 @@ class DecodeRuntime:
     gen: int = 0                      # ElasticServing build generation
     pending: List[Request] = field(default_factory=list)
     slots: List[_Slot] = field(default_factory=list)
+    # request content store: rid -> prompt tokens (length-bucket shaped);
+    # checkpointed with the slot table so restored rids replay exactly
+    content: Dict[int, np.ndarray] = field(default_factory=dict)
     steps_dispatched: int = 0         # fused blocks run (for perf telemetry)
     record_tokens: bool = False       # keep per-request token ids (tests)
     token_log: Dict[int, list] = field(default_factory=dict)
@@ -263,16 +273,29 @@ class DecodeRuntime:
             done.extend(self._admit_batch(group, take, lb))
         return done
 
+    def _prompt_tokens(self, rid: int, lb: int) -> np.ndarray:
+        """Content-store lookup: a request's prompt tokens are minted once
+        (deterministic in (rid, length bucket) — never in the admission
+        grouping) and replayed verbatim on every later admission,
+        including after a checkpoint/restore on another replica."""
+        tok = self.content.get(rid)
+        if tok is None or tok.shape[0] != lb:
+            rng = np.random.default_rng(hash((rid, lb)) % (2 ** 31))
+            tok = rng.integers(0, self.kernels.cfg.vocab, lb).astype(np.int32)
+            self.content[rid] = tok
+        return tok
+
     def _admit_batch(self, reqs: List[Request], slot_idx: List[int],
                      lb: int) -> List[Finished]:
-        rng = np.random.default_rng(hash((reqs[0].rid, lb)) % (2 ** 31))
-        cfg, rcfg = self.kernels.cfg, self.kernels.rcfg
+        rcfg = self.kernels.rcfg
         bb = MA.pow2_bucket(len(reqs), 1, rcfg.max_batch)
         n_pad = bb - len(reqs)
-        # synthetic workload: the prompt is position-hashed noise; right-pad
-        # to the length bucket and the pad joins the (synthetic) context.
-        # Batch pads to the bucket too — pad rows land in the overflow row.
-        tokens = rng.integers(0, cfg.vocab, (bb, lb)).astype(np.int32)
+        # synthetic workload: the prompt is per-request noise from the
+        # content store; right-pad to the length bucket and the pad joins
+        # the (synthetic) context. Batch pads to the bucket too — pad rows
+        # land in the overflow row, so their token values are irrelevant.
+        tokens = np.stack([self._prompt_tokens(r.rid, lb) for r in reqs]
+                          + [np.zeros(lb, np.int32)] * n_pad)
         max_new = np.asarray([r.max_new for r in reqs] + [0] * n_pad,
                              np.int32)
         idx = np.asarray(list(slot_idx) + [rcfg.max_batch] * n_pad, np.int32)
@@ -301,6 +324,9 @@ class DecodeRuntime:
             if s.remaining == 0:
                 done.append(Finished(s.req, s.req.max_new))
                 self.slots[i] = _Slot()
+                # content store follows the live request set (re-mintable
+                # deterministically) — no monotonic growth across a stream
+                self.content.pop(s.req.rid, None)
         return done
 
     def _decode_block(self) -> List[Finished]:
@@ -351,26 +377,51 @@ class DecodeRuntime:
     def state(self) -> Dict[str, np.ndarray]:
         """Slot table + pending queue as flat numpy arrays (what the drain
         controller can save through ``repro.checkpoint``). Restoration
-        re-prefills — KV is derivable state, the request ledger is not."""
+        re-prefills — KV is derivable state; the request ledger and the
+        content store (exact prompt tokens) are not, so both ship."""
         live = [(s.req.rid, s.req.arrival, s.req.prompt_len, s.remaining)
                 for s in self.slots if s.busy and s.remaining > 0]
         live += [(r.rid, r.arrival, r.prompt_len, r.max_new)
                  for r in self.pending]
         arr = np.asarray(live, np.float64).reshape(-1, 4)
+        rids = arr[:, 0].astype(np.int64)
+        # content rows for the in-flight rids, padded to one rectangle
+        toks = [self.content.get(int(rid), np.zeros(0, np.int32))
+                for rid in rids]
+        width = max((t.shape[0] for t in toks), default=0)
+        content = np.zeros((len(toks), width), np.int32)
+        for i, t in enumerate(toks):
+            content[i, :t.shape[0]] = t
         return {
-            "inflight_rid": arr[:, 0].astype(np.int64),
+            "inflight_rid": rids,
             "inflight_arrival": arr[:, 1],
             "inflight_plen": arr[:, 2].astype(np.int64),
             "inflight_remaining": arr[:, 3].astype(np.int64),
+            "content_len": np.asarray([t.shape[0] for t in toks], np.int64),
+            "content_tokens": content,
         }
+
+    def ingest_content(self, state) -> None:
+        """Adopt a checkpoint's content-store rows: restored rids replay
+        their exact prompt tokens instead of re-randomizing."""
+        rids = np.asarray(state.get("inflight_rid", ()))
+        lens = np.asarray(state.get("content_len", ()))
+        toks = np.asarray(state.get("content_tokens", ()))
+        for i in range(min(rids.size, lens.size)):
+            if lens[i] > 0:
+                self.content[int(rids[i])] = \
+                    toks[i, :int(lens[i])].astype(np.int32)
 
     def restore(self, state: Dict[str, np.ndarray]):
         """Re-enqueue checkpointed in-flight requests (counted tokens were
         already credited by the predecessor; ``max_new`` = what remains)."""
+        self.ingest_content(state)
         self.pending.extend(requests_from_state(state))
 
     def drain(self) -> List[Request]:
-        """Give back every in-flight request (runtime retirement path)."""
+        """Give back every in-flight request (runtime retirement path).
+        The content store empties with it: whichever runtime re-admits a
+        drained rid re-mints the identical tokens."""
         out = list(self.pending)
         self.pending = []
         for i, s in enumerate(self.slots):
@@ -378,4 +429,5 @@ class DecodeRuntime:
                 out.append(Request(s.req.rid, s.req.arrival,
                                    s.req.prompt_len, s.remaining))
                 self.slots[i] = _Slot()
+        self.content.clear()
         return out

@@ -174,6 +174,48 @@ def test_slot_table_checkpoint_roundtrip(serving, tmp_path):
     assert total == sum(r.max_new for r in reqs)
 
 
+def test_restored_rid_replays_exact_prompt_tokens(serving, tmp_path):
+    """ROADMAP follow-up: restored requests used to re-randomize their
+    prompts (admission tokens were seeded by the *group*'s first rid, so
+    a rid restored into a different grouping got a different prompt). The
+    content store pins each rid's prompt at first admission and rides the
+    checkpoint: greedy output across a drain is a token-identical replay
+    of the undisturbed run."""
+    rcfg = RuntimeConfig(max_batch=2, admit_tail=0, decode_block=4)
+    # undisturbed reference: both requests admitted as one group
+    ref = mk_runtime(serving, rcfg, record_tokens=True)
+    ref.submit([Request(1, 0.0, prompt_len=8, max_new=2),
+                Request(2, 0.0, prompt_len=8, max_new=10)])
+    ref.pump()
+    ref_log = ref.token_log[2]
+    assert len(ref_log) == 11                   # first + max_new tokens
+
+    # drained run: r1 finishes in the first block; r2 is checkpointed
+    # mid-generation and restored SOLO — the admission grouping changes,
+    # the prompt must not
+    rt = mk_runtime(serving, rcfg, record_tokens=True)
+    rt.submit([Request(1, 0.0, prompt_len=8, max_new=2),
+               Request(2, 0.0, prompt_len=8, max_new=10)])
+    rt._admit_some()
+    rt._decode_block()                          # r1 done, r2 has 6 left
+    state = rt.state()
+    assert int(state["content_len"][0]) == 8    # prompt rides the ckpt
+    tree = {k: np.asarray(v) for k, v in state.items()}
+    checkpointer.save(tmp_path, 0, tree, meta={"pod": "r0"})
+    restored, _ = checkpointer.restore(tmp_path, tree, step=0)
+
+    rt2 = mk_runtime(serving, rcfg, record_tokens=True)
+    rt2.restore(restored)
+    assert np.array_equal(rt2.content[2], rt.content[2])
+    rt2.pump()
+    assert 2 not in rt2.content     # store pruned once the rid finishes
+    # the restored incarnation re-prefills the exact prompt: its greedy
+    # stream is a prefix replay of the undisturbed run (1 + 6 tokens)
+    got = rt2.token_log[2]
+    assert got == ref_log[:len(got)]
+    assert len(got) == 7
+
+
 def test_requests_from_state_empty():
     assert requests_from_state({}) == []
     rt_state = {"inflight_rid": np.zeros(0, np.int64),

@@ -1,0 +1,64 @@
+"""Intra-repo markdown link checker (the CI docs job).
+
+Scans markdown files for ``[text](target)`` links and verifies that every
+relative target exists on disk, so documented paths can't silently rot.
+External links (http/https/mailto) and pure in-page anchors are skipped;
+``#fragment`` suffixes on file targets are stripped before checking.
+
+Usage: ``python tools/linkcheck.py [files-or-dirs ...]``
+(default: README.md and docs/). Exits 1 listing every broken link.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files(args: list) -> list:
+    if not args:
+        args = [ROOT / "README.md", ROOT / "docs"]
+    out = []
+    for a in args:
+        p = pathlib.Path(a)
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.md")))
+        else:
+            out.append(p)
+    return out
+
+
+def check(path: pathlib.Path) -> list:
+    broken = []
+    for n, line in enumerate(path.read_text().splitlines(), 1):
+        for target in LINK.findall(line):
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (path.parent / rel).exists():
+                broken.append(f"{path.relative_to(ROOT)}:{n}: {target}")
+    return broken
+
+
+def main(argv=None) -> int:
+    broken = []
+    files = md_files(list(argv if argv is not None else sys.argv[1:]))
+    for f in files:
+        broken.extend(check(f))
+    if broken:
+        print(f"{len(broken)} broken intra-repo link(s):")
+        for b in broken:
+            print(f"  {b}")
+        return 1
+    print(f"linkcheck: {len(files)} file(s) clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
