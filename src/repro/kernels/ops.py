@@ -1,13 +1,25 @@
-"""Jit'd dispatch wrappers over the Pallas kernels.
+"""Jit'd dispatch wrappers over the Pallas kernels + the kernel-mode toggle.
 
 On TPU the kernels run natively; on CPU (this container) they run in
 interpret mode when requested, otherwise the jnp fallbacks from
 repro.models are used (that is also what the dry-run lowers). The model
-layer toggles with ``use_kernels`` / KERNEL_MODE.
+layer routes its decode hot path through ``decode_attention_model`` /
+``decode_attention_paged`` below, which honor the mode toggle:
+
+  KERNEL_MODE=auto    pick per backend: Pallas on TPU, jnp elsewhere
+  KERNEL_MODE=pallas  force the Pallas kernels (interpret mode off-TPU —
+                      slow on CPU, meant for parity testing)
+  KERNEL_MODE=jnp     force the jnp paths (block-skip streaming decode)
+
+Set via the ``KERNEL_MODE`` env var or ``set_kernel_mode()`` (the serve
+driver's ``--kernel-mode`` flag). The mode is read at *trace* time, so
+flip it before building jitted closures (RuntimeKernels / ElasticServing
+cache compiled artifacts keyed by shape, not by mode).
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -15,7 +27,11 @@ import jax.numpy as jnp
 from repro.kernels.decode_attention import decode_attention_kernel
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mlstm_scan import mlstm_chunkwise_kernel
+from repro.kernels.paged_decode_attention import paged_decode_attention_kernel
 from repro.kernels.ssm_scan import ssm_scan_kernel
+
+KERNEL_MODES = ("auto", "pallas", "jnp")
+_kernel_mode = None                     # None -> read KERNEL_MODE env var
 
 
 def on_tpu() -> bool:
@@ -25,6 +41,91 @@ def on_tpu() -> bool:
 def _interpret() -> bool:
     return not on_tpu()
 
+
+def set_kernel_mode(mode: str | None) -> None:
+    """Override the kernel dispatch mode (None -> back to the env var)."""
+    global _kernel_mode
+    if mode is not None and mode not in KERNEL_MODES:
+        raise ValueError(f"kernel mode {mode!r} not in {KERNEL_MODES}")
+    _kernel_mode = mode
+
+
+def kernel_mode() -> str:
+    """The configured mode (may be "auto")."""
+    if _kernel_mode is not None:
+        return _kernel_mode
+    env = os.environ.get("KERNEL_MODE", "auto")
+    return env if env in KERNEL_MODES else "auto"
+
+
+def resolved_mode() -> str:
+    """The effective implementation choice: "pallas" or "jnp"."""
+    mode = kernel_mode()
+    if mode == "auto":
+        return "pallas" if on_tpu() else "jnp"
+    return mode
+
+
+def use_kernels() -> bool:
+    """True when the model layer should route through the Pallas kernels."""
+    return resolved_mode() == "pallas"
+
+
+# ------------------------------------------------------- model-layer dispatch
+
+def decode_attention_model(q, k_cache, v_cache, *, pos, window=None,
+                           chunk=None, kv_positions=None, softcap=0.0,
+                           block_skip=None):
+    """Decode attention for the dense (slab / grow_cache) layout.
+
+    q: (B,1,Hq,dh); caches: (B,Smax,Hkv,dh); pos scalar or (B,). The ring
+    layouts (``kv_positions`` carrying absolute positions) have no Pallas
+    kernel, so this always lowers the jnp path. ``block_skip`` (opt-in;
+    the serving runtime engages it per dispatch) streams KV in blocks and
+    skips blocks beyond the deepest live row at runtime — the default
+    stays the single fused attention, which wins on a well-utilized
+    cache. Called inside jitted model code: choices bake at trace time.
+    """
+    from repro.models.attention import decode_attention
+    return decode_attention(q, k_cache, v_cache, pos=pos, window=window,
+                            chunk=chunk, kv_positions=kv_positions,
+                            softcap=softcap, block_skip=block_skip)
+
+
+def decode_attention_paged(q, k_pool, v_pool, pages, lengths, *, kv_bucket,
+                           page_size, window=None, chunk=None, softcap=0.0):
+    """Decode attention for the paged layout.
+
+    q: (B,1,Hq,dh); pools: (n_pages, page_size, Hkv, dh); pages: (B,P)
+    physical-page table; lengths: (B,) live entries per row. ``kv_bucket``
+    (static, a multiple of page_size) bounds how many *logical* entries the
+    jnp path materializes — the host picks the smallest bucket covering the
+    deepest live row, so gather cost tracks live tokens, not capacity.
+
+    pallas mode: the paged kernel reads pages straight from the pool via
+    scalar-prefetch indexing (no gather) and early-exits each row's page
+    grid. jnp mode: gather the first kv_bucket//page_size pages per row and
+    run the block-skip streaming decode over them.
+    """
+    if resolved_mode() == "pallas" and not softcap:
+        out = paged_decode_attention_kernel(
+            q[:, 0], k_pool, v_pool, pages, lengths,
+            window=window, chunk=chunk, interpret=_interpret())
+        return out[:, None]
+    from repro.models.attention import decode_attention
+    B = q.shape[0]
+    npg = kv_bucket // page_size
+    pid = pages[:, :npg]                                   # (B, npg)
+    kb = k_pool[pid].reshape(B, kv_bucket, *k_pool.shape[2:])
+    vb = v_pool[pid].reshape(B, kv_bucket, *v_pool.shape[2:])
+    # the gathered width is already bucketed to the deepest live row, so
+    # intra-bucket skipping only pays once the bucket spans several pages
+    skip = page_size if npg >= 4 else None
+    return decode_attention(q, kb, vb, pos=lengths - 1, window=window,
+                            chunk=chunk, softcap=softcap, block_skip=skip)
+
+
+# --------------------------------------------------------- jit'd kernel entry
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "chunk",
                                              "softcap", "block_q", "block_k"))

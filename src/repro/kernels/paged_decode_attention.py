@@ -1,0 +1,108 @@
+"""Pallas TPU paged single-token decode attention (vLLM-style PagedAttention).
+
+The KV cache is a shared physical pool of fixed-size pages
+(``n_pages x page_size`` entries per layer); each batch row owns a small
+page table mapping its logical KV blocks to physical pages. The grid is
+(B, Hq, logical_pages): the page table rides in as a scalar-prefetch
+operand so the BlockSpec index map can fetch each row's *physical* page,
+and rows exit the page grid early — ``pl.when(j * page_size < length)``
+skips every block fully beyond the row's live length, so decode FLOPs are
+proportional to the tokens a request actually holds, not to the pool (or
+slab) capacity. Streaming LSE reduction over the visited pages matches
+``repro.kernels.decode_attention`` / the jnp path bit-for-bit in masking
+semantics (causal-by-length, sliding window, chunked).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(pages_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale, window, chunk, ps, n_pg):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    length = len_ref[b]
+    qpos = length - 1
+
+    # per-row early exit over the page grid: blocks fully beyond this
+    # row's live length contribute nothing and are skipped outright
+    @pl.when(j * ps < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale            # (1, dh)
+        k = k_ref[0, :, 0].astype(jnp.float32)              # (ps, dh)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (1, ps)
+        kpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, ps), 1)
+        ok = kpos < length
+        if window is not None:
+            ok &= (qpos - kpos) < window
+        if chunk is not None:
+            ok &= (qpos // chunk) == (kpos // chunk)
+        s = jnp.where(ok, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_pg - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention_kernel(q, k_pool, v_pool, pages, lengths, *,
+                                  window=None, chunk=None, interpret=False):
+    """q: (B,Hq,dh); pools: (n_pages, page_size, Hkv, dh); pages: (B,P) i32
+    physical-page table (entry 0 = the null page, only reachable past each
+    row's length); lengths: (B,) live entries per row -> (B,Hq,dh)."""
+    B, Hq, dh = q.shape
+    ps, Hkv = k_pool.shape[1], k_pool.shape[2]
+    P = pages.shape[1]
+    G = Hq // Hkv
+    kernel = functools.partial(_kernel, scale=dh ** -0.5, window=window,
+                               chunk=chunk, ps=ps, n_pg=P)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hq, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda b, h, j, pt, lt: (b, h, 0)),
+            # the page table is consulted *in the index map*: block j of
+            # row b is whatever physical page the table names
+            pl.BlockSpec((1, ps, 1, dh),
+                         lambda b, h, j, pt, lt: (pt[b, j], 0, h // G, 0)),
+            pl.BlockSpec((1, ps, 1, dh),
+                         lambda b, h, j, pt, lt: (pt[b, j], 0, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda b, h, j, pt, lt: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, dh), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, dh), q.dtype),
+        interpret=interpret,
+    )(pages.astype(jnp.int32), lengths.astype(jnp.int32), q, k_pool, v_pool)

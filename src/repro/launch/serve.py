@@ -94,6 +94,22 @@ def main(argv=None):
     ap.add_argument("--vary-shapes", action="store_true",
                     help="randomize per-request prompt_len/max_new (the"
                          " workload bucketed compilation is built for)")
+    ap.add_argument("--kernel-mode", choices=["auto", "pallas", "jnp"],
+                    default="auto",
+                    help="decode-attention dispatch: auto picks Pallas on"
+                         " TPU and the jnp block-skip path elsewhere;"
+                         " pallas forces the kernels (interpret off-TPU)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV slab: per-request page allocation, "
+                         "decode reads only the live kv bucket — wins when"
+                         " capacity is provisioned well beyond typical"
+                         " request depth (see bench_paged_decode); the"
+                         " dense slab with adaptive block-skip is default")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV entries per physical page of the paged slab")
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="physical KV pages per replica (0 = enough for"
+                         " max_batch full-capacity requests)")
     args = ap.parse_args(argv)
     if args.kill_site:
         if not (0 <= args.kill_tick < args.ticks):
@@ -104,6 +120,13 @@ def main(argv=None):
             ap.error(f"--kill-site {args.kill_site!r} not in --sites spec")
 
     cfg = get_config(args.arch).reduced()
+
+    # kernel dispatch is resolved once, before any jit closure is traced
+    from repro.kernels import ops as OPS
+    OPS.set_kernel_mode(args.kernel_mode)
+    print(f"[kernels] mode={args.kernel_mode} "
+          f"(resolved {OPS.resolved_mode()}; backend={jax.default_backend()}"
+          f"{'' if OPS.on_tpu() else ', pallas would run interpreted'})")
 
     # ---- JIRIAF control plane bring-up (paper §3 component flow) ----
     fe = FrontEnd()
@@ -157,10 +180,15 @@ def main(argv=None):
     source = RequestSource()
     if args.vary_shapes:
         source = RequestSource(prompt_range=(8, 48), max_new_range=(2, 16))
+    from repro.streaming.runtime import RuntimeConfig
     engine = StreamEngine(cfg, serving, nodes,
                           service_rate=mu_scaled,
                           use_twin=(args.controller == "twin"),
                           use_runtime=not args.no_runtime,
+                          runtime_cfg=RuntimeConfig(
+                              paged=args.paged,
+                              page_size=args.page_size,
+                              pool_pages=args.pool_pages),
                           source=source,
                           hpa=HPA(HPAConfig(target=8.0, max_replicas=
                                             serving.max_replicas(),
@@ -217,6 +245,14 @@ def main(argv=None):
         print(f"[runtime] slot-slab serving: traces admit={tc['admit']} "
               f"decode={tc['decode']} (bound {rt.kernels.max_traces}); "
               f"fused blocks={blocks}")
+        if rt.kernels.rcfg.paged:
+            hwm = max(r.pages_hwm for r in engine.runtimes.values())
+            rc = rt.kernels.rcfg
+            print(f"[runtime] paged KV slab: page_size={rc.page_size} "
+                  f"pool={rc.n_pool_pages} pages/replica; "
+                  f"high-water={hwm} pages "
+                  f"({hwm * rc.page_size} KV entries vs "
+                  f"{(rc.max_batch + 1) * rc.capacity} dense)")
     if len(cluster.site_names()) > 1:
         per_site = {}
         for pod in engine.pods.values():

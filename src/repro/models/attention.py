@@ -101,13 +101,20 @@ def blockwise_attention(q, k, v, *, causal=True, window=None, chunk=None,
 
 
 def decode_attention(q, k_cache, v_cache, *, pos, window=None, chunk=None,
-                     kv_positions=None, softcap=0.0):
+                     kv_positions=None, softcap=0.0, block_skip=None):
     """Single-token decode. q: (B, 1, Hq, dh); caches: (B, Smax, Hkv, dh);
     pos: scalar or (B,) current absolute position (cache holds pos valid
     entries, the new token's KV already written at its slot).
 
     ``kv_positions`` (B, Smax) gives absolute positions per cache slot for
     ring-buffer (sliding-window) caches; defaults to slot index.
+
+    ``block_skip`` (int) selects the block-sparse path: KV streams in
+    blocks of that size through the flash recurrence, and any block lying
+    fully beyond every row's position is skipped *at runtime* (lax.cond
+    inside the block scan) — decode compute tracks the deepest live row,
+    not Smax. Exact w.r.t. the dense path: skipped blocks hold only
+    masked entries, whose contribution is exactly zero.
     """
     B, _, Hq, dh = q.shape
     Smax, Hkv = k_cache.shape[1], k_cache.shape[2]
@@ -120,6 +127,10 @@ def decode_attention(q, k_cache, v_cache, *, pos, window=None, chunk=None,
     kv_positions = jnp.broadcast_to(kv_positions, (B, Smax))
 
     qg = (q * scale).reshape(B, Hkv, G, dh)
+    if block_skip is not None and Smax > block_skip:
+        return _decode_block_skip(qg, k_cache, v_cache, qpos, kv_positions,
+                                  window=window, chunk=chunk, softcap=softcap,
+                                  bs=block_skip).astype(q.dtype)
     # keep the cache in its storage dtype (bf16) and accumulate in f32 on
     # the MXU — upcasting the cache makes XLA hoist a full f32 copy of the
     # stacked cache out of the layer loop (EXPERIMENTS.md §Perf).
@@ -135,3 +146,56 @@ def decode_attention(q, k_cache, v_cache, *, pos, window=None, chunk=None,
     out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
     return out.reshape(B, 1, Hq, dh).astype(q.dtype)
+
+
+def _decode_block_skip(qg, k_cache, v_cache, qpos, kv_positions, *,
+                       window, chunk, softcap, bs):
+    """Block-streamed decode (flash recurrence over KV blocks) with runtime
+    skipping: a block whose entries lie beyond max(pos) holds, for *every*
+    row, only future/sentinel positions — the ``kv_len`` mask rejects all
+    of them, so the whole block is a no-op and lax.cond skips it. Ring
+    caches stay correct automatically: once any row wraps, max(pos)+1
+    exceeds Smax and every block is visited."""
+    B, Hkv, G, dh = qg.shape
+    Smax = k_cache.shape[1]
+    pad = (-Smax) % bs
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, ((0, 0), (0, pad)),
+                               constant_values=jnp.iinfo(jnp.int32).max)
+    nb = (Smax + pad) // bs
+    eff = jnp.max(qpos) + 1                    # deepest live row, this step
+    kv_len = (qpos + 1)[:, :, None]            # (B, 1, 1)
+
+    def blk(carry, start):
+        def compute(c):
+            m, l, acc = c
+            kj = jax.lax.dynamic_slice_in_dim(k_cache, start, bs, axis=1)
+            vj = jax.lax.dynamic_slice_in_dim(v_cache, start, bs, axis=1)
+            pj = jax.lax.dynamic_slice_in_dim(kv_positions, start, bs, axis=1)
+            s = jnp.einsum("bhgd,bkhd->bhgk", qg, kj,
+                           preferred_element_type=jnp.float32)
+            if softcap:
+                s = jnp.tanh(s / softcap) * softcap
+            ok = _mask(qpos[:, :, None], pj[:, None, :], causal=True,
+                       window=window, chunk=chunk, kv_len=kv_len)  # (B,1,bs)
+            s = jnp.where(ok[:, :, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgk,bkhd->bhgd", p.astype(vj.dtype), vj,
+                preferred_element_type=jnp.float32)
+            return m_new, l_new, acc_new
+
+        return jax.lax.cond(start < eff, compute, lambda c: c, carry), None
+
+    carry0 = (jnp.full((B, Hkv, G), NEG_INF, jnp.float32),
+              jnp.zeros((B, Hkv, G), jnp.float32),
+              jnp.zeros((B, Hkv, G, dh), jnp.float32))
+    starts = jnp.arange(nb, dtype=jnp.int32) * bs
+    (m, l, acc), _ = jax.lax.scan(blk, carry0, starts)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, 1, Hkv * G, dh)

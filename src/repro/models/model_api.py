@@ -194,21 +194,72 @@ def scatter_prefill(cfg: ArchConfig, slab, prefill_cache, slot_idx, seq_len):
     return new
 
 
+def init_paged_cache(cfg: ArchConfig, rows: int, n_pages: int,
+                     page_size: int):
+    """Paged decode cache: a shared physical pool of ``n_pages`` KV pages
+    of ``page_size`` entries per layer ((L, n_pages, page_size, kvh, dh)),
+    plus a per-row position vector for ``rows`` slots. Which pages a row
+    owns lives host-side (the runtime's page table / allocator); physical
+    page 0 is reserved as the null page. HBM scales with the pool, not
+    with rows x capacity."""
+    cache = get_module(cfg).init_cache(cfg, n_pages, page_size)
+    cache["pos"] = jnp.zeros((rows,), jnp.int32)
+    return cache
+
+
+def scatter_prefill_paged(cfg: ArchConfig, slab, prefill_cache, slot_idx,
+                          seq_len, page_rows, page_size: int):
+    """Paged counterpart of ``scatter_prefill``: split a prefilled
+    (B, seq_len) KV cache into page-size chunks and scatter them into the
+    physical pool pages named by ``page_rows`` ((B, ceil(seq_len/page))
+    int32), stamping positions for rows ``slot_idx``. Pad rows aim all
+    their chunks at the null page (0) — colliding writes there are never
+    read. Pure function of fixed shapes, jitted once per bucket."""
+    new = dict(slab)
+    npg = page_rows.shape[1]
+    flat = page_rows.reshape(-1)
+    for part in ("dense", "moe"):
+        if part not in prefill_cache or part not in slab:
+            continue
+        dst = dict(slab[part])
+        for nm in ("k", "v"):
+            src = prefill_cache[part][nm]          # (L, B, S, kvh, dh)
+            L, B, S = src.shape[:3]
+            pad = npg * page_size - S
+            if pad:
+                src = jnp.pad(src, ((0, 0), (0, 0), (0, pad),
+                                    (0, 0), (0, 0)))
+            src = src.reshape(L, B * npg, page_size, *src.shape[3:])
+            dst[nm] = slab[part][nm].at[:, flat].set(
+                src.astype(slab[part][nm].dtype))
+        new[part] = dst
+    new["pos"] = slab["pos"].at[slot_idx].set(jnp.int32(seq_len))
+    return new
+
+
 def fused_decode(params, tok, cache, active, remaining, cfg: ArchConfig,
-                 ctx=None, steps: int = 8):
+                 ctx=None, steps: int = 8, pages=None, kv_bucket=None,
+                 block_skip=None):
     """``steps`` greedy decode steps fused into one ``lax.scan`` (one device
     dispatch per block instead of per token). Rows where ``active`` is False
     are frozen: their position does not advance and their token does not
     change, so finished requests stop paying for rides they do not take.
 
     tok: (S, 1) int32; active: (S,) bool; remaining: (S,) int32.
+    ``pages``/``kv_bucket`` select the paged-cache layout (transformer
+    only): the page table is constant across the fused block — the host
+    pre-allocates pages covering every row's position through the final
+    step — and ``kv_bucket`` must cover max(pos) + steps.
     Returns (tok, cache, active, remaining, tokens (steps, S))."""
     mod = get_module(cfg)
+    kw = {} if pages is None else {"pages": pages, "kv_bucket": kv_bucket}
+    if block_skip is not None:       # 0 = force the plain full-width path
+        kw["block_skip"] = block_skip
 
     def step(carry, _):
         tok, cache, active, remaining = carry
         pos0 = cache["pos"]
-        logits, cache = mod.decode_step(params, tok, cache, cfg, ctx)
+        logits, cache = mod.decode_step(params, tok, cache, cfg, ctx, **kw)
         nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
         tok = jnp.where(active[:, None], nxt, tok)
         cache["pos"] = jnp.where(active, cache["pos"], pos0)

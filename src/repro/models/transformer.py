@@ -15,9 +15,10 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.kernels import ops as OPS
 from repro.models import layers as L
 from repro.models import moe as M
-from repro.models.attention import blockwise_attention, decode_attention
+from repro.models.attention import blockwise_attention
 
 LOSS_CHUNK = 1024
 
@@ -343,7 +344,8 @@ def init_cache(cfg: ArchConfig, batch: int, max_len: int, ring: bool = False):
 
 
 def decode_step(params, token, cache, cfg: ArchConfig, ctx=None,
-                unroll: bool = False):
+                unroll: bool = False, pages=None, kv_bucket=None,
+                block_skip: int = 0):
     """One decode step. token: (B, 1) int32. Returns (logits (B,V), cache).
 
     ``cache["pos"]`` may be a scalar (whole batch in lockstep — the classic
@@ -351,6 +353,21 @@ def decode_step(params, token, cache, cfg: ArchConfig, ctx=None,
     slab, where every row is an independent request at its own depth). All
     position arithmetic below broadcasts over the batch dim so both layouts
     share one trace.
+
+    Paged layout: when ``pages`` ((B, P) int32 physical-page table) is
+    given, per-layer caches are shared pools of fixed-size KV pages
+    ((n_pages, page_size, kvh, dh)) instead of per-row slabs. The new
+    token's KV scatters into the row's current page, and attention reads
+    only the first ``kv_bucket`` logical entries (static, host-picked to
+    cover the deepest live row) through ``kernels.ops`` — so decode cost
+    tracks live tokens, not slab capacity. Physical page 0 is the null
+    page: pad/retired rows point there, writes to it are never read.
+
+    ``block_skip`` (dense layout only, opt-in — the serving runtime
+    engages it per dispatch when live depth <= capacity/2): stream KV in
+    blocks of that size, skipping blocks beyond every row's position at
+    runtime. 0 = the single fused attention (default; fastest on a
+    well-utilized cache, and what the legacy chunked path always uses).
 
     ``unroll=True`` replaces the layer scan with a static python loop:
     per-layer caches become independent aliased buffers (no stacked xs/ys
@@ -362,13 +379,22 @@ def decode_step(params, token, cache, cfg: ArchConfig, ctx=None,
     pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))   # (B,)
     x = L.embed_lookup(params["embed"], token[:, 0])[:, None, :].astype(cfg.jdtype)
     positions = pos_b[:, None]                                    # (B, 1)
+    paged = pages is not None
+    if paged:
+        pages = jnp.asarray(pages, jnp.int32)
 
     new_cache = {"pos": pos + 1}
 
     def run(stacked, kc, vc, use_moe):
         nonlocal x
-        slots = kc.shape[2]
-        slot = pos_b % slots               # (B,) ring write for bounded caches
+        if paged:
+            page_size = kc.shape[2]
+            lp = pos_b // page_size                      # logical page
+            off = pos_b % page_size                      # offset within it
+            phys = jnp.take_along_axis(pages, lp[:, None], axis=1)[:, 0]
+        else:
+            slots = kc.shape[2]
+            slot = pos_b % slots           # (B,) ring write for bounded caches
 
         def step(carry, xs):
             xx = carry
@@ -380,26 +406,37 @@ def decode_step(params, token, cache, cfg: ArchConfig, ctx=None,
             q = q.reshape(B, 1, cfg.n_heads, cfg.head_dim)
             q = L.apply_rope(q, positions, cfg.rope_theta)
             k, v = _kv_proj(h, blk, cfg, positions)
-            # explicit masked write instead of dynamic_update_slice: on a
-            # slot-sharded cache GSPMD lowers DUS to a masked select anyway,
-            # but routes it through f32; the where() stays in cache dtype
-            # and fully local (EXPERIMENTS.md §Perf, yi-34b decode iter 3).
-            wmask = (jnp.arange(slots, dtype=jnp.int32)[None, :]
-                     == slot[:, None])[:, :, None, None]
-            k_l = jnp.where(wmask, k.astype(k_l.dtype), k_l)
-            v_l = jnp.where(wmask, v.astype(v_l.dtype), v_l)
-            # absolute positions of cache slots (ring-aware); unwritten slots
-            # get INT32_MAX so the kv_len mask rejects them.
-            slot_ids = jnp.arange(slots, dtype=jnp.int32)[None, :]
-            wraps = ((pos_b // slots) * slots)[:, None]
-            abs_pos = jnp.where(slot_ids <= slot[:, None], wraps + slot_ids,
-                                wraps - slots + slot_ids)
-            kv_pos = jnp.where(abs_pos >= 0, abs_pos,
-                               jnp.iinfo(jnp.int32).max)
-            out = decode_attention(
-                q, k_l, v_l, pos=pos, window=cfg.sliding_window,
-                chunk=cfg.attn_chunk, kv_positions=kv_pos,
-                softcap=cfg.logit_softcap)
+            if paged:
+                # scatter the new KV into each row's current physical page
+                k_l = k_l.at[phys, off].set(k[:, 0].astype(k_l.dtype))
+                v_l = v_l.at[phys, off].set(v[:, 0].astype(v_l.dtype))
+                out = OPS.decode_attention_paged(
+                    q, k_l, v_l, pages, pos_b + 1, kv_bucket=kv_bucket,
+                    page_size=page_size, window=cfg.sliding_window,
+                    chunk=cfg.attn_chunk, softcap=cfg.logit_softcap)
+            else:
+                # explicit masked write instead of dynamic_update_slice: on
+                # a slot-sharded cache GSPMD lowers DUS to a masked select
+                # anyway, but routes it through f32; the where() stays in
+                # cache dtype and fully local (EXPERIMENTS.md §Perf).
+                wmask = (jnp.arange(slots, dtype=jnp.int32)[None, :]
+                         == slot[:, None])[:, :, None, None]
+                k_l = jnp.where(wmask, k.astype(k_l.dtype), k_l)
+                v_l = jnp.where(wmask, v.astype(v_l.dtype), v_l)
+                # absolute positions of cache slots (ring-aware); unwritten
+                # slots get INT32_MAX so the kv_len mask rejects them.
+                slot_ids = jnp.arange(slots, dtype=jnp.int32)[None, :]
+                wraps = ((pos_b // slots) * slots)[:, None]
+                abs_pos = jnp.where(slot_ids <= slot[:, None],
+                                    wraps + slot_ids,
+                                    wraps - slots + slot_ids)
+                kv_pos = jnp.where(abs_pos >= 0, abs_pos,
+                                   jnp.iinfo(jnp.int32).max)
+                out = OPS.decode_attention_model(
+                    q, k_l, v_l, pos=pos, window=cfg.sliding_window,
+                    chunk=cfg.attn_chunk, kv_positions=kv_pos,
+                    softcap=cfg.logit_softcap,
+                    block_skip=block_skip or None)
             out = out.reshape(B, 1, cfg.q_dim)
             xx = xx + jnp.einsum("bsq,qd->bsd", out, blk["wo"].astype(h.dtype))
             h2 = L.rms_norm(xx, blk["ln2"], cfg.norm_eps)

@@ -4,9 +4,12 @@ Pipeline: RequestSource (Poisson sender) -> FIFO queue -> per-replica
 **decode runtimes** (slot-slab continuous batching,
 ``repro.streaming.runtime``) -> sink.
 
-Serving path (PR 2): each bound replica owns a ``DecodeRuntime`` — a
-fixed-shape KV slab of ``max_batch`` slots with bucketed-compilation
-admission and a fused ``lax.scan`` decode block. ``tick()`` meters
+Serving path (PR 2, paged in PR 4): each bound replica owns a
+``DecodeRuntime`` — a paged KV slab (``max_batch`` slots over a shared
+pool of fixed-size pages, page-aware admission/retirement, decode cost
+proportional to live tokens) with bucketed-compilation admission and a
+fused ``lax.scan`` decode block. ``ersap_kv_pages`` gauges per-replica
+pool occupancy. ``tick()`` meters
 requests off the FIFO queue by a fractional service budget (no more
 integer-truncation starvation at low rates), submits them to the
 replica's runtime, and pumps it to quiescence: finished requests free
@@ -283,6 +286,12 @@ class StreamEngine:
             took, self.queue = self.queue[:n_take], self.queue[n_take:]
             self._process(took, name, now)
             reg.gauge("ersap_queue_len").set(len(self.queue))
+            rt = self.runtimes.get(name)
+            if rt is not None and rt.kernels.rcfg.paged:
+                # paged-slab occupancy: live KV pages held by this replica
+                # (scraped with the §4.6 stack; the pool high-water mark is
+                # the capacity-planning signal for sizing pool_pages)
+                reg.gauge("ersap_kv_pages").set(rt.pages_in_use)
         self.prom.scrape(now)
         self.history.append((now, len(self.queue), self.serving.replicas,
                              self.control))

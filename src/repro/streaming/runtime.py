@@ -3,11 +3,17 @@
 One ``DecodeRuntime`` per serving replica replaces the chunked
 prefill-then-Python-decode path:
 
-- **Slot slab**: a fixed-shape KV cache of ``max_batch`` slots x
-  ``capacity`` entries with a per-slot position vector
-  (``model_api.init_slab_cache``). Admission prefills a request at a
-  bucketed shape and scatters it into free slots; nothing is ever
-  re-allocated or grown per chunk.
+- **Paged KV slab** (default): KV lives in a shared pool of fixed-size
+  physical pages (``model_api.init_paged_cache``); each slot owns a row
+  of the host-side page table. Admission allocates exactly the pages a
+  request's lifetime needs (``RuntimeConfig.page_footprint``) and
+  ``pump`` frees them at retirement, so HBM per request tracks its
+  actual length and the decode dispatch reads only the smallest
+  ``kv_ladder`` bucket covering the deepest live row — an 8-token
+  request no longer pays a 128-token request's attention cost.
+  ``paged=False`` keeps the PR-2 dense slab: ``max_batch`` slots x
+  ``capacity`` entries (``model_api.init_slab_cache``). Either way,
+  nothing is ever re-allocated or grown per chunk.
 - **Bucketed compilation**: prompts pad to power-of-two length buckets and
   admissions to power-of-two batch buckets, so the number of distinct jit
   traces is O(#length-buckets x #batch-buckets) + 1 fused decode trace,
@@ -61,18 +67,56 @@ def requests_from_state(state) -> List[Request]:
 
 @dataclass(frozen=True)
 class RuntimeConfig:
-    """Static shape policy — one kernels cache entry per distinct value."""
+    """Static shape policy — one kernels cache entry per distinct value.
+
+    ``paged=True`` stores KV in a shared pool of ``page_size``-entry
+    physical pages instead of one full-capacity row per slot: admission
+    allocates each request ceil((prompt_bucket + max_new + 1) /
+    page_size) pages, retirement frees them, and decode reads only the
+    smallest ``kv_ladder`` bucket covering the deepest live row — HBM
+    and attention cost track actual request lengths, so ``max_batch``
+    can grow for short-request mixes under the same pool
+    (``pool_pages``; 0 sizes the pool so every slot can hold a
+    full-capacity request, i.e. no admission ever blocks on pages).
+    It pays when capacity is provisioned well beyond the typical live
+    depth (long-context posture, or the TPU Pallas per-row-exit path);
+    with a tightly-sized slab the dense layout's single fused attention
+    is faster on CPU — see ``bench_paged_decode`` for the crossover.
+
+    The dense slab keeps its own length-proportionality lever:
+    ``block_skip`` streams decode KV in blocks and the host engages it
+    per dispatch whenever the deepest live row leaves at least half the
+    capacity dead (0 disables — the PR-2 plain full-width attention)."""
     max_batch: int = 8            # slots in the slab
     min_prompt_bucket: int = 8
     max_prompt_bucket: int = 64
     max_new_cap: int = 64         # capacity headroom for generation
     decode_block: int = 16        # max fused steps per scan dispatch
     admit_tail: int = 4           # decode steps fused into each admission
+    paged: bool = False           # paged KV pool vs dense per-slot slab
+    page_size: int = 16           # KV entries per physical page
+    pool_pages: int = 0           # pool size; 0 -> max_batch * pages_per_slot
+    # dense-slab jnp decode: KV block size for runtime block skipping
+    # (engaged per dispatch while live depth <= capacity/2); 0 restores
+    # the PR-2 plain full-capacity attention everywhere
+    block_skip: int = 32
 
     @property
     def capacity(self) -> int:
         # every admitted request fits without ring-wrapping
         return self.max_prompt_bucket + self.max_new_cap + 1
+
+    @property
+    def pages_per_slot(self) -> int:
+        return -(-self.capacity // self.page_size)
+
+    @property
+    def padded_capacity(self) -> int:
+        return self.pages_per_slot * self.page_size
+
+    @property
+    def n_pool_pages(self) -> int:
+        return self.pool_pages or self.max_batch * self.pages_per_slot
 
     @property
     def prompt_buckets(self) -> Tuple[int, ...]:
@@ -88,12 +132,68 @@ class RuntimeConfig:
         # longest live request, so tail ticks don't over-run 16 steps deep
         return MA.bucket_ladder(min(4, self.decode_block), self.decode_block)
 
+    @property
+    def kv_ladder(self) -> Tuple[int, ...]:
+        # logical KV-read buckets for paged decode: every page multiple,
+        # not powers of two — a row at depth 33 reads 48 entries, not 64.
+        # The ladder is page-granular because reads gather whole pages;
+        # its length (= pages_per_slot) is the kv factor in max_traces.
+        return tuple(self.page_size * (p + 1)
+                     for p in range(self.pages_per_slot))
+
+    def page_footprint(self, plen_bucket: int, max_new: int) -> int:
+        """Physical pages a request owns for its whole life: prompt bucket
+        + generation + the frozen-row write slot (mirrors capacity's +1)."""
+        return -(-(plen_bucket + max_new + 1) // self.page_size)
+
     def fits(self, req: Request) -> bool:
         if req.prompt_len > self.max_prompt_bucket:
             return False
         plen = MA.pow2_bucket(req.prompt_len, self.min_prompt_bucket,
                               self.max_prompt_bucket)
-        return plen + req.max_new + 1 <= self.capacity
+        if plen + req.max_new + 1 > self.capacity:
+            return False
+        return (not self.paged
+                or self.page_footprint(plen, req.max_new) <= self.n_pool_pages)
+
+
+class PageAllocator:
+    """Free list over the physical KV page pool (unit granularity — a
+    "fragment" is just a reusable page, so mid-stream retirement never
+    strands capacity). Page 0 is reserved as the null page: pad rows,
+    retired slots and frozen rows write there; nothing reads it.
+
+    Invariants (asserted by tests/test_paged_runtime.py):
+      - page 0 is never handed out;
+      - a page is owned by at most one slot at a time;
+      - used + free == pool size at every step;
+      - ``alloc`` is all-or-nothing (no partial grants to unwind).
+    """
+
+    def __init__(self, pool_pages: int):
+        self.pool_pages = pool_pages
+        # LIFO: freshly freed pages are reused first (warm in cache)
+        self._free = list(range(pool_pages, 0, -1))
+
+    @property
+    def n_pages(self) -> int:          # physical pool incl. the null page
+        return self.pool_pages + 1
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.pool_pages - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages) -> None:
+        self._free.extend(pages)
 
 
 class RuntimeKernels:
@@ -115,24 +215,42 @@ class RuntimeKernels:
 
     @property
     def max_traces(self) -> int:
-        return (len(self.rcfg.batch_buckets) * len(self.rcfg.prompt_buckets)
-                + len(self.rcfg.block_ladder))
+        """Bucketing contract: traces stay O(#buckets) under any request
+        mix. Paged decode adds the kv-read-bucket dimension (which logical
+        prefix of the page table a dispatch visits), so the bound picks up
+        a ``kv_ladder`` factor — still shape-policy-static."""
+        n_admit = len(self.rcfg.batch_buckets) * len(self.rcfg.prompt_buckets)
+        n_decode = len(self.rcfg.block_ladder)
+        if self.rcfg.paged:
+            n_kv = len(self.rcfg.kv_ladder)
+            # admissions with a fused tail also carry a kv bucket
+            if self.rcfg.admit_tail:
+                n_admit *= n_kv
+            n_decode *= n_kv
+        elif self.rcfg.block_skip:
+            n_decode *= 2          # plain + block-skip variants per steps
+        return n_admit + n_decode
 
-    def admit_fn(self, bb: int, lb: int):
-        key = (bb, lb)
+    def admit_fn(self, bb: int, lb: int, kvb: int = 0):
+        key = (bb, lb, kvb)
         if key in self._admit:
             return self._admit[key]
         cfg, ctx = self.cfg, self.ctx
         mod = MA.get_module(cfg)
-
-        tail = self.rcfg.admit_tail
+        rcfg = self.rcfg
+        tail = rcfg.admit_tail
 
         def admit(params, tokens, cache, tok, active, remaining,
-                  slot_idx, max_new):
+                  slot_idx, max_new, pages=None, prompt_pages=None):
             self.trace_counts["admit"] += 1
             logits, pcache = mod.prefill(params, tokens, cfg, ctx)
-            cache = MA.scatter_prefill(cfg, cache, pcache, slot_idx,
-                                       tokens.shape[1])
+            if rcfg.paged:
+                cache = MA.scatter_prefill_paged(
+                    cfg, cache, pcache, slot_idx, tokens.shape[1],
+                    prompt_pages, rcfg.page_size)
+            else:
+                cache = MA.scatter_prefill(cfg, cache, pcache, slot_idx,
+                                           tokens.shape[1])
             first = jnp.argmax(logits, -1).astype(jnp.int32)
             tok = tok.at[slot_idx].set(first[:, None])
             # pad rows (batch bucket > group size) target the overflow row
@@ -142,27 +260,38 @@ class RuntimeKernels:
             if tail:
                 # fused decode tail: admission and the first few steps of
                 # the whole slab ride one dispatch (half the sync points)
+                # tail steps run plain on the dense slab (a freshly
+                # admitted bucket usually fills a good share of capacity;
+                # skipping is the decode blocks' per-dispatch decision)
                 tok, cache, active, remaining, _ = MA.fused_decode(
                     params, tok, cache, active, remaining, cfg, ctx,
-                    steps=tail)
+                    steps=tail, pages=pages,
+                    kv_bucket=kvb if rcfg.paged else None,
+                    block_skip=None if rcfg.paged else 0)
             return cache, tok, active, remaining
 
         fn = jax.jit(admit, donate_argnums=(2, 3, 4, 5))
         self._admit[key] = fn
         return fn
 
-    def decode_fn(self, steps: int):
-        if steps in self._decode:
-            return self._decode[steps]
+    def decode_fn(self, steps: int, kvb: int = 0, skip: bool = False):
+        key = (steps, kvb, skip)
+        if key in self._decode:
+            return self._decode[key]
         cfg, ctx = self.cfg, self.ctx
+        rcfg = self.rcfg
 
-        def block(params, tok, cache, active, remaining):
+        def block(params, tok, cache, active, remaining, pages=None):
             self.trace_counts["decode"] += 1
             return MA.fused_decode(params, tok, cache, active, remaining,
-                                   cfg, ctx, steps=steps)
+                                   cfg, ctx, steps=steps, pages=pages,
+                                   kv_bucket=kvb if rcfg.paged else None,
+                                   block_skip=(None if rcfg.paged else
+                                               (rcfg.block_skip if skip
+                                                else 0)))
 
         fn = jax.jit(block, donate_argnums=(1, 2, 3, 4))
-        self._decode[steps] = fn
+        self._decode[key] = fn
         return fn
 
     def put(self, tree):
@@ -181,10 +310,17 @@ class RuntimeKernels:
 class _Slot:
     req: Optional[Request] = None
     remaining: int = 0
+    lb: int = 0                       # prompt-length bucket at admission
+    pages: Tuple[int, ...] = ()       # physical pages owned (paged mode)
 
     @property
     def busy(self) -> bool:
         return self.req is not None
+
+    @property
+    def pos(self) -> int:
+        """Current cache depth (host mirror of the device pos vector)."""
+        return self.lb + (self.req.max_new - self.remaining)
 
 
 @dataclass
@@ -218,11 +354,56 @@ class DecodeRuntime:
         # power-of-two bucket and aim the pad rows here, so a group of 7
         # costs one (8, L) prefill instead of three (4/2/1, L) dispatches
         rows = rcfg.max_batch + 1
-        self.cache = self.kernels.put(MA.init_slab_cache(
-            self.kernels.cfg, rows, rcfg.capacity))
+        if rcfg.paged:
+            self.alloc = PageAllocator(rcfg.n_pool_pages)
+            # host-owned page table, shipped with every dispatch: row ->
+            # physical pages (0 = null). Freed rows are re-pointed at the
+            # null page *before* their pages can be re-granted, so a
+            # frozen row's idempotent KV write can never corrupt a
+            # successor request's page.
+            self.page_table = np.zeros((rows, rcfg.pages_per_slot), np.int32)
+            self.pages_hwm = 0                  # pool high-water (telemetry)
+            self._pages_dev = None              # mesh-committed copy
+            self._pages_dirty = True
+            self.cache = self.kernels.put(MA.init_paged_cache(
+                self.kernels.cfg, rows, self.alloc.n_pages, rcfg.page_size))
+        else:
+            self.cache = self.kernels.put(MA.init_slab_cache(
+                self.kernels.cfg, rows, rcfg.capacity))
         self.tok = self.kernels.put(jnp.zeros((rows, 1), jnp.int32))
         self.active = self.kernels.put(jnp.zeros((rows,), bool))
         self.remaining = self.kernels.put(jnp.zeros((rows,), jnp.int32))
+
+    @property
+    def _paged(self) -> bool:
+        return self.kernels.rcfg.paged
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.alloc.used_pages if self._paged else 0
+
+    def _device_pages(self):
+        """Mesh-committed page table, refreshed only when the host table
+        mutated (admission/retirement) — uncommitted per-dispatch inputs
+        would re-shard the whole argument list (see ``RuntimeKernels.put``)."""
+        if self._pages_dirty:
+            self._pages_dev = self.kernels.put(jnp.asarray(self.page_table))
+            self._pages_dirty = False
+        return self._pages_dev
+
+    def _kv_bucket(self, steps: int, incoming=()) -> int:
+        """Smallest kv-read bucket covering every live row's cache depth at
+        the end of a ``steps``-deep fused block (busy slots advance by at
+        most min(steps, remaining); ``incoming`` rows are (lb, max_new)
+        pairs about to be admitted at depth lb)."""
+        need = 1
+        for s in self.slots:
+            if s.busy:
+                need = max(need, s.pos + min(steps, s.remaining))
+        for lb, max_new in incoming:
+            need = max(need, lb + min(steps, max_new))
+        ladder = self.kernels.rcfg.kv_ladder
+        return next((b for b in ladder if b >= need), ladder[-1])
 
     # -------------------------------------------------------------- intake
     def submit(self, requests: List[Request]):
@@ -267,10 +448,27 @@ class DecodeRuntime:
             # max_new=16 request would otherwise pin 16-step blocks while
             # its 7 batch-mates idle after step 4)
             group = sorted(group, key=lambda r: -r.max_new)[:len(free)]
+            pages: Dict[int, List[int]] = {}
+            if self._paged:
+                # all-or-nothing page grant per request; a request the pool
+                # cannot hold right now stays pending until a retirement
+                # frees pages (fits() guarantees it can be held eventually)
+                granted = []
+                for r in group:
+                    pgs = self.alloc.alloc(
+                        rcfg.page_footprint(lb, r.max_new))
+                    if pgs is None:
+                        break
+                    granted.append(r)
+                    pages[id(r)] = pgs
+                group = granted
+                if not group:
+                    break
+                self.pages_hwm = max(self.pages_hwm, self.alloc.used_pages)
             taken = set(id(r) for r in group)
             self.pending = [r for r in self.pending if id(r) not in taken]
             take, free = free[:len(group)], free[len(group):]
-            done.extend(self._admit_batch(group, take, lb))
+            done.extend(self._admit_batch(group, take, lb, pages))
         return done
 
     def _prompt_tokens(self, rid: int, lb: int) -> np.ndarray:
@@ -286,7 +484,7 @@ class DecodeRuntime:
         return tok
 
     def _admit_batch(self, reqs: List[Request], slot_idx: List[int],
-                     lb: int) -> List[Finished]:
+                     lb: int, pages: Dict[int, List[int]]) -> List[Finished]:
         rcfg = self.kernels.rcfg
         bb = MA.pow2_bucket(len(reqs), 1, rcfg.max_batch)
         n_pad = bb - len(reqs)
@@ -299,14 +497,36 @@ class DecodeRuntime:
         max_new = np.asarray([r.max_new for r in reqs] + [0] * n_pad,
                              np.int32)
         idx = np.asarray(list(slot_idx) + [rcfg.max_batch] * n_pad, np.int32)
-        fn = self.kernels.admit_fn(bb, lb)
-        # small host inputs commit inside the dispatch; only the persistent
-        # slab state must live pre-committed on the mesh (see kernels.put)
-        self.cache, self.tok, self.active, self.remaining = fn(
-            self.params, tokens, self.cache, self.tok,
-            self.active, self.remaining, idx, max_new)
+        if self._paged:
+            # publish the grants in the page table (pad rows -> null page)
+            npg_prompt = -(-lb // rcfg.page_size)
+            prompt_pages = np.zeros((bb, npg_prompt), np.int32)
+            for j, (r, i) in enumerate(zip(reqs, slot_idx)):
+                pgs = pages[id(r)]
+                self.page_table[i] = 0
+                self.page_table[i, :len(pgs)] = pgs
+                prompt_pages[j] = pgs[:npg_prompt]
+            self._pages_dirty = True
+            kvb = self._kv_bucket(rcfg.admit_tail,
+                                  incoming=[(lb, int(r.max_new))
+                                            for r in reqs])
+            fn = self.kernels.admit_fn(bb, lb,
+                                       kvb if rcfg.admit_tail else 0)
+            self.cache, self.tok, self.active, self.remaining = fn(
+                self.params, tokens, self.cache, self.tok,
+                self.active, self.remaining, idx, max_new,
+                pages=self._device_pages(), prompt_pages=prompt_pages)
+        else:
+            fn = self.kernels.admit_fn(bb, lb)
+            # small host inputs commit inside the dispatch; only the
+            # persistent slab state must live pre-committed on the mesh
+            # (see kernels.put)
+            self.cache, self.tok, self.active, self.remaining = fn(
+                self.params, tokens, self.cache, self.tok,
+                self.active, self.remaining, idx, max_new)
         for r, i in zip(reqs, slot_idx):
-            self.slots[i] = _Slot(req=r, remaining=int(r.max_new))
+            self.slots[i] = _Slot(req=r, remaining=int(r.max_new), lb=lb,
+                                  pages=tuple(pages.get(id(r), ())))
         if self.record_tokens:                  # first token (prefill argmax)
             first = np.asarray(self.tok)[:, 0]
             for r, i in zip(reqs, slot_idx):
@@ -315,6 +535,17 @@ class DecodeRuntime:
         return self._harvest(rcfg.admit_tail)
 
     # -------------------------------------------------------------- decode
+    def _retire_slot(self, i: int) -> None:
+        """Free slot ``i``: in paged mode its pages go back to the pool and
+        its page-table row re-points at the null page, so the retired
+        row's frozen KV write can never land in a re-granted page."""
+        s = self.slots[i]
+        if self._paged and s.pages:
+            self.page_table[i] = 0
+            self._pages_dirty = True
+            self.alloc.free(s.pages)
+        self.slots[i] = _Slot()
+
     def _harvest(self, steps: int) -> List[Finished]:
         done = []
         for i, s in enumerate(self.slots):
@@ -323,7 +554,7 @@ class DecodeRuntime:
             s.remaining -= min(steps, s.remaining)
             if s.remaining == 0:
                 done.append(Finished(s.req, s.req.max_new))
-                self.slots[i] = _Slot()
+                self._retire_slot(i)
                 # content store follows the live request set (re-mintable
                 # deterministically) — no monotonic growth across a stream
                 self.content.pop(s.req.rid, None)
@@ -333,10 +564,23 @@ class DecodeRuntime:
         maxrem = max((s.remaining for s in self.slots if s.busy), default=0)
         steps = next((b for b in self.kernels.rcfg.block_ladder
                       if b >= maxrem), self.kernels.rcfg.decode_block)
-        fn = self.kernels.decode_fn(steps)
+        rcfg = self.kernels.rcfg
+        if self._paged:
+            fn = self.kernels.decode_fn(steps, self._kv_bucket(steps))
+            kw = {"pages": self._device_pages()}
+        else:
+            # engage dense block skipping only when the deepest live row
+            # leaves at least half the slab capacity dead this block —
+            # with a well-utilized slab the single fused attention wins
+            depth = max((s.pos + min(steps, s.remaining)
+                         for s in self.slots if s.busy), default=0)
+            skip = bool(rcfg.block_skip) and 2 * depth <= rcfg.capacity
+            fn = self.kernels.decode_fn(steps, skip=skip)
+            kw = {}
         before = {i: s.remaining for i, s in enumerate(self.slots) if s.busy}
         self.tok, self.cache, self.active, self.remaining, toks = fn(
-            self.params, self.tok, self.cache, self.active, self.remaining)
+            self.params, self.tok, self.cache, self.active, self.remaining,
+            **kw)
         self.steps_dispatched += 1
         if self.record_tokens:                  # test hook: syncs per block
             arr = np.asarray(toks)
@@ -378,7 +622,11 @@ class DecodeRuntime:
         """Slot table + pending queue as flat numpy arrays (what the drain
         controller can save through ``repro.checkpoint``). Restoration
         re-prefills — KV is derivable state; the request ledger and the
-        content store (exact prompt tokens) are not, so both ship."""
+        content store (exact prompt tokens) are not, so both ship.
+        Physical page ids are replica-local and deliberately absent: the
+        successor's admission re-allocates from its own pool and rebuilds
+        its page table, replaying identical tokens (the §4.5.4 page-table
+        round-trip is logical, not physical)."""
         live = [(s.req.rid, s.req.arrival, s.req.prompt_len, s.remaining)
                 for s in self.slots if s.busy and s.remaining > 0]
         live += [(r.rid, r.arrival, r.prompt_len, r.max_new)
@@ -428,6 +676,6 @@ class DecodeRuntime:
             if s.busy:
                 out.append(Request(s.req.rid, s.req.arrival,
                                    s.req.prompt_len, s.remaining))
-                self.slots[i] = _Slot()
+                self._retire_slot(i)
         self.content.clear()
         return out

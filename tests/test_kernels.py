@@ -9,12 +9,14 @@ try:
 except ImportError:          # clean env: deterministic fallback
     from _hypothesis_fallback import given, settings, strategies as st
 
+from repro.kernels import ops
 from repro.kernels import ref as R
 from repro.kernels.decode_attention import decode_attention_kernel
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mlstm_scan import mlstm_chunkwise_kernel
+from repro.kernels.paged_decode_attention import paged_decode_attention_kernel
 from repro.kernels.ssm_scan import ssm_scan_kernel
-from repro.models.attention import blockwise_attention
+from repro.models.attention import blockwise_attention, decode_attention
 from repro.models.xlstm import mlstm_chunkwise
 
 
@@ -185,6 +187,129 @@ def test_decode_attention_sweep(B, Hq, Hkv, Smax, dh, bk, window, chunk):
     o_ker = decode_attention_kernel(q, kc, vc, lens, window=window,
                                     chunk=chunk, block_k=bk, interpret=True)
     np.testing.assert_allclose(o_ker, o_ref, atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_per_row_pos_kernel_parity():
+    """The slab layout's per-row position vector (not just scalar pos):
+    Pallas decode kernel (interpret) == jnp model decode attention."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    B, Hq, Hkv, Smax, dh = 4, 4, 2, 256, 32
+    q = jax.random.normal(ks[0], (B, 1, Hq, dh), jnp.float32)
+    kc = jax.random.normal(ks[1], (B, Smax, Hkv, dh), jnp.float32)
+    vc = jax.random.normal(ks[2], (B, Smax, Hkv, dh), jnp.float32)
+    pos = jnp.asarray([3, 77, 130, 255], jnp.int32)        # per-row depths
+    o_jnp = decode_attention(q, kc, vc, pos=pos)
+    o_skip = decode_attention(q, kc, vc, pos=pos, block_skip=64)
+    o_ker = ops.decode_attention(q, kc, vc, pos + 1, block_k=64)
+    np.testing.assert_allclose(o_ker, o_jnp, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(o_skip, o_jnp, atol=2e-5, rtol=2e-5)
+
+
+def _paged_case(seed, B=3, Hq=4, Hkv=2, dh=16, ps=8, P=4, n_pages=16):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, Hq, dh)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(n_pages, ps, Hkv, dh)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(n_pages, ps, Hkv, dh)), jnp.float32)
+    lengths = rng.integers(1, P * ps + 1, B)
+    pages = np.zeros((B, P), np.int32)
+    nxt = 1                      # page 0 stays the null page
+    for b in range(B):
+        for j in range(-(-int(lengths[b]) // ps)):
+            pages[b, j] = nxt
+            nxt += 1
+    assert nxt <= n_pages
+    return q, kp, vp, jnp.asarray(pages), jnp.asarray(lengths, jnp.int32)
+
+
+@pytest.mark.parametrize("window,chunk", [(None, None), (11, None),
+                                          (None, 16)])
+def test_paged_decode_attention_kernel_vs_gathered_ref(window, chunk):
+    """Paged kernel (scalar-prefetch page table, per-row early exit over
+    the page grid) == gather-the-pages-then-dense-oracle."""
+    q, kp, vp, pages, lengths = _paged_case(0)
+    out = paged_decode_attention_kernel(q, kp, vp, pages, lengths,
+                                        window=window, chunk=chunk,
+                                        interpret=True)
+    B, P = pages.shape
+    ps = kp.shape[1]
+    kb = kp[pages].reshape(B, P * ps, *kp.shape[2:])
+    vb = vp[pages].reshape(B, P * ps, *vp.shape[2:])
+    ref = R.decode_attention_ref(q, kb, vb, lengths=lengths, window=window,
+                                 chunk=chunk)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(data=st.data())
+def test_paged_decode_attention_property(data):
+    seed = data.draw(st.integers(0, 99))
+    B = data.draw(st.integers(1, 4))
+    ps = data.draw(st.sampled_from([4, 8, 16]))
+    P = data.draw(st.sampled_from([2, 4]))
+    q, kp, vp, pages, lengths = _paged_case(seed, B=B, ps=ps, P=P,
+                                            n_pages=B * P + 2)
+    out = paged_decode_attention_kernel(q, kp, vp, pages, lengths,
+                                        interpret=True)
+    kb = kp[pages].reshape(B, P * ps, *kp.shape[2:])
+    vb = vp[pages].reshape(B, P * ps, *vp.shape[2:])
+    ref = R.decode_attention_ref(q, kb, vb, lengths=lengths)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_kernel_mode_routes_paged_dispatch():
+    """The kernel_mode toggle end-to-end at the ops layer: pallas
+    (interpret on CPU) and jnp must produce matching outputs for the
+    slab layout's per-row lengths, and auto must resolve per backend."""
+    q, kp, vp, pages, lengths = _paged_case(3)
+    q4 = q[:, None]                           # ops layer takes (B,1,Hq,dh)
+    try:
+        ops.set_kernel_mode("jnp")
+        assert ops.resolved_mode() == "jnp" and not ops.use_kernels()
+        o_jnp = ops.decode_attention_paged(q4, kp, vp, pages, lengths,
+                                           kv_bucket=32, page_size=8)
+        ops.set_kernel_mode("pallas")
+        assert ops.use_kernels()
+        o_pal = ops.decode_attention_paged(q4, kp, vp, pages, lengths,
+                                           kv_bucket=32, page_size=8)
+        ops.set_kernel_mode("auto")
+        assert ops.resolved_mode() == ("pallas" if ops.on_tpu() else "jnp")
+    finally:
+        ops.set_kernel_mode(None)
+    np.testing.assert_allclose(o_pal, o_jnp, atol=2e-5, rtol=2e-5)
+    with pytest.raises(ValueError):
+        ops.set_kernel_mode("cuda")
+
+
+def test_decode_step_paged_pallas_vs_jnp():
+    """Model-level parity: one paged transformer decode step under
+    kernel_mode=pallas (interpret) matches kernel_mode=jnp — logits and
+    the KV written into the pool."""
+    from repro.configs.base import get_config
+    from repro.models import model_api as MA
+    from repro.models import transformer
+    cfg = get_config("qwen2-7b").reduced()
+    params = transformer.init(jax.random.PRNGKey(0), cfg)
+    rows, ps, n_pages = 3, 8, 8
+    pages = np.zeros((rows, 3), np.int32)
+    pages[0, :2] = [1, 2]
+    pages[1, :1] = [3]
+    cache = MA.init_paged_cache(cfg, rows, n_pages, ps)
+    cache["pos"] = jnp.asarray([9, 4, 0], jnp.int32)
+    tok = jnp.asarray([[7], [11], [0]], jnp.int32)
+    outs = {}
+    try:
+        for mode in ("jnp", "pallas"):
+            ops.set_kernel_mode(mode)
+            logits, new_cache = transformer.decode_step(
+                params, tok, dict(cache), cfg, pages=jnp.asarray(pages),
+                kv_bucket=16)
+            outs[mode] = (logits, new_cache["dense"]["k"])
+    finally:
+        ops.set_kernel_mode(None)
+    np.testing.assert_allclose(outs["pallas"][0], outs["jnp"][0],
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(outs["pallas"][1], outs["jnp"][1],
+                               atol=2e-5, rtol=2e-5)
 
 
 @settings(max_examples=10, deadline=None)

@@ -115,8 +115,12 @@ def test_trace_count_bounded_under_random_shapes(serving):
     assert traces["admit"] >= 1 and traces["decode"] >= 1
     n_bb = len(rcfg.batch_buckets)
     n_lb = len(rcfg.prompt_buckets)
-    assert traces["admit"] <= n_bb * n_lb
-    assert traces["decode"] <= len(rcfg.block_ladder)
+    # paged decode adds the kv-read-bucket dimension; the dense slab adds
+    # the host-adaptive plain/block-skip pair per fused-step bucket
+    n_kv = len(rcfg.kv_ladder) if rcfg.paged else 1
+    n_skip = 1 if rcfg.paged or not rcfg.block_skip else 2
+    assert traces["admit"] <= n_bb * n_lb * n_kv
+    assert traces["decode"] <= len(rcfg.block_ladder) * n_kv * n_skip
     assert traces["admit"] + traces["decode"] <= kern.max_traces
 
 

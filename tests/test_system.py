@@ -70,8 +70,11 @@ def test_walltime_drain_checkpoints_and_exits(tmp_path):
 @pytest.mark.slow
 def test_serve_e2e_twin_scales(tmp_path):
     r = run(["repro.launch.serve", "--arch", "qwen2-7b", "--devices", "8",
-             "--tp", "2", "--nodes", "4", "--ticks", "40"], timeout=560)
+             "--tp", "2", "--nodes", "4", "--ticks", "40",
+             "--kernel-mode", "auto"], timeout=560)
     assert r.returncode == 0, r.stdout + r.stderr
+    # the kernel dispatch mode is resolved and logged before any tracing
+    assert "[kernels] mode=auto (resolved " in r.stdout
     assert "[done] served=" in r.stdout
     # the twin escalated at least once under the pressure trajectory
     assert "scale events=[(0.0, 0, 1)" in r.stdout
