@@ -15,6 +15,8 @@ root so the perf trajectory is tracked across PRs.
   5.1        -> bench_deployment_40
   4.5.4      -> bench_control_plane_churn (drain -> reschedule loop)
   §1/§4      -> bench_federation_churn (full-site kill, cross-site failover)
+  QoS        -> bench_priority_spike (twin (replicas, priority) writes,
+                batch preemption + resume, quota books balance)
   serving    -> bench_serving_throughput (slot-slab runtime vs chunked)
   kernels    -> bench_kernel_* (interpret-mode Pallas vs jnp oracle)
   dry-run    -> bench_roofline (reads experiments/dryrun)
@@ -373,6 +375,121 @@ def bench_federation_churn():
         f"sites_after={'+'.join(sites_after)}")
 
 
+def bench_priority_spike():
+    """QoS under a mixed-tenant pressure spike: a preemptible batch
+    tenant saturates the cluster's chips next to one serving replica;
+    mid-run the arrival rate spikes past one replica's capacity. The
+    digital twin escalates the serving Deployment along the (replicas,
+    priority) action space — ``standard`` -> ``latency-critical`` plus a
+    2x replica write — and the scale-up replica *preempts* a batch pod
+    (checkpoint -> requeue, §4.5.4 path). When the spike passes, serving
+    de-escalates and the preempted batch pod reschedules and resumes
+    from its checkpointed progress.
+
+    Asserts (the QoS acceptance criteria): zero serving-request loss;
+    serving p99 latency bounded; batch state round-trips identically
+    through preempt -> requeue -> resume; only batch (never serving,
+    never equal-or-higher priority) is preempted; and the fair-share
+    quota books balance (used + free == capacity, per-owner sums match
+    the node truth) on every tick."""
+    import jax
+    from repro.configs.base import get_config
+    from repro.core.cluster import Cluster
+    from repro.core.controllers import ControlPlane
+    from repro.core.digital_twin.control import ControlPolicy
+    from repro.core.elastic import ElasticServing
+    from repro.core.jrm import SliceSpec, start_vk
+    from repro.core.qos import BatchTenant, Quota
+    from repro.models import model_api as MA
+    from repro.streaming.engine import StreamEngine
+
+    cfg = get_config("qwen2-7b").reduced()
+    mod = MA.get_module(cfg)
+    host = jax.tree.map(np.asarray, mod.init(jax.random.PRNGKey(0), cfg))
+    serving = ElasticServing(cfg, tp=1).build(1, host_params=host)
+
+    cluster = Cluster()
+    for i in range(4):
+        cluster.register_node(
+            start_vk(f"n{i}", nodetype="tpu", now=0.0,
+                     slice_spec=SliceSpec(chips=2)), 0.0)
+        cluster.heartbeat(f"n{i}", 0.0)
+    cluster.apply_quota(Quota(owner="ersap", chips=4), 0.0)
+    cluster.apply_quota(Quota(owner="batch", chips=7), 0.0)
+    plane = ControlPlane(cluster)
+
+    eng = StreamEngine(cfg, serving, list(cluster.nodes.values()),
+                       service_rate=2.0, max_batch=4,
+                       cluster=cluster, plane=plane)
+    # paper control regions (Tables 8/9 put E[Lq|16] between ~34 and 248:
+    # the spike must push the queue into the state-3 regime to escalate,
+    # and the post-spike drain back under lq_low de-escalates)
+    eng.policy = ControlPolicy(lq_high=55.0, lq_low=40.0)
+    eng.deploy(0.0)
+    assert len(eng.pods) == 1
+
+    # batch tenant: both tenants start at *standard* — preemption is only
+    # possible after the twin's priority write, which is the point
+    batch = BatchTenant(cluster, 7, priority_class="standard")
+    eng.reconcile(0.0)
+    assert batch.bound == 7
+    cluster.ledger.assert_balanced()
+
+    arrivals = {}
+    real_arrivals = eng.source.arrivals
+
+    def tracked(now, dt, lam, **kw):
+        out = real_arrivals(now, dt, lam, **kw)
+        for r in out:
+            arrivals[r.rid] = r.arrival
+        return out
+
+    eng.source.arrivals = tracked
+
+    dt = 10.0
+    ticks = 16 if FAST else 24
+    spike = range(ticks // 4, ticks // 2)        # §6.2-style pressure spike
+    t0 = time.perf_counter()
+    for t in range(ticks + 8):                   # +8 drain ticks (lam=0)
+        now = t * dt
+        lam = 0.0 if t >= ticks else (4.5 if t in spike else 0.6)
+        for name in cluster.nodes:
+            cluster.heartbeat(name, now)
+        eng.reconcile(now)
+        batch.advance()                          # batch work progresses
+        eng.tick(now, dt, lam)
+        if t % 2 == 1:
+            eng.control_step(now)
+        cluster.ledger.assert_balanced()         # quota books, every tick
+    elapsed = time.perf_counter() - t0
+
+    # zero serving-request loss across escalate -> preempt -> de-escalate
+    lost = eng.source.rid - len(eng.completed)
+    assert lost == 0, f"{lost} serving requests lost"
+    assert len(eng.queue) == 0
+    lat = np.asarray([done - arrivals[rid] for rid, done in eng.completed])
+    p99 = float(np.percentile(lat, 99))
+    assert p99 <= 12 * dt, f"serving p99 {p99:.0f}s unbounded under spike"
+    # the twin's priority write landed and enabled preemption of batch only
+    reasons = cluster.event_reasons()
+    assert "PriorityChanged" in reasons
+    preempted = [ev for ev in cluster.events if ev.reason == "Preempted"]
+    assert preempted, "pressure spike never triggered preemption"
+    assert all(ev.name.startswith("batch") for ev in preempted), \
+        "a non-batch (equal-or-higher priority) pod was preempted"
+    # preempted batch pods resumed with state identical to the checkpoint
+    # (each resume validated against its own eviction's snapshot)
+    assert batch.resumed, "no preempted batch pod resumed"
+    assert not batch.mismatches, \
+        f"resume/checkpoint state mismatches: {batch.mismatches}"
+    escalated = sum(1 for ev in cluster.events
+                    if ev.reason == "PriorityChanged")
+    row("priority_spike", elapsed / (ticks + 8) * 1e6,
+        f"requests={eng.source.rid};lost={lost};p99_s={p99:.1f};"
+        f"preempted={len(preempted)};batch_resumed={len(batch.resumed)};"
+        f"priority_writes={escalated};quota_balanced=1")
+
+
 # ------------------------------------------------------- serving runtime
 
 def bench_serving_throughput():
@@ -673,6 +790,7 @@ BENCHES = [
     bench_queue_16, bench_queue_32,
     bench_dbn_tracking, bench_dbn_control,
     bench_deployment_40, bench_control_plane_churn, bench_federation_churn,
+    bench_priority_spike,
     bench_serving_throughput, bench_paged_decode,
     bench_kernel_flash_attention, bench_kernel_mlstm, bench_kernel_ssm,
     bench_kernel_decode_attention,
@@ -701,7 +819,9 @@ def run_check(tol: float, record: bool) -> int:
     job instead of silently uploading worse numbers. Also enforces the
     semantic floors (runtime beats chunked; paged clearly beats dense —
     the full >=1.5x claim lives in the committed full-run numbers) and
-    the jit trace bound. Noise posture on shared runners: the recorded
+    the jit trace bound, and fast-smokes ``bench_priority_spike`` whose
+    internal QoS assertions (zero serving loss, bounded p99, batch
+    state round-trip, balanced quota books) fail the job directly. Noise posture on shared runners: the recorded
     baseline is the *min* of two smoke runs (the slowest healthy
     observation) while enforcement takes the *best* of up to two runs, so
     only a genuine regression trips the ``tol`` gap. ``record=True``
@@ -716,6 +836,8 @@ def run_check(tol: float, record: bool) -> int:
         # the fresh fast report lands next to them instead
         JSON_DIR = ROOT / "bench_check"
         JSON_DIR.mkdir(exist_ok=True)
+    # QoS gate first (cheap, assertion-based — no ratio to baseline)
+    bench_priority_spike()
 
     def smoke():
         bench_serving_throughput()

@@ -46,6 +46,15 @@ Multi-site federation: every ``VirtualNode`` carries a ``site`` identity
 walltime after the drain margin, heartbeat health). Scheduling consumes
 sites through the filter/score stages in ``scheduler.py``; the JCS uses
 ``SiteView.remaining_walltime`` to re-provision pilots proactively.
+
+QoS (``qos.py``): the store also holds ``PriorityClass`` objects and
+per-owner fair-share ``Quota``s. Pods carry ``priority_class`` /
+``preemptible`` (resolved from the class at submit); ``set_priority`` is
+the priority analog of ``scale`` — a spec write the digital twin / HPA
+use to escalate the serving Deployment during pressure spikes, applied
+to live and pending pods so preemption order follows immediately. The
+``ledger`` (a ``qos.QuotaLedger``) derives per-owner usage from bound
+pods and backs the scheduler's ``filter_quota`` stage.
 """
 from __future__ import annotations
 
@@ -53,6 +62,7 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.core import qos
 from repro.core.jrm import VirtualNode
 from repro.core.state_machine import Container, Pod, PodPhase
 
@@ -64,6 +74,8 @@ DELETED = "DELETED"
 KIND_NODE = "Node"
 KIND_POD = "Pod"
 KIND_DEPLOYMENT = "Deployment"
+KIND_PRIORITY_CLASS = "PriorityClass"
+KIND_QUOTA = "Quota"
 
 
 @dataclass
@@ -128,8 +140,14 @@ class PodTemplate:
     affinity: List[dict] = field(default_factory=list)
     request_chips: int = 0
     request_hbm_bytes: int = 0
+    # declared KV page-pool footprint per replica (paged serving): the
+    # statically-enforceable currency of the kv_pages quota dimension
+    request_kv_pages: int = 0
     expected_duration: float = 0.0
     priority: int = 0
+    # QoS: named tier; when set it resolves to priority/preemptible at
+    # submit (the numeric ``priority`` above is the classless fallback)
+    priority_class: str = ""
     # federation spec: hard site constraints + the input stream whose home
     # site the data-locality scorer pins toward (scheduler.SiteTopology)
     site_selector: Tuple[str, ...] = ()
@@ -173,6 +191,9 @@ class PodRecord:
     pod: Pod
     owner: Optional[str] = None            # owning Deployment name
     priority: int = 0
+    priority_class: str = ""               # QoS tier the priority came from
+    preemptible: bool = True               # may be a preemption victim
+    request_kv_pages: int = 0              # declared KV pool footprint
     expected_duration: float = 0.0
     submitted_at: float = 0.0
     # federation spec (copied from the PodTemplate; see scheduler stages)
@@ -205,6 +226,12 @@ class Cluster:
         self.pods: Dict[str, PodRecord] = {}
         self.deployments: Dict[str, Deployment] = {}
         self.events: List[ClusterEvent] = []
+        # QoS objects: named tiers + per-owner fair-share caps, and the
+        # derived-usage ledger the scheduler's quota filter consults
+        self.priority_classes: Dict[str, qos.PriorityClass] = \
+            qos.default_priority_classes()
+        self.quotas: Dict[Tuple[str, Optional[str]], qos.Quota] = {}
+        self.ledger = qos.QuotaLedger(self)
         self.version = 0              # bumps on every watch emission
         self._watchers: Dict[str, List[Callable[[WatchEvent], None]]] = {}
         self._uid = itertools.count(1)
@@ -338,19 +365,67 @@ class Cluster:
     def site_views(self, now: float) -> Dict[str, SiteView]:
         return {s: self.site_view(s, now) for s in self.site_names()}
 
+    # ------------------------------------------------------------- qos
+    def apply_priority_class(self, pc: qos.PriorityClass,
+                             now: float = 0.0) -> qos.PriorityClass:
+        existing = self.priority_classes.get(pc.name)
+        self.priority_classes[pc.name] = pc
+        self._emit(KIND_PRIORITY_CLASS,
+                   MODIFIED if existing else ADDED, pc.name, pc)
+        self.record(now, KIND_PRIORITY_CLASS, pc.name, "Applied",
+                    f"value={pc.value} preemptible={pc.preemptible}")
+        return pc
+
+    def apply_quota(self, quota: qos.Quota, now: float = 0.0) -> qos.Quota:
+        existing = self.quotas.get(quota.key)
+        self.quotas[quota.key] = quota
+        self._emit(KIND_QUOTA, MODIFIED if existing else ADDED,
+                   quota.owner, quota)
+        self.record(now, KIND_QUOTA, quota.owner, "Applied",
+                    f"site={quota.site or '-'} chips={quota.chips} "
+                    f"hbm={quota.hbm_bytes} kv_pages={quota.kv_pages}")
+        return quota
+
+    def quota_for(self, owner: Optional[str],
+                  site: Optional[str] = None) -> Optional[qos.Quota]:
+        if owner is None:
+            return None
+        return self.quotas.get((owner, site))
+
+    def resolve_priority(self, name: str) -> qos.PriorityClass:
+        pc = self.priority_classes.get(name)
+        if pc is None:
+            raise ValueError(f"unknown priority class {name!r} "
+                             f"(have {sorted(self.priority_classes)})")
+        return pc
+
     # ------------------------------------------------------------ pods
     def submit(self, pod: Pod, now: float, *, owner: Optional[str] = None,
-               priority: int = 0, expected_duration: float = 0.0,
+               priority: int = 0, priority_class: str = "",
+               preemptible: Optional[bool] = None,
+               request_kv_pages: int = 0,
+               expected_duration: float = 0.0,
                site_selector: Tuple[str, ...] = (),
                site_anti_affinity: Tuple[str, ...] = (),
                data_stream: Optional[str] = None,
                restored_from: Optional[str] = None,
                restored_state: Optional[dict] = None) -> PodRecord:
         """Declare a pod. It enters the scheduler queue as Pending; nobody
-        hand-picks a node here."""
+        hand-picks a node here. A ``priority_class`` resolves to the
+        class's numeric value and preemptible bit (the bare ``priority``
+        int is the classless fallback)."""
         if pod.name in self.pods:
             raise ValueError(f"pod {pod.name} already exists")
+        if priority_class:
+            pc = self.resolve_priority(priority_class)
+            priority = pc.value
+            if preemptible is None:
+                preemptible = pc.preemptible
         rec = PodRecord(pod=pod, owner=owner, priority=priority,
+                        priority_class=priority_class,
+                        preemptible=True if preemptible is None
+                        else preemptible,
+                        request_kv_pages=request_kv_pages,
                         expected_duration=expected_duration,
                         submitted_at=now, site_selector=tuple(site_selector),
                         site_anti_affinity=tuple(site_anti_affinity),
@@ -407,6 +482,12 @@ class Cluster:
 
     # ----------------------------------------------------- deployments
     def apply_deployment(self, dep: Deployment, now: float = 0.0) -> Deployment:
+        if dep.template.priority_class:
+            # keep the numeric mirror in sync with the class, so
+            # set_priority's raise-vs-demote comparison (and any reader
+            # of template.priority) sees the resolved tier
+            dep.template.priority = \
+                self.resolve_priority(dep.template.priority_class).value
         existing = self.deployments.get(dep.name)
         self.deployments[dep.name] = dep
         self._emit(KIND_DEPLOYMENT, MODIFIED if existing else ADDED,
@@ -425,4 +506,33 @@ class Cluster:
                         f"{dep.replicas}->{replicas} by {source}")
             dep.replicas = replicas
             self._emit(KIND_DEPLOYMENT, MODIFIED, name, dep)
+        return dep
+
+    def set_priority(self, name: str, priority_class: str, now: float,
+                     source: str = "user") -> Deployment:
+        """Desired-priority write, the second half of the twin/HPA action
+        space: re-tier a Deployment's template AND its existing pods, so
+        an escalation changes preemption order immediately (a pending
+        scale-up replica submitted at ``standard`` becomes a
+        ``latency-critical`` preemptor without being resubmitted)."""
+        dep = self.deployments[name]
+        if dep.template.priority_class == priority_class:
+            return dep
+        pc = self.resolve_priority(priority_class)
+        old = dep.template.priority_class or str(dep.template.priority)
+        raised = pc.value > dep.template.priority
+        dep.template.priority_class = priority_class
+        dep.template.priority = pc.value
+        for rec in self.pods_of(name, live_only=False):
+            rec.priority = pc.value
+            rec.priority_class = priority_class
+            rec.preemptible = pc.preemptible
+            if raised and not rec.bound:
+                # escalated pending pods re-enter scheduling immediately:
+                # the backoff they accrued at the old tier is void
+                rec.attempts = 0
+                rec.next_retry = now
+        self.record(now, KIND_DEPLOYMENT, name, "PriorityChanged",
+                    f"{old}->{priority_class} by {source}")
+        self._emit(KIND_DEPLOYMENT, MODIFIED, name, dep)
         return dep

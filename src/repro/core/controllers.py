@@ -21,6 +21,15 @@ drain loop to federation scale: a whole facility's node pool (one pilot
 allocation) is cordoned up front and drained as a single checkpoint/evict
 wave, and the displaced replicas reschedule cross-site with their state
 restored.
+
+QoS wiring: the ControlPlane hands the scheduler its
+``checkpoint_cb`` — preemption victims snapshot through the same
+``checkpoint_pod`` path as drained pods, so cross-priority eviction is
+state-preserving end to end. Deployment pods inherit the template's
+``priority_class`` / ``request_kv_pages``; a Deployment whose pods are
+quota-blocked idles at the scheduler's max backoff with a single
+FailedScheduling transition event instead of hot-looping (see
+``scheduler.run_once``).
 """
 from __future__ import annotations
 
@@ -69,6 +78,8 @@ class DeploymentController:
                 rec = self.cluster.submit(
                     dep.template.instantiate(name), now, owner=dep.name,
                     priority=dep.template.priority,
+                    priority_class=dep.template.priority_class,
+                    request_kv_pages=dep.template.request_kv_pages,
                     expected_duration=dep.template.expected_duration,
                     site_selector=dep.template.site_selector,
                     site_anti_affinity=dep.template.site_anti_affinity,
@@ -94,9 +105,11 @@ class NodeLifecycleController:
     _drained: Set[str] = field(default_factory=set)
     _ckpt_steps: Dict[str, int] = field(default_factory=dict)
 
-    def _checkpoint(self, rec: PodRecord, now: float) -> Optional[dict]:
+    def checkpoint_pod(self, rec: PodRecord, now: float) -> Optional[dict]:
         """Snapshot the pod's runtime state through repro.checkpoint: the
-        same atomic save/restore path training and elastic scaling use."""
+        same atomic save/restore path training and elastic scaling use.
+        Called on the drain path below and (via the ControlPlane wiring)
+        by the scheduler for preemption victims."""
         dep = self.cluster.deployments.get(rec.owner or "")
         provider = dep.template.checkpoint_state if dep else None
         if provider is None:
@@ -122,7 +135,7 @@ class NodeLifecycleController:
     def _drain_node(self, name: str, now: float):
         self.cluster.cordon(name, now, reason="Draining")
         for rec in self.cluster.pods_on(name):
-            state = self._checkpoint(rec, now)
+            state = self.checkpoint_pod(rec, now)
             evicted = self.cluster.evict(
                 rec.name, now, reason="Evicted",
                 message=f"node {name} draining")
@@ -208,6 +221,10 @@ class ControlPlane:
                 self.cluster, deployment_ctrl=self.deployments)
         elif self.nodes.deployment_ctrl is None:
             self.nodes.deployment_ctrl = self.deployments
+        if self.scheduler.checkpoint_cb is None:
+            # preemption victims take the same §4.5.4 checkpoint path as
+            # drained pods, so a preempted batch job resumes where it was
+            self.scheduler.checkpoint_cb = self.nodes.checkpoint_pod
 
     def step(self, now: float):
         """One control-plane tick: lifecycle first (drains/evictions free

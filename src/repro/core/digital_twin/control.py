@@ -1,11 +1,21 @@
-"""Digital-twin control policy (paper §6.3).
+"""Digital-twin control policy (paper §6.3), extended to QoS actions.
 
 The twin recommends the processing capacity (16 vs 32 threads in the
 paper; N vs 2N serving replicas in the TPU adaptation): switch UP when the
 expected queue length under the current control crosses ``lq_high``;
 switch DOWN when even the low-capacity configuration would keep the queue
 under ``lq_low``. A small hysteresis/switch cost prevents thrashing —
-matching the control regions of Fig. 8."""
+matching the control regions of Fig. 8.
+
+``recommend_action`` extends those control regions to a **(replicas,
+priority) action space**: alongside the capacity decision the policy
+recommends the serving Deployment's priority class — escalated to
+``latency-critical`` while the twin predicts a pressure spike (or the
+serving slab's memory-pressure gauge runs hot), dropped back to
+``standard`` once both signals clear a hysteresis band. On a shared
+cluster the priority write is what makes the capacity write *landable*:
+the scale-up replica preempts batch work instead of queueing behind
+it."""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
@@ -21,6 +31,14 @@ class ControlPolicy:
     lq_low: float = 40.0             # de-escalate when E[Lq|16] below this
     horizon: int = 2                 # predictive steps (the "twin" advantage)
     history: List[Tuple[float, int, float]] = field(default_factory=list)
+    # (replicas, priority) action space: the serving tier under pressure
+    # and at rest, plus the slab-occupancy band that can force the high
+    # tier even while the queue model still reads calm
+    prio_high: str = "latency-critical"
+    prio_low: str = "standard"
+    occupancy_high: float = 0.9
+    occupancy_low: float = 0.5
+    action_history: List[Tuple[float, int, str]] = field(default_factory=list)
 
     def recommend(self, twin: DigitalTwin, current: int, now: float) -> int:
         lq16 = twin.expected_lq(16, self.horizon)
@@ -31,6 +49,25 @@ class ControlPolicy:
             rec = 16
         self.history.append((now, rec, lq16))
         return rec
+
+    def recommend_action(self, twin: DigitalTwin, current: int, now: float,
+                         occupancy: float = 0.0) -> Tuple[int, str]:
+        """One (control, priority_class) recommendation. Priority follows
+        the same predicted-pressure signal as capacity (escalated control
+        => escalated tier) with ``occupancy`` as a second trigger, and a
+        hysteresis band in between (keep the previous tier) so the tier
+        does not flap while the queue hovers between the thresholds."""
+        control = self.recommend(twin, current, now)
+        prev = self.action_history[-1][2] if self.action_history \
+            else self.prio_low
+        if control == 32 or occupancy >= self.occupancy_high:
+            pclass = self.prio_high
+        elif occupancy <= self.occupancy_low:
+            pclass = self.prio_low
+        else:
+            pclass = prev
+        self.action_history.append((now, control, pclass))
+        return control, pclass
 
 
 def replicas_for_control(control: int, base_replicas: int = 1) -> int:

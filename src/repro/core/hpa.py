@@ -1,13 +1,24 @@
-"""Horizontal Pod Autoscaler — paper §4.4.
+"""Horizontal Pod Autoscaler — paper §4.4, pressure-aware.
 
 Implements Eq. (1): desired = ceil(current * metric / target), with the
 readiness-gating logic of the Kubernetes replica calculator quoted in
 §4.4.2 (cpuInitializationPeriod / delayOfInitialReadinessStatus) and the
 five-minute scale-down stabilization window observed in §4.4.5.
 
-The metric is pluggable: the paper uses CPU utilization; the TPU serving
-adaptation feeds queue depth / tokens-per-second from the streaming engine
-(see DESIGN.md §2) — the formula and gating are identical.
+Two evaluation surfaces share the formula and the stabilization window:
+
+- ``evaluate`` — the paper-faithful per-pod metric path (CPU-like
+  samples, readiness gating).
+- ``evaluate_signals`` — the multi-signal serving path (k8s
+  multi-metric semantics: each signal proposes a replica count via
+  Eq. (1), the **max** proposal wins). ``PressureSignals`` carries the
+  three serving pressure inputs: FIFO queue depth, aggregate decode
+  tokens/s, and **slab occupancy** — the serving runtime's KV
+  memory-pressure gauge (paged: ``ersap_kv_pages`` / pool; dense:
+  ``ersap_slab_slots_used`` / slots; fleet mean, so a scale-up visibly
+  lowers it and the loop converges). Occupancy is what queue depth
+  cannot see: replicas whose slabs are full cannot absorb another
+  request even while the queue looks short.
 """
 from __future__ import annotations
 
@@ -28,6 +39,18 @@ class HPAConfig:
     scale_down_stabilization: float = 300.0   # §4.4.5: five minutes
     tolerance: float = 0.1             # K8s default: 10% deadband
     metric_window: float = 60.0
+    # multi-signal targets (evaluate_signals); 0 disables a signal.
+    # ``target`` doubles as the per-replica queue-depth target there.
+    tokens_target: float = 0.0         # per-replica tokens/s at capacity
+    occupancy_target: float = 0.0      # slab occupancy fraction (e.g. 0.85)
+
+
+@dataclass
+class PressureSignals:
+    """One tick's serving pressure inputs (see module docstring)."""
+    queue_depth: float = 0.0           # requests waiting in the FIFO
+    tokens_per_s: float = 0.0          # aggregate decode throughput
+    slab_occupancy: float = 0.0        # mean per-replica KV occupancy [0,1]
 
 
 @dataclass
@@ -85,14 +108,20 @@ class HPA:
         if not ready_vals:
             return len(pods)
         metric = sum(ready_vals) / len(ready_vals)
-        ratio = metric / self.cfg.target
-        if abs(ratio - 1.0) <= self.cfg.tolerance:
-            desired = current
-        else:
-            desired = desired_replicas(current, metric, self.cfg.target)
+        return self._stabilize(
+            current, self._propose(current, metric, self.cfg.target), now)
+
+    def _propose(self, current: int, metric: float, target: float) -> int:
+        """Eq. (1) with the K8s tolerance deadband."""
+        if abs(metric / target - 1.0) <= self.cfg.tolerance:
+            return current
+        return desired_replicas(current, metric, target)
+
+    def _stabilize(self, current: int, desired: int, now: float) -> int:
+        """Clamp + §4.4.5 scale-down stabilization (max recommendation in
+        the window wins on the way down)."""
         desired = max(self.cfg.min_replicas,
                       min(self.cfg.max_replicas, desired))
-        # scale-down stabilization: use the max recommendation in the window
         self._recommendations.append((now, desired))
         cutoff = now - self.cfg.scale_down_stabilization
         self._recommendations = [(t, d) for t, d in self._recommendations
@@ -103,3 +132,23 @@ class HPA:
         if desired != current:
             self.last_scale_time = now
         return desired
+
+    def evaluate_signals(self, current: int, sig: PressureSignals,
+                         now: float) -> int:
+        """Multi-signal reconcile (k8s multi-metric semantics): each
+        enabled signal proposes a replica count via Eq. (1); the max
+        proposal wins, then the shared stabilization window applies.
+        Queue depth and tokens/s are per-replica averages against their
+        targets; occupancy is already a per-replica fraction (the fleet
+        mean), so it compares to ``occupancy_target`` directly — a
+        saturated fleet scales up even with a short queue."""
+        current = max(current, 1)
+        proposals = [self._propose(current, sig.queue_depth / current,
+                                   self.cfg.target)]
+        if self.cfg.tokens_target > 0:
+            proposals.append(self._propose(
+                current, sig.tokens_per_s / current, self.cfg.tokens_target))
+        if self.cfg.occupancy_target > 0:
+            proposals.append(self._propose(
+                current, sig.slab_occupancy, self.cfg.occupancy_target))
+        return self._stabilize(current, max(proposals), now)

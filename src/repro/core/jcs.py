@@ -8,12 +8,17 @@ component that mints VirtualNodes — and registers them straight into the
 declarative Cluster store when one is attached; scheduling and lifecycle
 are the store's controllers' job, not the JCS's.
 
-Federation (this PR): ``launch_multi`` deploys one pilot per facility for
-a multi-site workflow, and ``reprovision`` closes the §4.5.4 loop
+Federation: ``launch_multi`` deploys one pilot per facility for a
+multi-site workflow, and ``reprovision`` closes the §4.5.4 loop
 *proactively* — when a site's aggregate remaining walltime (Cluster
 ``SiteView``) drops below the projected demand of the pods running there,
 the JCS launches a fresh pilot at that site before the drain wave hits,
 so capacity exists by the time the NodeLifecycleController evicts.
+Pilots are sized from live demand, not walltime shortfall alone: the
+serving queue backlog (seconds of work the current replicas have not
+absorbed) and the chip concurrency of capacity-starved pending pods both
+raise the node count (quota-blocked pods never do — a fair-share cap is
+not helped by more nodes).
 """
 from __future__ import annotations
 
@@ -24,6 +29,9 @@ from typing import Dict, List, Optional
 
 from repro.core.jfe import FrontEnd, WorkflowRequest
 from repro.core.jrm import SliceSpec, VirtualNode, start_vk
+# shared reject classifier, defined next to the filters whose reasons it
+# parses: quota rejects never count as capacity starvation
+from repro.core.scheduler import is_capacity_starved
 
 
 @dataclass
@@ -119,23 +127,102 @@ class CentralService:
                 total += horizon
         return total
 
+    @staticmethod
+    def _starved_chips(cluster, now: float) -> Dict[str, List[int]]:
+        """Per-pod chip requests of capacity-starved pending pods,
+        attributed to one site each: pods the scheduler has already
+        bounced for chips/HBM (never quota — fair-share caps are not
+        helped by more nodes; a quota reject's message names the
+        resource too, so quota parts are excluded before the capacity
+        test) want a bigger pool. A pod naming sites goes to its first
+        selectable site; an unconstrained pod to the site with the most
+        free chips (one site only — counting it everywhere would launch
+        a pilot per facility for a single pod)."""
+        by_site: Dict[str, List[int]] = {}
+        sites = cluster.site_names()
+        if not sites:
+            return by_site
+        free = {s: cluster.site_view(s, now).free_chips for s in sites}
+        for rec in cluster.pending_pods():
+            if rec.attempts < 1:
+                continue
+            if not is_capacity_starved(rec.last_reason):
+                continue
+            cands = [s for s in rec.site_selector if s in free] \
+                or [s for s in sites if s not in rec.site_anti_affinity]
+            if not cands:
+                continue
+            site = max(cands, key=lambda s: free[s])
+            by_site.setdefault(site, []).append(
+                max(rec.pod.request_chips, 1))
+        return by_site
+
     def reprovision(self, cluster, now: float, *, horizon: float = 600.0,
                     walltime: float = 3600.0,
-                    slice_spec: Optional[SliceSpec] = None) -> List[PilotJob]:
-        """Proactive per-site pilot re-provisioning: for every site whose
-        aggregate remaining walltime (SiteView, drain margin already
-        subtracted) no longer covers its projected demand, launch a fresh
-        pilot there — sized by the shortfall, capped at 1:1 replacement of
-        the expiring nodes — so the batch drain wave reschedules onto
-        capacity that already exists. Self-limiting: launched nodes raise
-        the site's supply, so the next call is a no-op until the new
-        lease erodes too."""
+                    slice_spec: Optional[SliceSpec] = None,
+                    queue_backlog: float = 0.0,
+                    service_rate: float = 0.0) -> List[PilotJob]:
+        """Proactive per-site pilot re-provisioning, sized from three
+        demand sources instead of walltime shortfall alone:
+
+        1. **walltime shortfall** — the site's aggregate remaining
+           walltime (SiteView, drain margin already subtracted) no longer
+           covers the projected demand of the pods running there; sized
+           by the shortfall, capped at 1:1 replacement of expiring nodes.
+        2. **live queue backlog** — ``queue_backlog`` waiting requests at
+           ``service_rate`` req/s per replica are ``backlog/rate`` seconds
+           of serving work that existing replicas have not absorbed,
+           attributed to each site by its share of bound pods.
+        3. **chip concurrency** — pending pods the scheduler already
+           bounced for chips/HBM (never quota-blocked ones: fair-share
+           caps are not helped by more nodes) need net-new chips now,
+           regardless of walltime runway.
+
+        Self-limiting: launched nodes raise the site's supply and free
+        chips, so the next call is a no-op until demand grows again."""
         launched = []
+        starved = self._starved_chips(cluster, now)
+        bound_by_site: Dict[str, int] = {}
+        for rec in cluster.pods.values():
+            node = cluster.nodes.get(rec.pod.node) if rec.bound else None
+            if node is not None:
+                bound_by_site[node.site] = bound_by_site.get(node.site, 0) + 1
+        total_bound = sum(bound_by_site.values())
         for site, view in cluster.site_views(now).items():
             demand = self.projected_demand(cluster, site, now, horizon)
-            if view.remaining_walltime >= demand:
-                continue
+            if queue_backlog > 0 and service_rate > 0:
+                share = bound_by_site.get(site, 0) / total_bound \
+                    if total_bound else 1.0 / max(len(cluster.site_names()), 1)
+                demand += (queue_backlog / service_rate) * share
             pool = cluster.site_nodes(site)
+            chips_per_node = (slice_spec or
+                              (pool[0].slice_spec if pool
+                               else SliceSpec())).chips
+            # fragmentation-aware shortfall: first-fit the starved pods'
+            # requests onto the site's per-node free chips (aggregate
+            # free is optimistic — two nodes with 1 free chip each
+            # cannot host a 2-chip pod); whatever does not place needs
+            # net-new nodes
+            node_free = sorted(
+                (n.free_chips() for n in pool
+                 if (st := cluster.node_status.get(n.name)) is not None
+                 and st.ready and st.schedulable), reverse=True)
+            chips_short = 0
+            for req in sorted(starved.get(site, ()), reverse=True):
+                if req > chips_per_node:
+                    # a replacement node of this slice size could not
+                    # host it either — launching pilots for it would
+                    # repeat every call without ever binding the pod
+                    continue
+                for i, f in enumerate(node_free):
+                    if f >= req:
+                        node_free[i] -= req
+                        break
+                else:
+                    chips_short += req
+            n_chip = math.ceil(chips_short / max(chips_per_node, 1))
+            if view.remaining_walltime >= demand and n_chip == 0:
+                continue
             # replace only live capacity that is about to expire; dead or
             # already-drained nodes linger in the store but add no supply
             live = [n for n in pool
@@ -144,11 +231,17 @@ class CentralService:
             expiring = [n for n in live
                         if n.alive_left(now) - n.drain_margin < horizon]
             # size the pilot by the shortfall a replacement lease actually
-            # covers, never beyond 1:1 replacement of expiring nodes
+            # covers, never beyond 1:1 replacement of expiring nodes; the
+            # chip-concurrency demand is net-new and adds on top
             usable = max(walltime - 120.0, 1.0)   # -60 JRM offset, -60 margin
-            shortfall = demand - view.remaining_walltime
-            n_new = min(max(len(expiring), 1),
-                        max(1, math.ceil(shortfall / usable)))
+            n_wall = 0
+            if demand > view.remaining_walltime:
+                shortfall = demand - view.remaining_walltime
+                n_wall = min(max(len(expiring), 1),
+                             max(1, math.ceil(shortfall / usable)))
+            n_new = max(n_wall, n_chip)
+            if n_new <= 0:
+                continue
             wf = self.frontend.add_wf(
                 f"{site}-re{len(self.pilots)}-", n_new,
                 nodetype=pool[0].nodetype if pool else "cpu", site=site,

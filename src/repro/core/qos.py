@@ -1,0 +1,321 @@
+"""QoS subsystem: priority classes and fair-share quotas (paper §3-§4).
+
+The control plane so far treated every pod as equal — a batch backfill
+job and a latency-critical ERSAP serving replica competed on identical
+terms. On a shared, walltime-bounded HPC allocation that is the wrong
+default: multi-tenant scientific Kubernetes deployments (NRP and
+friends) make priority + fair-share the load-bearing mechanism. This
+module adds the two object kinds the rest of the plane consumes:
+
+- ``PriorityClass`` — a named scheduling tier (k8s PriorityClass
+  analog). Pods carry the class name; the store resolves it to a
+  numeric ``value`` (queue order, preemption order) and a
+  ``preemptible`` bit (whether pods of this class may ever be evicted
+  for a higher-priority pod — the victim-side half of k8s
+  ``preemptionPolicy``).
+- ``Quota`` — a per-owner (Deployment ≈ tenant) fair-share cap over
+  chips, HBM bytes and KV pages, optionally scoped to one site. The
+  scheduler enforces it as a filter stage (``filter_quota``); the
+  ``QuotaLedger`` below is the accounting: usage is derived from the
+  store's bound pods (never tracked imperatively), so the books cannot
+  drift — ``used + free == capacity`` is checkable every tick.
+
+Consumers: ``cluster.py`` stores both kinds and resolves classes at
+submit; ``scheduler.py`` orders the queue by (priority, fair-share
+ratio, age) and preempts strictly-lower-priority preemptible victims;
+``hpa.py`` / ``digital_twin/control.py`` write the serving
+Deployment's priority during pressure spikes; ``launch/serve.py``
+parses ``--quota`` specs through :func:`parse_quotas`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.state_machine import PodPhase
+
+
+@dataclass(frozen=True)
+class PriorityClass:
+    """A named scheduling tier. ``value`` orders the pending queue and
+    bounds preemption (a pod may only evict strictly-lower values);
+    ``preemptible=False`` exempts pods of this class from ever being
+    preemption victims (they still drain on walltime — §4.5.4 is a
+    lease expiring, not a scheduling decision)."""
+    name: str
+    value: int
+    preemptible: bool = True
+    description: str = ""
+
+
+# Default tiers (k8s ships system-* classes; the rest mirror the mixed
+# workload of the paper: latency-critical ERSAP serving next to
+# preemptible batch science).
+BATCH = PriorityClass("batch", 0, True,
+                      "preemptible backfill: first evicted under pressure")
+STANDARD = PriorityClass("standard", 10, True,
+                         "default tier for serving and interactive work")
+LATENCY_CRITICAL = PriorityClass("latency-critical", 100, True,
+                                 "pressure-spike serving: preempts batch")
+SYSTEM = PriorityClass("system", 1000, False,
+                       "control-plane components: never preempted")
+
+DEFAULT_PRIORITY_CLASSES = (BATCH, STANDARD, LATENCY_CRITICAL, SYSTEM)
+
+
+def default_priority_classes() -> Dict[str, PriorityClass]:
+    return {c.name: c for c in DEFAULT_PRIORITY_CLASSES}
+
+
+@dataclass(frozen=True)
+class Quota:
+    """Fair-share cap for one owner (Deployment ≈ tenant). ``None``
+    limits are unconstrained; ``site=None`` scopes the cap to the whole
+    cluster, a site name to that facility's pool only. ``kv_pages``
+    caps the *declared* per-replica KV page pools
+    (``PodRecord.request_kv_pages``) — the serving runtime's
+    memory-footprint currency — so a tenant cannot grab the whole
+    paged-slab budget by scaling replicas."""
+    owner: str
+    site: Optional[str] = None
+    chips: Optional[int] = None
+    hbm_bytes: Optional[int] = None
+    kv_pages: Optional[int] = None
+
+    @property
+    def key(self) -> Tuple[str, Optional[str]]:
+        return (self.owner, self.site)
+
+
+@dataclass
+class Usage:
+    """One owner's booked resources (bound, non-terminal pods)."""
+    chips: int = 0
+    hbm_bytes: int = 0
+    kv_pages: int = 0
+    pods: int = 0
+
+
+def parse_quotas(spec: str) -> List[Quota]:
+    """Parse a CLI quota spec: comma-separated entries of
+    ``owner[@site]:resource=value[:resource=value...]`` with resources
+    ``chips``, ``hbm_gb`` and ``kv_pages`` —
+    e.g. ``"ersap:chips=8:kv_pages=1024,batch@jlab:chips=4"``."""
+    out: List[Quota] = []
+    for entry in spec.split(","):
+        entry = entry.strip()
+        if not entry:
+            continue
+        head, *fields = entry.split(":")
+        owner, _, site = head.partition("@")
+        if not fields:
+            raise ValueError(f"quota entry {entry!r} names no resource")
+        limits: Dict[str, Optional[int]] = {}
+        for f in fields:
+            key, _, val = f.partition("=")
+            if key == "chips":
+                limits["chips"] = int(val)
+            elif key == "hbm_gb":
+                limits["hbm_bytes"] = int(float(val) * 1024**3)
+            elif key == "kv_pages":
+                limits["kv_pages"] = int(val)
+            else:
+                raise ValueError(f"unknown quota resource {key!r} in "
+                                 f"{entry!r} (chips|hbm_gb|kv_pages)")
+        out.append(Quota(owner=owner, site=site or None, **limits))
+    return out
+
+
+class BatchTenant:
+    """Driver-side bookkeeping for a preemptible batch tenant: a
+    Deployment of single-chip pods whose only runtime state is a
+    progress counter, checkpointed through the §4.5.4 / preemption path.
+    One implementation of the checkpoint round-trip protocol shared by
+    ``launch/serve.py --batch-load``, ``bench_priority_spike`` and the
+    QoS tests — so the payload shape cannot silently diverge between
+    the demo driver and the thing CI asserts on.
+
+    ``advance()`` once per driver tick: pods make one unit of progress
+    while bound; an evicted pod's live counter is dropped (the watch
+    hook snapshots what the checkpoint saw), so a resumed pod *must*
+    recover its progress from ``restored_state``. Each resume is
+    compared against its own eviction's snapshot at adoption time (the
+    snapshot is consumed, so a pod preempted twice is validated per
+    cycle, not against its latest eviction): ``resumed`` is the
+    round-trip evidence, ``mismatches`` must stay empty."""
+
+    def __init__(self, cluster, replicas: int, *, name: str = "batch",
+                 priority_class: str = "batch", request_chips: int = 1,
+                 now: float = 0.0):
+        # deferred: cluster.py imports this module for the object model
+        from repro.core.cluster import (DELETED, KIND_POD, Deployment,
+                                        PodTemplate)
+        self.cluster = cluster
+        self.name = name
+        self.counters: Dict[str, int] = {}       # live progress per pod
+        self.snapshots: Dict[str, int] = {}      # progress at eviction,
+        #                                          consumed on resume
+        self.resumed: List[Tuple[str, int]] = []  # (pod, restored progress)
+        # (pod, restored, expected) where restored != snapshot
+        self.mismatches: List[Tuple[str, int, int]] = []
+        self._deleted = DELETED
+        cluster.watch(KIND_POD, self._on_pod)
+        cluster.apply_deployment(Deployment(
+            name, replicas, template=PodTemplate(
+                labels={"app": name},
+                tolerations=[{"key": "virtual-kubelet.io/provider",
+                              "value": "mock"}],
+                request_chips=request_chips, priority_class=priority_class,
+                checkpoint_state=self.checkpoint_state)), now)
+
+    def checkpoint_state(self, pod_name: str) -> dict:
+        """The checkpoint payload (PodTemplate.checkpoint_state hook)."""
+        return {"progress": self.counters.get(pod_name, 0)}
+
+    def _on_pod(self, ev) -> None:
+        if ev.type == self._deleted and \
+                getattr(ev.obj, "owner", None) == self.name:
+            self.snapshots[ev.name] = self.counters.pop(ev.name, 0)
+
+    def advance(self) -> None:
+        """One driver tick: adopt restored counters for pods back from a
+        checkpoint (validated against that eviction's snapshot), then
+        advance every bound pod's progress."""
+        for rec in self.cluster.pods_of(self.name):
+            if not rec.bound:
+                continue
+            if rec.name not in self.counters:
+                restored = int((rec.restored_state or {}).get("progress", 0))
+                expected = self.snapshots.pop(rec.restored_from or rec.name,
+                                              None)
+                if rec.restored_from is not None:
+                    self.resumed.append((rec.name, restored))
+                    if expected is not None and restored != expected:
+                        self.mismatches.append(
+                            (rec.name, restored, expected))
+                self.counters[rec.name] = restored
+            self.counters[rec.name] += 1
+
+    @property
+    def bound(self) -> int:
+        return sum(1 for r in self.cluster.pods_of(self.name) if r.bound)
+
+    @property
+    def total_progress(self) -> int:
+        return sum(self.counters.values())
+
+
+class QuotaLedger:
+    """Fair-share accounting over the cluster store.
+
+    Usage is *derived* from the store (bound, non-terminal pods) and
+    memoized on the store's watch version, so every preempt -> requeue
+    -> reschedule cycle re-balances the books automatically — there is
+    no imperative counter that could leak. ``assert_balanced`` makes
+    the invariant checkable per tick: per-owner books must sum exactly
+    to the node-side truth, and node ``used + free == capacity``."""
+
+    def __init__(self, cluster):
+        self.cluster = cluster
+        self._cache: Dict[Tuple, Usage] = {}
+        self._cache_version = -1
+
+    def _live(self):
+        for rec in self.cluster.pods.values():
+            if not rec.bound:
+                continue
+            if rec.pod.phase in (PodPhase.SUCCEEDED, PodPhase.FAILED):
+                continue
+            yield rec
+
+    def usage(self, owner: Optional[str],
+              site: Optional[str] = None) -> Usage:
+        if self._cache_version != self.cluster.version:
+            self._cache.clear()
+            self._cache_version = self.cluster.version
+        key = (owner, site)
+        cached = self._cache.get(key)
+        if cached is not None:
+            return cached
+        u = Usage()
+        for rec in self._live():
+            if rec.owner != owner:
+                continue
+            if site is not None:
+                node = self.cluster.nodes.get(rec.pod.node)
+                if node is None or node.site != site:
+                    continue
+            u.chips += rec.pod.request_chips
+            u.hbm_bytes += rec.pod.request_hbm_bytes
+            u.kv_pages += rec.request_kv_pages
+            u.pods += 1
+        self._cache[key] = u
+        return u
+
+    # ------------------------------------------------------ enforcement
+    def check(self, rec, node) -> Optional[str]:
+        """Scheduler filter-stage body: would binding ``rec`` to ``node``
+        take its owner over any applicable quota? Returns the reject
+        reason, or None when within bounds / unconstrained."""
+        if rec.owner is None or not self.cluster.quotas:
+            return None
+        for quota in (self.cluster.quota_for(rec.owner, node.site),
+                      self.cluster.quota_for(rec.owner, None)):
+            if quota is None:
+                continue
+            u = self.usage(rec.owner, quota.site)
+            for limit, used, req, label in (
+                    (quota.chips, u.chips, rec.pod.request_chips, "chips"),
+                    (quota.hbm_bytes, u.hbm_bytes,
+                     rec.pod.request_hbm_bytes, "hbm"),
+                    (quota.kv_pages, u.kv_pages,
+                     rec.request_kv_pages, "kv_pages")):
+                if limit is not None and used + req > limit:
+                    scope = f"site {quota.site}" if quota.site else "cluster"
+                    return (f"quota: {rec.owner} {label} "
+                            f"{used}+{req}>{limit} ({scope})")
+        return None
+
+    def dominant_share(self, owner: Optional[str]) -> float:
+        """Dominant-resource share of the owner's cluster-wide quota
+        (DRF-style): the scheduler orders equal-priority pending pods by
+        this, so the tenant furthest below its fair share binds first.
+        Unquota'd owners rank as 0 (nothing to be fair against)."""
+        if owner is None:
+            return 0.0
+        quota = self.cluster.quota_for(owner, None)
+        if quota is None:
+            return 0.0
+        u = self.usage(owner)
+        shares = [used / limit for limit, used in
+                  ((quota.chips, u.chips), (quota.hbm_bytes, u.hbm_bytes),
+                   (quota.kv_pages, u.kv_pages)) if limit]
+        return max(shares, default=0.0)
+
+    # -------------------------------------------------------- invariant
+    def assert_balanced(self) -> Dict[str, int]:
+        """Quota books balance: per-owner usage sums to the node-side
+        truth and node used + free == capacity, for chips and HBM.
+        Raises ValueError with the discrepancy; returns the totals."""
+        nodes = self.cluster.nodes.values()
+        cap_chips = sum(n.slice_spec.chips for n in nodes)
+        used_chips = sum(n.used_chips() for n in nodes)
+        free_chips = sum(n.free_chips() for n in nodes)
+        cap_hbm = sum(n.slice_spec.hbm_bytes for n in nodes)
+        used_hbm = sum(n.used_hbm() for n in nodes)
+        free_hbm = sum(n.free_hbm() for n in nodes)
+        if used_chips + free_chips != cap_chips or \
+                used_hbm + free_hbm != cap_hbm:
+            raise ValueError(
+                f"node books off: chips {used_chips}+{free_chips}"
+                f"!={cap_chips} or hbm {used_hbm}+{free_hbm}!={cap_hbm}")
+        owners = {rec.owner for rec in self._live()}
+        owner_chips = sum(self.usage(o).chips for o in owners)
+        owner_hbm = sum(self.usage(o).hbm_bytes for o in owners)
+        if owner_chips != used_chips or owner_hbm != used_hbm:
+            raise ValueError(
+                f"ledger books off: owner chips {owner_chips} != node "
+                f"chips {used_chips} (hbm {owner_hbm} vs {used_hbm})")
+        return {"chips_capacity": cap_chips, "chips_used": used_chips,
+                "chips_free": free_chips, "hbm_used": used_hbm,
+                "hbm_free": free_hbm}

@@ -10,11 +10,19 @@ store's pending queue:
   * pluggable **score stages** (non-straggler preference, best-fit HBM —
     the tightest feasible fit wins),
   * **retry with exponential backoff** for unschedulable pods (the queue
-    is re-examined every ``run_once``; failures emit FailedScheduling
-    events instead of silently dropping),
-  * **drain-aware preemption**: a pod that cannot fit may evict strictly
-    lower-priority pods from a healthy (never draining) node; victims are
-    requeued, not lost.
+    is re-examined every ``run_once``; a FailedScheduling event is
+    emitted once per *reason transition*, not per retry — a
+    quota-blocked pod parked for minutes logs one line, not hundreds —
+    and quota rejections back off at ``backoff_max`` immediately, since
+    waiting cannot free a fair-share cap),
+  * **QoS preemption**: a pod that cannot fit may evict strictly
+    lower-priority *preemptible* pods from a healthy (never draining)
+    node — cost-ranked across nodes by (victim priority sum, victim
+    count). Victims are checkpointed through the §4.5.4 loop
+    (``checkpoint_cb``, wired by the ControlPlane to the
+    NodeLifecycleController) and requeued with their spec and state
+    intact — preemption moves work, it never loses it. Equal-or-higher
+    priority is never preempted.
 
 ``MatchingService`` (jms.py) remains as a thin one-shot facade over the
 same filter/score stages for legacy callers.
@@ -42,6 +50,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.cluster import KIND_POD, Cluster, PodRecord
 from repro.core.jrm import VirtualNode
+from repro.core.state_machine import PodPhase
 
 # A filter returns None when the node is feasible, else a reject reason.
 FilterStage = Callable[[PodRecord, VirtualNode, "Scheduler", float],
@@ -147,10 +156,47 @@ def filter_site(rec, node, sched, now):
     return None
 
 
+def filter_quota(rec, node, sched, now):
+    """QoS: the owner's fair-share quota (cluster-wide and per-site) must
+    cover this pod's chips/HBM/kv-page requests on top of what the owner
+    already has bound. Usage is derived from the store by the ledger, so
+    preempt -> requeue -> reschedule re-balances the books automatically.
+    Neutral when no quotas are declared."""
+    return sched.cluster.ledger.check(rec, node)
+
+
 DEFAULT_FILTERS: List[FilterStage] = [
     filter_node_ready, filter_tolerations, filter_node_selector,
-    filter_affinity, filter_site, filter_resources, filter_walltime,
+    filter_affinity, filter_site, filter_quota, filter_resources,
+    filter_walltime,
 ]
+
+
+# The one classifier over select_node's composed reject string
+# ("node: reason; node: reason; ..."), kept next to the filters that
+# emit the reasons so wording and parsing cannot drift apart
+# (consumers: run_once's quota park, jcs reprovision's starved-chips).
+
+def _reject_reasons(reason: str) -> List[str]:
+    """Per-node reject reasons with the 'node: ' prefix stripped (so a
+    node or owner name never masquerades as a reject kind)."""
+    return [p.split(": ", 1)[-1] for p in reason.split("; ") if p]
+
+
+def is_quota_blocked(reason: str) -> bool:
+    """Every node rejected the pod for its owner's quota (filter_quota):
+    waiting cannot help — only a spec write or scale-down frees share."""
+    parts = _reject_reasons(reason)
+    return bool(parts) and all(p.startswith("quota:") for p in parts)
+
+
+def is_capacity_starved(reason: str) -> bool:
+    """Some node rejected the pod for chips/HBM (filter_resources) —
+    the rejections more capacity could actually cure; quota rejects
+    (whose message also names the resource) are excluded."""
+    return any(p.startswith("insufficient")
+               for p in _reject_reasons(reason)
+               if not p.startswith("quota:"))
 
 
 # ------------------------------------------------------------- score stages
@@ -257,6 +303,11 @@ class Scheduler:
     backoff_max: float = 60.0
     enable_preemption: bool = True
     topology: Optional[SiteTopology] = None     # federation config
+    # §4.5.4 hook for preemption victims: ControlPlane wires this to
+    # NodeLifecycleController.checkpoint_pod so an evicted victim's
+    # runtime state rides its requeued record (None -> no checkpoint)
+    checkpoint_cb: Optional[Callable[[PodRecord, float], Optional[dict]]] = \
+        None
     _peer_site_cache: Optional[tuple] = field(default=None, repr=False)
 
     # ------------------------------------------------------ single pod
@@ -290,15 +341,19 @@ class Scheduler:
 
     # ------------------------------------------------------ preemption
     def _try_preempt(self, rec: PodRecord, now: float) -> Optional[Decision]:
-        """Evict strictly lower-priority pods from one healthy node so
-        ``rec`` fits. Victims are requeued (declared again as pending) —
-        preemption moves work, it never loses it."""
+        """Evict strictly lower-priority *preemptible* pods from one
+        healthy node so ``rec`` fits — cost-ranked across nodes by
+        (victim priority sum, victim count), so the cheapest eviction set
+        cluster-wide wins. Victims are checkpointed (``checkpoint_cb``,
+        the §4.5.4 path) and requeued with their spec and state intact —
+        preemption moves work, it never loses it. Equal-or-higher
+        priority and non-preemptible classes are never victims."""
         best = None
         for node in self.cluster.nodes.values():
-            # every non-resource constraint still applies to the preemptor:
-            # only capacity may be freed by evicting, never tolerations,
-            # selectors, affinity, or the walltime lease (which also keeps
-            # draining nodes out)
+            # every non-capacity constraint still applies to the preemptor:
+            # only chips/HBM may be freed by evicting, never tolerations,
+            # selectors, affinity, the owner's quota, or the walltime
+            # lease (which also keeps draining nodes out)
             infeasible = any(
                 f(rec, node, self, now) is not None
                 for f in self.filters if f is not filter_resources)
@@ -306,8 +361,12 @@ class Scheduler:
                 continue
             victims = sorted(
                 (v for v in self.cluster.pods_on(node.name)
-                 if v.priority < rec.priority),
-                key=lambda v: v.priority)
+                 if v.priority < rec.priority and v.preemptible
+                 and v.pod.phase not in (PodPhase.SUCCEEDED,
+                                         PodPhase.FAILED)),
+                # cheapest tier first; within a tier the youngest pod
+                # (least progress to lose) goes first
+                key=lambda v: (v.priority, -v.submitted_at))
             freed_chips = node.free_chips()
             freed_hbm = node.free_hbm()
             chosen = []
@@ -331,21 +390,30 @@ class Scheduler:
         _, node, chosen = best
         names = []
         for v in chosen:
+            state = self.checkpoint_cb(v, now) \
+                if self.checkpoint_cb is not None else None
             evicted = self.cluster.evict(
                 v.name, now, reason="Preempted",
                 message=f"for {rec.name} (priority {rec.priority})")
             if evicted is None:
                 continue
-            # requeue the victim: same spec, fresh scheduling bookkeeping
+            # requeue the victim: same spec, fresh scheduling bookkeeping,
+            # and the just-taken checkpoint (falling back to whatever
+            # state the record already carried)
             requeued = self.cluster.submit(
                 _reset_pod(evicted.pod), now, owner=evicted.owner,
                 priority=evicted.priority,
+                priority_class=evicted.priority_class,
+                preemptible=evicted.preemptible,
+                request_kv_pages=evicted.request_kv_pages,
                 expected_duration=evicted.expected_duration,
                 site_selector=evicted.site_selector,
                 site_anti_affinity=evicted.site_anti_affinity,
                 data_stream=evicted.data_stream,
-                restored_from=evicted.restored_from,
-                restored_state=evicted.restored_state)
+                restored_from=v.name if state is not None
+                else evicted.restored_from,
+                restored_state=state if state is not None
+                else evicted.restored_state)
             requeued.next_retry = now   # eligible immediately
             names.append(v.name)
         self.cluster.assign(rec.name, node.name, now)
@@ -353,12 +421,18 @@ class Scheduler:
 
     # ------------------------------------------------------- main loop
     def run_once(self, now: float) -> List[Decision]:
-        """One reconcile pass over the pending queue: highest priority
-        first, then FIFO; pods in backoff are skipped until their retry
-        time."""
+        """One reconcile pass over the pending queue, ordered by
+        (priority desc, fair-share ratio asc, FIFO): among equal
+        priorities the owner furthest below its quota binds first. Pods
+        in backoff are skipped until their retry time."""
         out = []
-        pending = sorted(self.cluster.pending_pods(),
-                         key=lambda r: (-r.priority, r.submitted_at))
+        ledger = self.cluster.ledger
+        fair = bool(self.cluster.quotas)
+        pending = sorted(
+            self.cluster.pending_pods(),
+            key=lambda r: (-r.priority,
+                           ledger.dominant_share(r.owner) if fair else 0.0,
+                           r.submitted_at))
         for rec in pending:
             if rec.name not in self.cluster.pods:
                 continue                     # preempted away this pass
@@ -375,13 +449,24 @@ class Scheduler:
                     out.append(dec)
                     continue
             rec.attempts += 1
+            changed = reason != rec.last_reason
             rec.last_reason = reason
-            backoff = min(self.backoff_base * (2 ** (rec.attempts - 1)),
-                          self.backoff_max)
+            # a quota-blocked pod cannot be helped by waiting (only a
+            # spec write or a scale-down frees fair share) — park it at
+            # the max backoff instead of hot-looping up to it
+            if is_quota_blocked(reason):
+                backoff = self.backoff_max
+            else:
+                backoff = min(self.backoff_base * (2 ** (rec.attempts - 1)),
+                              self.backoff_max)
             rec.next_retry = now + backoff
-            self.cluster.record(now, KIND_POD, rec.name, "FailedScheduling",
-                                f"attempt={rec.attempts} retry_in={backoff:.0f}s"
-                                f": {reason}")
+            if changed:
+                # one event per reason *transition*, not per retry: a pod
+                # parked behind a quota for minutes is one audit line
+                self.cluster.record(
+                    now, KIND_POD, rec.name, "FailedScheduling",
+                    f"attempt={rec.attempts} retry_in={backoff:.0f}s"
+                    f": {reason}")
             out.append(Decision(rec.name, None, reason))
         return out
 

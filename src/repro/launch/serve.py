@@ -18,14 +18,25 @@ spreads replicas across sites latency-aware (``--site-latency``), and
 ``--kill-site SITE --kill-tick T`` batch-drains a whole facility mid-run
 — its replicas checkpoint and reschedule cross-site with zero request
 loss. ``--reprovision`` lets the JCS top up any site whose walltime
-runway drops below projected demand (pair with ``--walltime`` to watch
-the fleet survive perpetual lease churn).
+runway drops below projected demand — now also sized from the live
+serving queue backlog and capacity-starved pending pods (pair with
+``--walltime`` to watch the fleet survive perpetual lease churn).
+
+QoS mixed-workload mode: ``--batch-load N`` runs N preemptible batch
+pods (priority class ``batch``, one chip each, with a checkpointable
+progress counter) next to the serving Deployment; during pressure
+spikes the twin escalates serving to ``latency-critical`` (written via
+``cluster.set_priority``) so serving scale-ups preempt batch work —
+victims checkpoint, requeue, and resume when the spike passes.
+``--priority-class`` sets serving's initial tier; ``--quota`` applies
+fair-share caps (e.g. ``"ersap:chips=8,batch:chips=6"``).
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --devices 8 \
       --tp 2 --nodes 4 --ticks 80 [--controller hpa] [--walltime 300] \
       [--sites "jlab:2,nersc:2" --site-latency "jlab:nersc:40" \
-       --kill-site jlab --kill-tick 40]
+       --kill-site jlab --kill-tick 40] \
+      [--batch-load 6 --quota "ersap:chips=6,batch:chips=6"]
 """
 import argparse
 import os
@@ -45,6 +56,7 @@ import jax                                        # noqa: E402
 import numpy as np                                # noqa: E402
 
 from repro.configs.base import get_config         # noqa: E402
+from repro.core import qos                        # noqa: E402
 from repro.core.cluster import Cluster            # noqa: E402
 from repro.core.controllers import ControlPlane   # noqa: E402
 from repro.core.elastic import ElasticServing     # noqa: E402
@@ -87,7 +99,22 @@ def main(argv=None):
     ap.add_argument("--reprovision", action="store_true",
                     help="JCS proactively launches a fresh pilot when a"
                          " site's walltime runway drops below projected"
-                         " demand (pair with --walltime)")
+                         " demand — sized from live queue backlog and"
+                         " capacity-starved pods too (pair with"
+                         " --walltime)")
+    ap.add_argument("--priority-class", default="standard",
+                    choices=["batch", "standard", "latency-critical",
+                             "system"],
+                    help="serving Deployment's initial QoS tier (the twin"
+                         " escalates to latency-critical under pressure)")
+    ap.add_argument("--quota", default="",
+                    help='fair-share quotas "owner[@site]:chips=N'
+                         '[:hbm_gb=G][:kv_pages=P],..." enforced as a'
+                         " scheduler filter stage")
+    ap.add_argument("--batch-load", type=int, default=0,
+                    help="mixed-workload mode: run this many preemptible"
+                         " batch pods (priority class batch, 1 chip each,"
+                         " checkpointable progress) next to serving")
     ap.add_argument("--no-runtime", action="store_true",
                     help="disable the slot-slab serving runtime (fall back"
                          " to the chunked prefill+decode path)")
@@ -185,6 +212,7 @@ def main(argv=None):
                           service_rate=mu_scaled,
                           use_twin=(args.controller == "twin"),
                           use_runtime=not args.no_runtime,
+                          priority_class=args.priority_class,
                           runtime_cfg=RuntimeConfig(
                               paged=args.paged,
                               page_size=args.page_size,
@@ -192,11 +220,35 @@ def main(argv=None):
                           source=source,
                           hpa=HPA(HPAConfig(target=8.0, max_replicas=
                                             serving.max_replicas(),
-                                            scale_down_stabilization=120.0)),
+                                            scale_down_stabilization=120.0,
+                                            occupancy_target=0.85)),
                           cluster=cluster, plane=plane)
+    # the chosen class is the twin policy's *resting* tier (otherwise the
+    # first calm control step would demote a user-chosen tier back to
+    # "standard"); a class at/above the escalation tier also becomes the
+    # escalation target so pressure never demotes it
+    engine.policy.prio_low = args.priority_class
+    if cluster.resolve_priority(args.priority_class).value >= \
+            cluster.resolve_priority(engine.policy.prio_high).value:
+        engine.policy.prio_high = args.priority_class
+    if args.quota:
+        for q in qos.parse_quotas(args.quota):
+            cluster.apply_quota(q, 0.0)
+            print(f"[qos] quota {q.owner}"
+                  f"{'@' + q.site if q.site else ''}: chips={q.chips} "
+                  f"hbm={q.hbm_bytes} kv_pages={q.kv_pages}")
     engine.deploy(0.0)
     print(f"[scheduler] {len(engine.pods)} serving pods bound; "
-          f"controller={args.controller}")
+          f"controller={args.controller} "
+          f"priority={args.priority_class}")
+
+    # ---- mixed-workload batch tenant (QoS preemption target) ----
+    batch = None
+    if args.batch_load:
+        batch = qos.BatchTenant(cluster, args.batch_load, now=0.0)
+        engine.reconcile(0.0)
+        print(f"[qos] batch tenant: {batch.bound}/{args.batch_load}"
+              f" preemptible pods bound")
 
     # ---- drive with the §6.2 pressure trajectory ----
     gt = ground_truth(args.ticks)
@@ -213,15 +265,22 @@ def main(argv=None):
         if args.reprovision:
             for pilot in jcs.reprovision(
                     cluster, now, horizon=args.walltime or 600.0,
-                    walltime=args.walltime or 600.0):
+                    walltime=args.walltime or 600.0,
+                    queue_backlog=len(engine.queue),
+                    # per-replica rate: backlog/rate is pod-seconds of
+                    # work, the same unit projected_demand sums
+                    service_rate=mu_scaled):
                 wf = fe.table[pilot.wf_id]
-                print(f"[jcs] t={t}: runway low at {wf.site} — reprovision"
+                print(f"[jcs] t={t}: demand high at {wf.site} — reprovision"
                       f" pilot {pilot.wf_id} ({len(pilot.nodes)} nodes)")
         for name, node in cluster.nodes.items():
             if node.site not in killed_sites:
                 cluster.heartbeat(name, now)
         fm.feed(cluster, now)
         engine.reconcile(now)          # controllers converge every tick
+        if batch is not None:
+            batch.advance()            # bound pods progress; resumed pods
+            #                            recover from their checkpoint
         qlen = engine.tick(now, args.dt, lam)
         if t % 2 == 1:
             engine.control_step(now)
@@ -264,6 +323,15 @@ def main(argv=None):
     for ev in cluster.events:
         trail[ev.reason] = trail.get(ev.reason, 0) + 1
     print(f"[events] {dict(sorted(trail.items()))}")
+    if batch is not None:
+        print(f"[qos] batch: {batch.bound}/{args.batch_load} bound at end, "
+              f"{trail.get('Preempted', 0)} preemptions, "
+              f"{trail.get('PriorityChanged', 0)} priority writes, "
+              f"{len(batch.resumed)} resumed from checkpoint, "
+              f"total progress={batch.total_progress}")
+        books = cluster.ledger.assert_balanced()
+        print(f"[qos] quota books: chips {books['chips_used']} used + "
+              f"{books['chips_free']} free == {books['chips_capacity']}")
     return engine
 
 

@@ -45,7 +45,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.cluster import Cluster, Deployment, PodTemplate
 from repro.core.controllers import ControlPlane
-from repro.core.hpa import HPA, HPAConfig, MetricSample
+from repro.core.hpa import HPA, HPAConfig, PressureSignals
 from repro.core.jrm import VirtualNode
 from repro.core.metrics import (Endpoint, Prometheus, Registry, Service,
                                 ServiceMonitor)
@@ -85,6 +85,7 @@ class StreamEngine:
     hpa: Optional[HPA] = None
     base_replicas: int = 1
     use_twin: bool = True
+    priority_class: str = "standard"  # serving Deployment's initial tier
     use_runtime: bool = True          # slot-slab runtime (when family allows)
     runtime_cfg: Optional[RuntimeConfig] = None
     history: list = field(default_factory=list)
@@ -93,6 +94,7 @@ class StreamEngine:
     plane: Optional[ControlPlane] = None
     total_served: int = 0
     total_tokens: int = 0
+    tokens_rate: float = 0.0          # tokens/s over the last tick (HPA signal)
     runtimes: Dict[str, DecodeRuntime] = field(default_factory=dict)
     _cp_ports: Dict[str, int] = field(default_factory=dict)
     _next_cp_port: int = 20000
@@ -144,6 +146,11 @@ class StreamEngine:
                     tolerations=[{"key": "virtual-kubelet.io/provider",
                                   "value": "mock"}],
                     request_chips=self.serving.tp,
+                    priority_class=self.priority_class,
+                    # declared KV footprint per replica: what the
+                    # kv_pages quota dimension charges at schedule time
+                    request_kv_pages=(self.runtime_cfg.n_pool_pages
+                                      if self.runtime_cfg.paged else 0),
                     checkpoint_state=self._replica_state)), now)
         else:
             self.cluster.scale(DEPLOYMENT, self.serving.replicas, now,
@@ -280,22 +287,46 @@ class StreamEngine:
         self._budget_frac += self.service_rate * dt
         budget = int(self._budget_frac)
         self._budget_frac -= budget
+        tokens_before = self.total_tokens
         for name in sorted(self.registries):
             reg = self.registries[name]
             n_take = min(len(self.queue), budget)
             took, self.queue = self.queue[:n_take], self.queue[n_take:]
+            rt = self.runtimes.get(name)
+            if rt is not None:
+                rt.reset_pressure()    # per-tick slab-pressure window
             self._process(took, name, now)
             reg.gauge("ersap_queue_len").set(len(self.queue))
             rt = self.runtimes.get(name)
-            if rt is not None and rt.kernels.rcfg.paged:
-                # paged-slab occupancy: live KV pages held by this replica
-                # (scraped with the §4.6 stack; the pool high-water mark is
-                # the capacity-planning signal for sizing pool_pages)
-                reg.gauge("ersap_kv_pages").set(rt.pages_in_use)
+            if rt is not None:
+                # slab pressure, both layouts: busy slots always (the
+                # dense path's only exhaustible resource), plus held KV
+                # pages when paged (pool high-water mark is the
+                # capacity-planning signal for sizing pool_pages). Both
+                # feed the HPA/twin memory-pressure input (slab_pressure)
+                # and scrape the per-tick *peak* — pump() runs to
+                # quiescence, so the instantaneous value here is 0.
+                reg.gauge("ersap_slab_slots_used").set(rt.peak_slots)
+                if rt.kernels.rcfg.paged:
+                    reg.gauge("ersap_kv_pages").set(rt.peak_pages)
+        self.tokens_rate = (self.total_tokens - tokens_before) / max(dt, 1e-9)
         self.prom.scrape(now)
         self.history.append((now, len(self.queue), self.serving.replicas,
                              self.control))
         return len(self.queue)
+
+    def slab_pressure(self) -> float:
+        """Mean per-replica slab occupancy in [0, 1] (paged: page-pool
+        share; dense: busy-slot share) — the memory-pressure signal the
+        multi-signal HPA and the twin's priority escalation consume.
+        The mean (not max) so the control loop converges: a scale-up
+        adds empty slabs and visibly lowers the signal, whereas one
+        pinned hot replica under a max would keep proposing more
+        replicas that cannot relieve it (its KV does not migrate)."""
+        if not self.runtimes:
+            return 0.0
+        return sum(rt.occupancy for rt in self.runtimes.values()) / \
+            len(self.runtimes)
 
     def _process(self, requests: List[Request], replica: str, now: float):
         """Serve ``requests`` on ``replica``: slot-slab continuous batching
@@ -359,25 +390,40 @@ class StreamEngine:
 
     # ---------------------------------------------------------- control
     def control_step(self, now: float):
-        """Assimilate queue depth into the twin; both the twin policy and
-        the reactive HPA are desired-replica *writers* on the Deployment —
-        the controllers/scheduler converge the pod set."""
+        """Assimilate queue depth into the twin; the twin policy and the
+        reactive HPA are *spec writers* on the Deployment — desired
+        replicas, and (twin path) the priority class, Fig. 8's control
+        regions extended to a (replicas, priority) action space. The
+        slab-pressure gauge feeds both: the multi-signal HPA as its
+        memory signal, the twin as a priority-escalation trigger. The
+        controllers/scheduler converge the pod set — escalated serving
+        preempts batch work instead of queueing behind it."""
         qlen = max(len(self.queue), 1e-3)
         self.twin.assimilate(qlen, self.control)
+        occupancy = self.slab_pressure()
+        pclass = None
         if self.use_twin:
-            self.control = self.policy.recommend(self.twin, self.control, now)
+            self.control, pclass = self.policy.recommend_action(
+                self.twin, self.control, now, occupancy=occupancy)
             desired = replicas_for_control(self.control, self.base_replicas)
             source = "digital-twin"
         else:
-            pods = self.pods
-            samples = {name: MetricSample(qlen / max(len(pods), 1), now)
-                       for name in pods}
-            desired = self.hpa.evaluate(list(pods.values()), samples, now)
+            sig = PressureSignals(queue_depth=len(self.queue),
+                                  tokens_per_s=self.tokens_rate,
+                                  slab_occupancy=occupancy)
+            desired = self.hpa.evaluate_signals(
+                max(len(self.pods), 1), sig, now)
             source = "hpa"
-        desired = max(1, min(desired, self.serving.max_replicas()))
-        if desired != self.serving.replicas:
+        # the Deployment spec may exceed the mesh's device budget (pods
+        # are simulated serving replicas; scale_to clamps the actual
+        # mesh build to max_replicas itself)
+        desired = max(1, desired)
+        if min(desired, self.serving.max_replicas()) != self.serving.replicas:
             self.serving.scale_to(desired, now)
         if self.cluster is not None and DEPLOYMENT in self.cluster.deployments:
+            if pclass is not None:
+                self.cluster.set_priority(DEPLOYMENT, pclass, now,
+                                          source=source)
             self.cluster.scale(DEPLOYMENT, desired, now, source=source)
             self.reconcile(now)
         return desired

@@ -341,6 +341,12 @@ class DecodeRuntime:
     # checkpointed with the slot table so restored rids replay exactly
     content: Dict[int, np.ndarray] = field(default_factory=dict)
     steps_dispatched: int = 0         # fused blocks run (for perf telemetry)
+    # pressure window: busy-slot / held-page peaks since the last
+    # ``reset_pressure`` — ``pump()`` runs to quiescence, so end-of-tick
+    # instantaneous readings would always be zero; the peak is what the
+    # slab actually had to absorb this tick
+    peak_slots: int = 0
+    peak_pages: int = 0
     record_tokens: bool = False       # keep per-request token ids (tests)
     token_log: Dict[int, list] = field(default_factory=dict)
 
@@ -381,6 +387,29 @@ class DecodeRuntime:
     @property
     def pages_in_use(self) -> int:
         return self.alloc.used_pages if self._paged else 0
+
+    @property
+    def slots_in_use(self) -> int:
+        """Busy slab slots (the dense-path pressure gauge,
+        ``ersap_slab_slots_used``)."""
+        return sum(s.busy for s in self.slots)
+
+    @property
+    def occupancy(self) -> float:
+        """Memory-pressure fraction in [0, 1] — the HPA / twin signal:
+        page-pool share when paged (HBM actually held), busy-slot share
+        on the dense slab (whose HBM is fixed; slots are what run out).
+        Peak over the current pressure window (see ``reset_pressure``)."""
+        if self._paged:
+            return max(self.pages_in_use, self.peak_pages) / \
+                max(self.alloc.pool_pages, 1)
+        return max(self.slots_in_use, self.peak_slots) / \
+            max(len(self.slots), 1)
+
+    def reset_pressure(self) -> None:
+        """Start a new pressure-measurement window (one engine tick)."""
+        self.peak_slots = self.slots_in_use
+        self.peak_pages = self.pages_in_use
 
     def _device_pages(self):
         """Mesh-committed page table, refreshed only when the host table
@@ -465,6 +494,7 @@ class DecodeRuntime:
                 if not group:
                     break
                 self.pages_hwm = max(self.pages_hwm, self.alloc.used_pages)
+                self.peak_pages = max(self.peak_pages, self.alloc.used_pages)
             taken = set(id(r) for r in group)
             self.pending = [r for r in self.pending if id(r) not in taken]
             take, free = free[:len(group)], free[len(group):]
@@ -527,6 +557,7 @@ class DecodeRuntime:
         for r, i in zip(reqs, slot_idx):
             self.slots[i] = _Slot(req=r, remaining=int(r.max_new), lb=lb,
                                   pages=tuple(pages.get(id(r), ())))
+        self.peak_slots = max(self.peak_slots, self.slots_in_use)
         if self.record_tokens:                  # first token (prefill argmax)
             first = np.asarray(self.tok)[:, 0]
             for r, i in zip(reqs, slot_idx):

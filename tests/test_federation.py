@@ -214,6 +214,67 @@ def test_jcs_reprovision_on_walltime_shortfall():
     assert rec.bound and cluster.nodes[rec.pod.node] in new
 
 
+def test_jcs_reprovision_sizes_from_starved_chip_concurrency():
+    """PR-3 follow-up: pilots are also sized by the chip demand of
+    capacity-starved pending pods — including fragmentation (aggregate
+    free chips cannot host a pod no single node fits) — while
+    quota-blocked pods never trigger one (a fair-share cap is not
+    helped by more nodes, even though its reject message names chips)."""
+    from repro.core.qos import Quota
+    fe = FrontEnd()
+    jcs = CentralService(fe)
+    # open-ended leases: walltime shortfall is never the trigger here
+    cluster = mkcluster({"nersc": 2}, chips=2, walltime=0.0)
+    sched = Scheduler(cluster)
+    # fragment the pool: one 1-chip pod per node leaves 1+1 free chips
+    for i in range(2):
+        cluster.submit(mkpod(f"frag{i}", chips=1), 0.0)
+    sched.run_once(0.0)
+    # a quota-blocked pod alone must not provision anything
+    cluster.apply_quota(Quota(owner="capped", chips=0), 1.0)
+    cluster.submit(mkpod("q0", chips=1), 1.0, owner="capped")
+    sched.run_once(1.0)
+    assert "quota" in cluster.pods["q0"].last_reason
+    assert jcs.reprovision(cluster, 2.0, horizon=600.0) == []
+    # a 2-chip pod fits neither node (2 free chips in aggregate, 1+1
+    # fragmented) -> the chip-concurrency path launches a pilot
+    big = cluster.submit(mkpod("big", chips=2), 3.0)
+    sched.run_once(3.0)
+    assert not big.bound and "chips" in big.last_reason
+    pilots = jcs.reprovision(cluster, 4.0, horizon=600.0, walltime=3600.0)
+    assert len(pilots) == 1 and len(pilots[0].nodes) == 1
+    cluster.heartbeat(pilots[0].nodes[0], 4.0)
+    sched.run_once(4.0 + sched.backoff_max)
+    assert big.bound and big.pod.node == pilots[0].nodes[0]
+    # self-limiting: demand met, next call is a no-op
+    assert jcs.reprovision(cluster, 5.0 + sched.backoff_max,
+                           horizon=600.0) == []
+    # a pod no replacement node could host either (request > slice size)
+    # must never trigger pilots — launching would repeat forever
+    huge = cluster.submit(mkpod("huge", chips=5), 100.0)
+    sched.run_once(100.0)
+    assert not huge.bound
+    assert jcs.reprovision(cluster, 101.0, horizon=600.0) == []
+    assert jcs.reprovision(cluster, 102.0, horizon=600.0) == []
+
+
+def test_jcs_reprovision_counts_queue_backlog():
+    """Live queue backlog converts to pod-seconds of serving demand: a
+    site whose runway covers its pods' declared durations still gets a
+    pilot when the backlog says the fleet is behind."""
+    fe = FrontEnd()
+    jcs = CentralService(fe)
+    cluster = mkcluster({"nersc": 1}, chips=4, walltime=300.0)
+    cluster.submit(mkpod("w0", chips=1), 0.0, expected_duration=100.0)
+    cluster.assign("w0", "nersc0", 0.0)
+    # runway 240 covers the 100s of declared work...
+    assert jcs.reprovision(cluster, 0.0, horizon=600.0) == []
+    # ...but not 100s + a 600-request backlog at 2 req/s (300s more)
+    pilots = jcs.reprovision(cluster, 0.0, horizon=600.0, walltime=3600.0,
+                             queue_backlog=600, service_rate=2.0)
+    assert len(pilots) == 1
+
+
 # ---------------------------------------------------- batch site drain
 
 def test_drain_allocation_is_one_wave():
