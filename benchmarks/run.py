@@ -18,6 +18,8 @@ root so the perf trajectory is tracked across PRs.
   QoS        -> bench_priority_spike (twin (replicas, priority) writes,
                 batch preemption + resume, quota books balance)
   serving    -> bench_serving_throughput (slot-slab runtime vs chunked)
+             -> bench_paged_decode (paged KV slab vs dense slab)
+             -> bench_prefix_reuse (prefix-sharing admission + spec decode)
   kernels    -> bench_kernel_* (interpret-mode Pallas vs jnp oracle)
   dry-run    -> bench_roofline (reads experiments/dryrun)
 
@@ -672,6 +674,152 @@ def bench_paged_decode():
         f"pages_hwm={res['paged_wide']['pages_hwm']}")
 
 
+def bench_prefix_reuse():
+    """Prefix-sharing admission + multi-token speculative decode vs the
+    PR-4 paged baseline, two phases on one model build:
+
+    Phase 1 (admission): an 80%-shared request mix — four prompt template
+    groups plus 20% unique prompts — against a warm prefix cache (one
+    long-lived paver per group holds the interned pages live, the serving
+    posture for system-prompt traffic). With ``prefix_cache`` on, every
+    grouped admission is a splice (host page-table write + refcount++ +
+    one device stamp, zero prefill FLOPs) and only the unique 20% prefill;
+    off is PR-4: every admission prefills its full prompt.
+    ``admit_speedup`` times the admission dispatch sequence alone (the
+    slab holds the whole mix, so no decode blocks ride along);
+    ``pages_hwm`` drops because grouped rows share their prompt pages.
+
+    Phase 2 (speculative decode): replay traffic — one paver streams a
+    prompt to completion, then a batch of identical requests is served
+    again (greedy decode is deterministic, so the drafter replays the
+    paver's stream near-perfectly). ``spec_speedup`` = k-token verify
+    dispatches (spec_decode=k) vs the ISSUE baseline of one token per
+    dispatch (decode_block=1). Tokens are byte-identical either way —
+    the accept-prefix rule only changes dispatch count, never content.
+
+    Both phases warm up with the *same request ids* they then measure:
+    identical content => identical acceptance trajectories => identical
+    dispatch shapes, so the measured pass is fully trace-cached.
+    Persists into BENCH_serving.json; --check floors admit_speedup and
+    spec_speedup."""
+    import jax
+    from repro.configs.base import get_config
+    from repro.core.elastic import ElasticServing
+    from repro.data.pipeline import Request
+    from repro.kernels import ops as OPS
+    from repro.models import model_api as MA
+    from repro.streaming.runtime import DecodeRuntime, RuntimeConfig
+
+    cfg = get_config("qwen2-7b").reduced()
+    mod = MA.get_module(cfg)
+    host = jax.tree.map(np.asarray, mod.init(jax.random.PRNGKey(0), cfg))
+    serving = ElasticServing(cfg, tp=1).build(1, host_params=host)
+    n_req = 40 if FAST else 80
+    plen, n_groups = 64, 4
+    plen_a = 128                  # admission-phase prompts (prefill-heavy)
+
+    def admit_set():
+        # 80% of requests carry a template group's full prompt; i%5==0
+        # stays unique. max_new=2 keeps the phase admission-dominated.
+        return [Request(i + 1, 0.0, plen_a, 2,
+                        prefix_group=0 if i % 5 == 0 else i % n_groups + 1,
+                        prefix_len=0 if i % 5 == 0 else plen_a)
+                for i in range(n_req)]
+
+    def pavers():
+        # one long-lived holder per template keeps its interned prompt
+        # pages referenced (and so cached) across the measured admission
+        return [Request(10_000 + g, 0.0, plen_a, 24,
+                        prefix_group=g, prefix_len=plen_a)
+                for g in range(1, n_groups + 1)]
+
+    def run_admit(prefix_cache):
+        # slab sized to hold the whole mix at once: the timed region is
+        # the admission dispatch sequence alone (prefill vs splice), no
+        # decode blocks riding in the measurement
+        rcfg = RuntimeConfig(paged=True, page_size=16,
+                             max_batch=n_req + n_groups,
+                             max_prompt_bucket=plen_a,
+                             admit_tail=0, prefix_cache=prefix_cache)
+        rt = DecodeRuntime(serving.runtime_kernels(rcfg), serving.params,
+                           gen=serving.build_gen)
+
+        def one_pass():
+            rt.submit(pavers())
+            rt.step()                      # admit the template holders
+            rt.submit(admit_set())
+            t0 = time.perf_counter()
+            rt._admit_some()
+            dt = time.perf_counter() - t0
+            assert not rt.pending and rt.inflight == n_req + n_groups
+            while rt.inflight:             # drain everything untimed
+                rt.step()
+            return dt
+
+        cold = one_pass()
+        warm = min(one_pass() for _ in range(5 if FAST else 3))
+        return {"cold_s": round(cold, 4), "s": round(warm, 4),
+                "admit_tok_per_s": round(n_req * plen_a / warm, 1),
+                "pages_hwm": rt.pages_hwm,
+                "prefix_hits": rt.prefix_hits,
+                "prefix_lookups": rt.prefix_lookups,
+                "traces": dict(rt.kernels.trace_counts),
+                "trace_bound": rt.kernels.max_traces}
+
+    def run_spec(k):
+        rcfg = RuntimeConfig(paged=True, page_size=16, max_batch=8,
+                             admit_tail=0, spec_decode=k,
+                             decode_block=1 if k == 0 else 16)
+        rt = DecodeRuntime(serving.runtime_kernels(rcfg), serving.params,
+                           gen=serving.build_gen)
+        dep = 32 if FAST else 64
+
+        def replay(rid0):
+            return [Request(rid0 + j, 0.0, plen, dep,
+                            prefix_group=1, prefix_len=plen)
+                    for j in range(8)]
+
+        rt.submit([Request(1, 0.0, plen, dep,
+                           prefix_group=1, prefix_len=plen)])
+        rt.pump()                          # pave the stream (untimed)
+        rt.submit(replay(2))
+        rt.pump()                          # warm: same rids as measured
+        rt.submit(replay(2))
+        t0 = time.perf_counter()
+        done = rt.pump()
+        dt = time.perf_counter() - t0
+        assert len(done) == 8
+        out = {"s": round(dt, 4),
+               "tok_per_s": round(8 * dep / dt, 1),
+               "traces": dict(rt.kernels.trace_counts)}
+        if k:
+            out["accept_rate"] = round(rt.spec_accept_rate, 3)
+            out["rounds"] = rt.spec_rounds
+        return out
+
+    on, off = run_admit(True), run_admit(False)
+    admit_speedup = off["s"] / on["s"]
+    spec, base = run_spec(3), run_spec(0)
+    spec_speedup = base["s"] / spec["s"]
+    report = {"name": "prefix_reuse", "arch": f"{cfg.name}.reduced",
+              "requests": n_req, "fast": FAST,
+              "kernel_mode": OPS.resolved_mode(),
+              "prefix_on": on, "prefix_off": off,
+              "admit_speedup": round(admit_speedup, 2),
+              "spec_k3": spec, "one_token": base,
+              "spec_speedup": round(spec_speedup, 2)}
+    write_serving("prefix_reuse", report)
+    row("prefix_reuse", on["s"] * 1e6,
+        f"admit_speedup={admit_speedup:.2f};"
+        f"admit_tok_per_s={on['admit_tok_per_s']};"
+        f"baseline_admit_tok_per_s={off['admit_tok_per_s']};"
+        f"hit_rate={on['prefix_hits'] / max(on['prefix_lookups'], 1):.2f};"
+        f"pages_hwm={on['pages_hwm']};baseline_pages_hwm={off['pages_hwm']};"
+        f"spec_speedup={spec_speedup:.2f};"
+        f"spec_accept_rate={spec['accept_rate']};"
+        f"kernel_mode={report['kernel_mode']}")
+
+
 # ---------------------------------------------------------------- kernels
 
 def bench_kernel_flash_attention():
@@ -778,9 +926,12 @@ def bench_roofline():
         frac = r.get("useful_flops_ratio", 0.0)
         if f.parent.name == "pod" and (worst is None or frac < worst[1]):
             worst = (f"{r['arch']}x{r['shape']}", frac)
+    from repro.kernels import ops as OPS
     derived = f"status=ok;cells_ok={n_ok};cells_err={n_err}"
     if worst:
         derived += f";worst_useful_flops={worst[0]}:{worst[1]:.3f}"
+    # self-describing record: which kernel dispatch produced these numbers
+    derived += f";kernel_mode={OPS.resolved_mode()}"
     row("roofline_dryrun_summary", 0.0, derived)
 
 
@@ -791,23 +942,30 @@ BENCHES = [
     bench_dbn_tracking, bench_dbn_control,
     bench_deployment_40, bench_control_plane_churn, bench_federation_churn,
     bench_priority_spike,
-    bench_serving_throughput, bench_paged_decode,
+    bench_serving_throughput, bench_paged_decode, bench_prefix_reuse,
     bench_kernel_flash_attention, bench_kernel_mlstm, bench_kernel_ssm,
     bench_kernel_decode_attention,
     bench_roofline,
 ]
 
 # ratio metrics guarded by --check: machine-independent speedups measured
-# within one process, so a CI runner's absolute speed does not matter
+# within one process, so a CI runner's absolute speed does not matter.
+# key -> (report name in BENCH_serving.json, metric field, description)
 CHECK_METRICS = {
-    "serving_throughput": ("speedup", "slot-slab runtime vs chunked path"),
-    "paged_decode": ("speedup", "paged KV slab vs dense slab (equal HBM)"),
+    "serving_throughput": ("serving_throughput", "speedup",
+                           "slot-slab runtime vs chunked path"),
+    "paged_decode": ("paged_decode", "speedup",
+                     "paged KV slab vs dense slab (equal HBM)"),
+    "prefix_admit": ("prefix_reuse", "admit_speedup",
+                     "prefix-cache admission vs PR-4 paged admission"),
+    "spec_decode": ("prefix_reuse", "spec_speedup",
+                    "k-token speculative decode vs 1-token-per-dispatch"),
 }
 
 
 def _check_ratios(report):
-    return {key: report[key][metric] for key, (metric, _) in
-            CHECK_METRICS.items() if key in report}
+    return {key: report[rkey][metric] for key, (rkey, metric, _) in
+            CHECK_METRICS.items() if rkey in report}
 
 
 def run_check(tol: float, record: bool) -> int:
@@ -842,6 +1000,7 @@ def run_check(tol: float, record: bool) -> int:
     def smoke():
         bench_serving_throughput()
         bench_paged_decode()
+        bench_prefix_reuse()
         return json.loads((JSON_DIR / "BENCH_serving.json").read_text())
 
     def evaluate(ratios, baseline):
@@ -851,13 +1010,19 @@ def run_check(tol: float, record: bool) -> int:
         if ratios.get("paged_decode", 0.0) < 1.2:
             failures.append(f"paged decode speedup "
                             f"{ratios.get('paged_decode')} < 1.2x smoke floor")
+        if ratios.get("prefix_admit", 0.0) < 3.0:
+            failures.append(f"prefix-cache admission speedup "
+                            f"{ratios.get('prefix_admit')} < 3.0x floor")
+        if ratios.get("spec_decode", 0.0) < 1.3:
+            failures.append(f"speculative decode speedup "
+                            f"{ratios.get('spec_decode')} < 1.3x floor")
         for key, got in sorted(ratios.items()):
             base = baseline.get(key)
             if base is not None and (base - got) / base > tol:
                 failures.append(
                     f"{key}: speedup {got} regressed >"
                     f"{tol * 100:.0f}% from committed baseline {base} "
-                    f"({CHECK_METRICS[key][1]})")
+                    f"({CHECK_METRICS[key][2]})")
         return failures
 
     fresh = smoke()

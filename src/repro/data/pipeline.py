@@ -75,6 +75,12 @@ class Request:
     arrival: float
     prompt_len: int
     max_new: int
+    # shared-prefix identity: requests with the same (prefix_group > 0,
+    # prefix_len > 0) mint identical first ``prefix_len`` prompt tokens —
+    # the multi-tenant system-prompt / few-shot-template traffic shape the
+    # prefix cache exploits. 0/0 keeps fully independent prompts.
+    prefix_group: int = 0
+    prefix_len: int = 0
 
 
 @dataclass
@@ -89,6 +95,12 @@ class RequestSource:
     rid: int = 0
     prompt_range: tuple = None        # e.g. (8, 48)
     max_new_range: tuple = None       # e.g. (2, 16)
+    # shared-prefix traffic shaping: with probability ``prefix_share`` a
+    # request joins one of ``prefix_groups`` template groups and its first
+    # ``prefix_len`` tokens are the group's common prefix
+    prefix_share: float = 0.0
+    prefix_len: int = 0
+    prefix_groups: int = 1
 
     def __post_init__(self):
         self.rng = np.random.default_rng(self.seed)
@@ -105,6 +117,11 @@ class RequestSource:
             mnew = max_new if self.max_new_range is None else \
                 int(self.rng.integers(self.max_new_range[0],
                                       self.max_new_range[1] + 1))
+            grp, pfx = 0, 0
+            if (self.prefix_share > 0 and self.prefix_len > 0
+                    and self.rng.random() < self.prefix_share):
+                grp = 1 + int(self.rng.integers(self.prefix_groups))
+                pfx = min(self.prefix_len, plen)
             out.append(Request(self.rid, now + self.rng.uniform(0, dt),
-                               plen, mnew))
+                               plen, mnew, prefix_group=grp, prefix_len=pfx))
         return out

@@ -125,6 +125,42 @@ def decode_attention_paged(q, k_pool, v_pool, pages, lengths, *, kv_bucket,
                             chunk=chunk, softcap=softcap, block_skip=skip)
 
 
+def window_attention_paged(q, k_pool, v_pool, pages, pos, *, kv_bucket,
+                           page_size, window=None, chunk=None, softcap=0.0):
+    """W-token decode-window attention for the paged layout.
+
+    q: (B,W,Hq,dh) — W consecutive new positions per row, whose KV the
+    caller already scattered into the pool at positions pos..pos+W-1;
+    pos: (B,) each row's first new position. Serves the prefix-cache tail
+    prefill and the speculative-decode verify dispatch.
+
+    pallas mode: W calls of the untouched 1-token paged kernel, one per
+    window offset (offset w attends through pos+w) — the kernel's
+    page-table indirection already covers the freshly written entries.
+    jnp mode: one page gather + blockwise attention with per-offset
+    causal masking over the kv_bucket.
+    """
+    if resolved_mode() == "pallas" and not softcap:
+        W = q.shape[1]
+        outs = [paged_decode_attention_kernel(
+                    q[:, w], k_pool, v_pool, pages, pos + w + 1,
+                    window=window, chunk=chunk, interpret=_interpret())
+                for w in range(W)]
+        return jnp.stack(outs, axis=1)
+    from repro.models.attention import blockwise_attention
+    B, W = q.shape[:2]
+    npg = kv_bucket // page_size
+    pid = pages[:, :npg]                                   # (B, npg)
+    kb = k_pool[pid].reshape(B, kv_bucket, *k_pool.shape[2:])
+    vb = v_pool[pid].reshape(B, kv_bucket, *v_pool.shape[2:])
+    q_pos = pos[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]
+    kv_pos = jnp.broadcast_to(
+        jnp.arange(kv_bucket, dtype=jnp.int32)[None, :], (B, kv_bucket))
+    return blockwise_attention(q, kb, vb, causal=True, window=window,
+                               chunk=chunk, q_positions=q_pos,
+                               kv_positions=kv_pos, softcap=softcap)
+
+
 # --------------------------------------------------------- jit'd kernel entry
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "chunk",

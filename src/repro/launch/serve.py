@@ -31,6 +31,12 @@ victims checkpoint, requeue, and resume when the spike passes.
 ``--priority-class`` sets serving's initial tier; ``--quota`` applies
 fair-share caps (e.g. ``"ersap:chips=8,batch:chips=6"``).
 
+Paged-slab extras: ``--prefix-cache`` turns on reference-counted
+prefix-sharing admission (matching prompts splice onto in-flight pages,
+copy-on-write on divergence); ``--spec-decode K`` drafts K tokens per
+row and verifies them in one (K+1)-wide dispatch. Both require
+``--paged``; end-of-run stats report hit and accept rates.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-7b --devices 8 \
       --tp 2 --nodes 4 --ticks 80 [--controller hpa] [--walltime 300] \
@@ -137,7 +143,27 @@ def main(argv=None):
     ap.add_argument("--pool-pages", type=int, default=0,
                     help="physical KV pages per replica (0 = enough for"
                          " max_batch full-capacity requests)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="prefix-sharing admission for the paged slab:"
+                         " prompts whose page-aligned prefix matches an"
+                         " in-flight request splice onto the existing pages"
+                         " (refcounted, copy-on-write) instead of re-running"
+                         " prefill — requires --paged")
+    ap.add_argument("--spec-decode", type=int, default=0, metavar="K",
+                    help="multi-token speculative decode: draft K tokens per"
+                         " row and verify them in one (K+1)-wide paged"
+                         " dispatch (greedy accept-prefix, token-identical"
+                         " to one-at-a-time) — requires --paged")
+    ap.add_argument("--prefix-share", type=float, default=0.0,
+                    help="traffic shaping: fraction of requests that join a"
+                         " shared-prefix template group (makes"
+                         " --prefix-cache hits visible from the driver)")
     args = ap.parse_args(argv)
+    if (args.prefix_cache or args.spec_decode) and not args.paged:
+        ap.error("--prefix-cache/--spec-decode require --paged (they are"
+                 " page-table features of the paged KV slab)")
+    if args.spec_decode < 0:
+        ap.error("--spec-decode must be >= 0")
     if args.kill_site:
         if not (0 <= args.kill_tick < args.ticks):
             ap.error("--kill-site needs --kill-tick in [0, --ticks)")
@@ -153,7 +179,10 @@ def main(argv=None):
     OPS.set_kernel_mode(args.kernel_mode)
     print(f"[kernels] mode={args.kernel_mode} "
           f"(resolved {OPS.resolved_mode()}; backend={jax.default_backend()}"
-          f"{'' if OPS.on_tpu() else ', pallas would run interpreted'})")
+          f"{'' if OPS.on_tpu() else ', pallas would run interpreted'}); "
+          f"paged={'on' if args.paged else 'off'} "
+          f"prefix_cache={'on' if args.prefix_cache else 'off'} "
+          f"spec_decode={args.spec_decode or 'off'}")
 
     # ---- JIRIAF control plane bring-up (paper §3 component flow) ----
     fe = FrontEnd()
@@ -204,9 +233,16 @@ def main(argv=None):
     # one replica is near-critical at high pressure (M/M/1 analog) and the
     # twin's 2x escalation actually drains the queue.
     mu_scaled = 167.0 * args.lam_scale
-    source = RequestSource()
+    src_kw = {}
+    if args.prefix_share > 0:
+        # share at least one full page so hits splice real KV, not just
+        # the intern-table bookkeeping
+        src_kw = dict(prefix_share=args.prefix_share,
+                      prefix_len=args.page_size, prefix_groups=4)
+    source = RequestSource(**src_kw)
     if args.vary_shapes:
-        source = RequestSource(prompt_range=(8, 48), max_new_range=(2, 16))
+        source = RequestSource(prompt_range=(8, 48), max_new_range=(2, 16),
+                               **src_kw)
     from repro.streaming.runtime import RuntimeConfig
     engine = StreamEngine(cfg, serving, nodes,
                           service_rate=mu_scaled,
@@ -216,7 +252,12 @@ def main(argv=None):
                           runtime_cfg=RuntimeConfig(
                               paged=args.paged,
                               page_size=args.page_size,
-                              pool_pages=args.pool_pages),
+                              pool_pages=args.pool_pages,
+                              prefix_cache=args.prefix_cache,
+                              spec_decode=args.spec_decode,
+                              # spec acceptance is resolved per round on the
+                              # host; the fused admission tail would race it
+                              admit_tail=0 if args.spec_decode else 4),
                           source=source,
                           hpa=HPA(HPAConfig(target=8.0, max_replicas=
                                             serving.max_replicas(),
@@ -312,6 +353,24 @@ def main(argv=None):
                   f"high-water={hwm} pages "
                   f"({hwm * rc.page_size} KV entries vs "
                   f"{(rc.max_batch + 1) * rc.capacity} dense)")
+            if rc.prefix_cache:
+                hits = sum(r.prefix_hits for r in engine.runtimes.values())
+                looks = sum(r.prefix_lookups
+                            for r in engine.runtimes.values())
+                cows = sum(r.cow_events for r in engine.runtimes.values())
+                print(f"[runtime] prefix cache: {hits}/{looks} admission "
+                      f"hits; {cows} copy-on-write events; "
+                      f"traces splice={tc['splice']} window={tc['window']} "
+                      f"cow={tc['cow']}")
+            if rc.spec_decode:
+                drafted = sum(r.spec_drafted
+                              for r in engine.runtimes.values())
+                accepted = sum(r.spec_accepted
+                               for r in engine.runtimes.values())
+                rate = accepted / max(drafted, 1)
+                print(f"[runtime] speculative decode: k={rc.spec_decode} "
+                      f"drafted={drafted} accepted={accepted} "
+                      f"(accept rate {rate:.2f})")
     if len(cluster.site_names()) > 1:
         per_site = {}
         for pod in engine.pods.values():

@@ -272,6 +272,22 @@ def fused_decode(params, tok, cache, active, remaining, cfg: ArchConfig,
     return tok, cache, active, remaining, toks
 
 
+def decode_window(params, tokens, cache, cfg: ArchConfig, ctx=None, *,
+                  pages, pos, kv_bucket):
+    """Multi-token decode window (paged transformer slab only): write KV
+    for all W tokens at positions pos..pos+W-1 and return per-offset
+    logits ((B, W, V)) without advancing cache positions. Two serving
+    users share it: the prefix-cache tail prefill (argmax of the last
+    offset seeds decode) and the speculative-decode verify dispatch (all
+    offsets decide acceptance host-side). Requires ``supports_slots``;
+    the trace key is (batch bucket, W, kv_bucket), so distinct window
+    widths stay within the bucketed-compilation budget
+    (``RuntimeKernels.max_traces``)."""
+    mod = get_module(cfg)
+    return mod.decode_window(params, tokens, cache, cfg, ctx, pages=pages,
+                             pos=pos, kv_bucket=kv_bucket)
+
+
 # --------------------------------------------------------------- metadata
 
 def param_count(cfg: ArchConfig) -> int:

@@ -472,3 +472,73 @@ def decode_step(params, token, cache, cfg: ArchConfig, ctx=None,
     if ctx is not None:
         logits = ctx.constrain(logits, "batch", "vocab")
     return logits, new_cache
+
+
+def decode_window(params, tokens, cache, cfg: ArchConfig, ctx=None, *,
+                  pages, pos, kv_bucket):
+    """W-token decode window over the paged cache. tokens: (B, W) int32;
+    pos: (B,) each row's first new position. Writes KV for all W tokens at
+    positions pos..pos+W-1 and returns logits at every offset ((B, W, V))
+    — the prefix-cache tail prefill reads only the last offset's argmax,
+    the speculative verify step reads all of them to decide acceptance.
+    ``cache["pos"]`` is deliberately NOT advanced: the caller owns
+    position state (a verify dispatch may reject most of the window).
+    Write targets must be CoW-private (the runtime copies shared pages
+    first); pad rows point at null page 0, written but never read."""
+    B, W = tokens.shape
+    pages = jnp.asarray(pages, jnp.int32)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    positions = pos_b[:, None] + jnp.arange(W, dtype=jnp.int32)[None, :]
+    x = L.embed_lookup(params["embed"], tokens).astype(cfg.jdtype)
+
+    new_cache = {"pos": cache["pos"]}
+
+    def run(stacked, kc, vc, use_moe):
+        nonlocal x
+        page_size = kc.shape[2]
+        lp = positions // page_size                     # (B, W) logical page
+        off = positions % page_size
+        phys = jnp.take_along_axis(pages, lp, axis=1)   # (B, W) physical
+
+        def step(carry, xs):
+            xx = carry
+            blk, k_l, v_l = xs
+            h = L.rms_norm(xx, blk["ln1"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dq->bsq", h, blk["wq"].astype(h.dtype))
+            if cfg.qkv_bias:
+                q = q + blk["bq"].astype(h.dtype)
+            q = q.reshape(B, W, cfg.n_heads, cfg.head_dim)
+            q = L.apply_rope(q, positions, cfg.rope_theta)
+            k, v = _kv_proj(h, blk, cfg, positions)
+            k_l = k_l.at[phys, off].set(k.astype(k_l.dtype))
+            v_l = v_l.at[phys, off].set(v.astype(v_l.dtype))
+            out = OPS.window_attention_paged(
+                q, k_l, v_l, pages, pos_b, kv_bucket=kv_bucket,
+                page_size=page_size, window=cfg.sliding_window,
+                chunk=cfg.attn_chunk, softcap=cfg.logit_softcap)
+            out = out.reshape(B, W, cfg.q_dim)
+            xx = xx + jnp.einsum("bsq,qd->bsd", out, blk["wo"].astype(h.dtype))
+            h2 = L.rms_norm(xx, blk["ln2"], cfg.norm_eps)
+            if use_moe:
+                ff, _ = M.moe_ffn(h2, blk["moe"], cfg, ctx)
+            else:
+                ff = L.mlp_apply(h2, blk["w_up"], blk["w_down"], cfg.mlp)
+            xx = xx + ff
+            return xx, (k_l, v_l)
+
+        x, (ks, vs) = jax.lax.scan(step, x, (stacked, kc, vc))
+        return {"k": ks, "v": vs}
+
+    if "dense_layers" in params:
+        new_cache["dense"] = run(params["dense_layers"], cache["dense"]["k"],
+                                 cache["dense"]["v"], False)
+    if "moe_layers" in params:
+        new_cache["moe"] = run(params["moe_layers"], cache["moe"]["k"],
+                               cache["moe"]["v"], True)
+
+    xl = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    lm_head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", xl, lm_head.astype(xl.dtype))
+    if ctx is not None:
+        logits = ctx.constrain(logits, "batch", None, "vocab")
+    return logits, new_cache

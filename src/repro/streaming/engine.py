@@ -309,6 +309,18 @@ class StreamEngine:
                 reg.gauge("ersap_slab_slots_used").set(rt.peak_slots)
                 if rt.kernels.rcfg.paged:
                     reg.gauge("ersap_kv_pages").set(rt.peak_pages)
+                # prefix-cache / speculative-decode effectiveness gauges
+                # (cumulative hit count + live shared pages; accept rate
+                # over all drafts so far) — scraped alongside pool
+                # occupancy so capacity dashboards see both how much HBM
+                # sharing is saving and how much verify bandwidth the
+                # drafter converts into emitted tokens
+                if rt.kernels.rcfg.prefix_cache:
+                    reg.gauge("ersap_prefix_hits").set(rt.prefix_hits)
+                    reg.gauge("ersap_shared_pages").set(rt.shared_pages)
+                if rt.kernels.rcfg.spec_decode:
+                    reg.gauge("ersap_spec_accept_rate").set(
+                        rt.spec_accept_rate)
         self.tokens_rate = (self.total_tokens - tokens_before) / max(dt, 1e-9)
         self.prom.scrape(now)
         self.history.append((now, len(self.queue), self.serving.replicas,
