@@ -17,6 +17,9 @@ root so the perf trajectory is tracked across PRs.
   §1/§4      -> bench_federation_churn (full-site kill, cross-site failover)
   QoS        -> bench_priority_spike (twin (replicas, priority) writes,
                 batch preemption + resume, quota books balance)
+  chaos      -> bench_chaos_soak (seeded fault storm vs fault-free
+                oracle: zero loss, token-identical recovery, epoch
+                fencing, balanced books every tick)
   serving    -> bench_serving_throughput (slot-slab runtime vs chunked)
              -> bench_paged_decode (paged KV slab vs dense slab)
              -> bench_prefix_reuse (prefix-sharing admission + spec decode)
@@ -492,6 +495,158 @@ def bench_priority_spike():
         f"priority_writes={escalated};quota_balanced=1")
 
 
+# ------------------------------------------------------------ chaos soak
+
+def bench_chaos_soak():
+    """Serving + batch mix under a seeded fault storm (all six fault
+    kinds: flap, straggler, partition, checkpoint corruption, walltime
+    cut, crash) vs a fault-free oracle run over the identical workload.
+
+    Asserts the robustness acceptance criteria: zero request loss and
+    exactly-once completion; every token any replica incarnation emitted
+    is a prefix of the oracle's stream for that rid (deterministic prompt
+    replay — no divergence, no double emission); the partitioned node's
+    stale replica is epoch-fenced on rejoin; quota-ledger, page-allocator
+    and rid books balance on *every* tick (InvariantAuditor); batch
+    progress rolls back at most the background-checkpoint interval; and
+    service recovery latency after any fault stays bounded. The chaos
+    side runs under two storm seeds so wildcard targeting cannot
+    overfit one lucky draw."""
+    import tempfile
+
+    import jax
+    from repro.configs.base import get_config
+    from repro.core.chaos import FaultInjector, FaultSpec, InvariantAuditor
+    from repro.core.cluster import Cluster
+    from repro.core.controllers import ControlPlane
+    from repro.core.elastic import ElasticServing
+    from repro.core.jrm import SliceSpec, start_vk
+    from repro.core.qos import BatchTenant
+    from repro.models import model_api as MA
+    from repro.streaming.engine import StreamEngine
+    from repro.streaming.runtime import RuntimeConfig
+
+    cfg = get_config("qwen2-7b").reduced()
+    mod = MA.get_module(cfg)
+    host = jax.tree.map(np.asarray, mod.init(jax.random.PRNGKey(0), cfg))
+    serving = ElasticServing(cfg, tp=1).build(1, host_params=host)
+
+    dt = 10.0
+    ticks = 36 if FAST else 56
+    drain = 10
+    recovery_bound_s = 60.0          # stale_after (30) + detection slack
+    rollback_bound = 6               # progress units vs bg interval of 1
+
+    def run_side(schedule, seed):
+        cluster = Cluster()
+        for i in range(5):
+            cluster.register_node(
+                start_vk(f"n{i}", nodetype="tpu", now=0.0,
+                         slice_spec=SliceSpec(chips=2)), 0.0)
+            cluster.heartbeat(f"n{i}", 0.0)
+        plane = ControlPlane(cluster)
+        ckpt_root = tempfile.mkdtemp(prefix="chaos-soak-")
+        plane.nodes.ckpt_dir = ckpt_root
+        plane.nodes.bg_checkpoint_every = dt
+        plane.nodes.drain_pods_per_tick = 1
+        eng = StreamEngine(cfg, serving, list(cluster.nodes.values()),
+                           service_rate=4.0, max_batch=4,
+                           cluster=cluster, plane=plane, record_tokens=True,
+                           runtime_cfg=RuntimeConfig(max_batch=4,
+                                                     admit_tail=0))
+        eng.deploy(0.0)
+        cluster.scale("ersap", 2, 0.0, source="bench")
+        eng.reconcile(0.0)
+        assert len(eng.pods) == 2
+        batch = BatchTenant(cluster, 3, priority_class="batch")
+        eng.reconcile(0.0)
+        assert batch.bound == 3
+        # the partition must sever a live serving replica so the
+        # fence path is exercised, not just the wildcard lottery
+        victim = sorted(p.node for p in eng.pods.values())[0]
+        inj = FaultInjector(
+            [FaultSpec("partition", 100.0, victim, duration=100.0)]
+            + list(schedule), seed=seed, ckpt_dir=ckpt_root
+        ) if schedule is not None else FaultInjector([], seed=seed)
+        aud = InvariantAuditor(cluster, engine=eng)
+        seen_rts, gap, worst_gap = {}, 0, 0
+        for t in range(ticks + drain):
+            now = t * dt
+            inj.apply(cluster, now)
+            eng.reconcile(now)
+            batch.advance()
+            eng.tick(now, dt, lam=0.8 if t < ticks else 0.0)
+            for rt in eng.runtimes.values():
+                seen_rts[id(rt)] = rt
+            aud.audit(now)
+            healthy = sum(
+                1 for p in eng.pods.values()
+                if cluster.node_status[p.node].reachable
+                and cluster.node_status[p.node].ready)
+            gap = gap + 1 if healthy < 2 else 0
+            worst_gap = max(worst_gap, gap)
+        return eng, batch, aud, seen_rts, worst_gap * dt
+
+    storm = ["flap:*@40+20", "straggler:*@60+40x6", "ckpt_corrupt:*@230",
+             "walltime_cut:*@240x10", "crash:*@300"]
+
+    # fault-free oracle: the reference token streams + workload totals
+    oracle, _, _, o_rts, _ = run_side(None, seed=0)
+    assert len(oracle.completed) == oracle.source.rid > 0
+    o_logs = {}
+    for rt in o_rts.values():
+        for rid, log in rt.token_log.items():
+            o_logs[rid] = list(log)
+
+    t0 = time.perf_counter()
+    worst_recovery, fenced_total, restored_total, compared = 0.0, 0, 0, 0
+    max_rollback = 0
+    for seed in (0, 1):
+        eng, batch, aud, rts, recovery_s = run_side(storm, seed)
+        cluster = eng.cluster
+        # zero loss, exactly-once (the auditor also checked every tick)
+        assert eng.source.rid == oracle.source.rid
+        done = [rid for rid, _ in eng.completed]
+        lost = eng.source.rid - len(done)
+        assert lost == 0, f"seed {seed}: {lost} requests lost"
+        assert len(set(done)) == len(done), f"seed {seed}: duplicates"
+        assert not eng.queue
+        assert aud.checks == ticks + drain
+        # epoch fence: severed replica fenced on rejoin, floor consumed
+        fenced = [e for e in cluster.events if e.reason == "Fenced"]
+        assert fenced, f"seed {seed}: partition rejoin never fenced"
+        assert cluster.fence_epochs == {}
+        fenced_total += len(fenced)
+        restored_total += sum(1 for e in cluster.events
+                              if e.reason == "CrashRestored")
+        # token identity vs the oracle (prefix replay, never divergence)
+        for rt in rts.values():
+            for rid, log in rt.token_log.items():
+                assert rid in o_logs
+                assert list(log) == o_logs[rid][:len(log)], \
+                    f"seed {seed}: rid {rid} diverged from oracle"
+                compared += 1
+        # batch survived the storm; rollback bounded by the bg interval
+        assert batch.bound == 3, f"seed {seed}: batch pods lost"
+        for name, got, exp in batch.mismatches:
+            assert 0 <= exp - got <= rollback_bound, \
+                f"seed {seed}: {name} rolled back {exp - got} (> bound)"
+            max_rollback = max(max_rollback, exp - got)
+        assert recovery_s <= recovery_bound_s, \
+            f"seed {seed}: recovery took {recovery_s:.0f}s"
+        worst_recovery = max(worst_recovery, recovery_s)
+    elapsed = time.perf_counter() - t0
+
+    assert compared > 0
+    row("chaos_soak", elapsed / (2 * (ticks + drain)) * 1e6,
+        f"requests={oracle.source.rid};lost=0;duplicates=0;"
+        f"token_prefix_checked={compared};fenced={fenced_total};"
+        f"crash_restored={restored_total};max_rollback={max_rollback};"
+        f"recovery_worst_s={worst_recovery:.0f};"
+        f"recovery_bound_s={recovery_bound_s:.0f};"
+        f"audit_ticks={2 * (ticks + drain)};seeds=2")
+
+
 # ------------------------------------------------------- serving runtime
 
 def bench_serving_throughput():
@@ -941,7 +1096,7 @@ BENCHES = [
     bench_queue_16, bench_queue_32,
     bench_dbn_tracking, bench_dbn_control,
     bench_deployment_40, bench_control_plane_churn, bench_federation_churn,
-    bench_priority_spike,
+    bench_priority_spike, bench_chaos_soak,
     bench_serving_throughput, bench_paged_decode, bench_prefix_reuse,
     bench_kernel_flash_attention, bench_kernel_mlstm, bench_kernel_ssm,
     bench_kernel_decode_attention,
@@ -994,8 +1149,11 @@ def run_check(tol: float, record: bool) -> int:
         # the fresh fast report lands next to them instead
         JSON_DIR = ROOT / "bench_check"
         JSON_DIR.mkdir(exist_ok=True)
-    # QoS gate first (cheap, assertion-based — no ratio to baseline)
+    # assertion-based gates first (cheap, no ratio to baseline): QoS
+    # invariants, then the chaos soak's robustness floor (zero loss,
+    # exactly-once, token-identical recovery, bounded recovery latency)
     bench_priority_spike()
+    bench_chaos_soak()
 
     def smoke():
         bench_serving_throughput()

@@ -1,10 +1,27 @@
 """Checkpoint/restore for param + optimizer + data-iterator pytrees.
 
-Fault-tolerance substrate: atomic writes (tmp + rename), retention, restore
-onto a DIFFERENT mesh/sharding (topology-change resharding via device_put
-with the new shardings — elastic scaling and node-failure recovery both go
-through this path), and async save (background thread over host copies) so
-the training loop does not stall on I/O."""
+Fault-tolerance substrate: atomic *and durable* writes (tmp + fsync +
+rename + directory fsync), per-leaf checksum manifests verified on
+restore, fall-back to the last good generation when the newest one is
+truncated or corrupted, bounded retry-with-backoff on transient I/O
+errors, retention, restore onto a DIFFERENT mesh/sharding
+(topology-change resharding via device_put with the new shardings —
+elastic scaling and node-failure recovery both go through this path),
+and async save (background thread over host copies) so the training
+loop does not stall on I/O.
+
+Durability contract (exercised by tests/test_chaos.py):
+  - ``save`` fsyncs every file *and* the containing directories around
+    the tmp -> final rename, so a host crash after ``save`` returns can
+    not lose or tear the generation;
+  - ``meta.json`` carries a crc32 per leaf; ``restore``/``load_tree``
+    recompute and compare before handing data back;
+  - a generation that fails verification (truncated npz, flipped bytes,
+    missing/unparseable meta) raises ``CheckpointCorruptError`` when
+    requested explicitly, and is *skipped* when the caller asked for
+    "the latest good one" — recovery proceeds from the previous
+    generation, mirroring what a restarted trainer must do.
+"""
 from __future__ import annotations
 
 import json
@@ -13,10 +30,15 @@ import pathlib
 import shutil
 import threading
 import time
-from typing import Optional
+import zlib
+from typing import Callable, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A specific checkpoint generation failed integrity verification."""
 
 
 def _flatten(tree):
@@ -44,9 +66,54 @@ def _from_native(h: np.ndarray, target_dtype) -> np.ndarray:
     return h.astype(td)
 
 
+def _leaf_crc(a: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(a).tobytes()) & 0xFFFFFFFF
+
+
+def _fsync_path(path: pathlib.Path):
+    """fsync a file's contents (or a directory's entry table)."""
+    flags = os.O_RDONLY | (os.O_DIRECTORY if path.is_dir() else 0)
+    fd = os.open(path, flags)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def with_retry(fn: Callable, *, retries: int = 0, backoff: float = 0.05,
+               timeout: Optional[float] = None,
+               sleep: Callable[[float], None] = time.sleep):
+    """Run ``fn`` with bounded retry + exponential backoff + wall timeout.
+
+    Used by save/restore callers on flaky filesystems (the JIRIAF
+    steady state): ``retries`` extra attempts, delay doubling from
+    ``backoff``, and a hard ``timeout`` on the whole loop so a wedged
+    mount can't stall a drain past the node's walltime."""
+    deadline = None if timeout is None else time.monotonic() + timeout
+    attempt = 0
+    while True:
+        try:
+            return fn()
+        except (OSError, CheckpointCorruptError):
+            attempt += 1
+            if attempt > retries:
+                raise
+            if deadline is not None and time.monotonic() >= deadline:
+                raise
+            sleep(backoff * (2 ** (attempt - 1)))
+
+
 def save(ckpt_dir, step: int, tree, *, meta: Optional[dict] = None,
-         keep: int = 3):
-    """Synchronous atomic checkpoint."""
+         keep: int = 3, retries: int = 0, retry_backoff: float = 0.05,
+         timeout: Optional[float] = None):
+    """Synchronous atomic + durable checkpoint (see module docstring)."""
+    return with_retry(
+        lambda: _save_once(ckpt_dir, step, tree, meta=meta, keep=keep),
+        retries=retries, backoff=retry_backoff, timeout=timeout)
+
+
+def _save_once(ckpt_dir, step: int, tree, *, meta: Optional[dict] = None,
+               keep: int = 3):
     ckpt_dir = pathlib.Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     tmp = ckpt_dir / f".tmp-{step}"
@@ -56,13 +123,30 @@ def save(ckpt_dir, step: int, tree, *, meta: Optional[dict] = None,
     leaves, treedef = _flatten(tree)
     host = [_to_native(np.asarray(l)) for l in leaves]
     np.savez(tmp / "leaves.npz", **{f"l{i}": a for i, a in enumerate(host)})
-    (tmp / "meta.json").write_text(json.dumps({
+    manifest = {
         "step": step, "n_leaves": len(host), "treedef": str(treedef),
-        "time": time.time(), **(meta or {})}))
+        "time": time.time(),
+        # per-leaf integrity manifest, recomputed + compared on restore
+        "checksums": [[_leaf_crc(a), str(a.dtype), list(a.shape)]
+                      for a in host],
+        **(meta or {})}
+    if isinstance(tree, dict) and all(
+            not isinstance(v, dict) for v in tree.values()):
+        # flat dict trees (the drain-loop pod snapshots) record their key
+        # order so load_tree can rebuild them with no abstract tree in
+        # hand — the crash path restores from disk alone
+        manifest["tree_keys"] = sorted(tree.keys())
+    (tmp / "meta.json").write_text(json.dumps(manifest))
+    # durability: flush file contents, then the tmp dir entries, *then*
+    # rename, then the parent so the new name itself is on disk
+    _fsync_path(tmp / "leaves.npz")
+    _fsync_path(tmp / "meta.json")
+    _fsync_path(tmp)
     final = ckpt_dir / f"step_{step:08d}"
     if final.exists():
         shutil.rmtree(final)
     os.rename(tmp, final)
+    _fsync_path(ckpt_dir)
     _retain(ckpt_dir, keep)
     return final
 
@@ -91,21 +175,113 @@ def latest_step(ckpt_dir) -> Optional[int]:
     return int(steps[-1].name.split("_")[1])
 
 
+def _load_verified(d: pathlib.Path):
+    """Load one generation's leaves + meta, verifying the manifest.
+
+    Raises CheckpointCorruptError on truncation, bit flips, or missing
+    pieces. Generations written before the manifest existed (no
+    ``checksums`` key) are accepted as-is."""
+    try:
+        meta = json.loads((d / "meta.json").read_text())
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruptError(f"{d}: unreadable meta.json: {e}")
+    try:
+        with np.load(d / "leaves.npz") as data:
+            host = [data[f"l{i}"] for i in range(int(meta["n_leaves"]))]
+    except Exception as e:  # zipfile.BadZipFile, KeyError, OSError, ...
+        raise CheckpointCorruptError(f"{d}: unreadable leaves.npz: {e}")
+    sums = meta.get("checksums")
+    if sums is not None:
+        if len(sums) != len(host):
+            raise CheckpointCorruptError(
+                f"{d}: manifest lists {len(sums)} leaves, found {len(host)}")
+        for i, (h, (crc, dt, shape)) in enumerate(zip(host, sums)):
+            if list(h.shape) != list(shape) or str(h.dtype) != dt \
+                    or _leaf_crc(h) != crc:
+                raise CheckpointCorruptError(
+                    f"{d}: leaf l{i} failed checksum/shape verification")
+    return host, meta
+
+
+def verify_step(ckpt_dir, step: int) -> bool:
+    """True iff generation ``step`` exists and passes verification."""
+    d = pathlib.Path(ckpt_dir) / f"step_{step:08d}"
+    if not d.exists():
+        return False
+    try:
+        _load_verified(d)
+        return True
+    except CheckpointCorruptError:
+        return False
+
+
+def latest_good_step(ckpt_dir) -> Optional[int]:
+    """Newest generation that passes integrity verification (or None)."""
+    for d in sorted(pathlib.Path(ckpt_dir).glob("step_*"), reverse=True):
+        step = int(d.name.split("_")[1])
+        if verify_step(ckpt_dir, step):
+            return step
+    return None
+
+
+def _pick_step(ckpt_dir: pathlib.Path, step: Optional[int], verify: bool):
+    """Resolve which generation to read; with step=None and verify on,
+    corrupt generations are skipped (fall back to the last good one)."""
+    if step is not None:
+        return step
+    picked = latest_good_step(ckpt_dir) if verify else latest_step(ckpt_dir)
+    if picked is None:
+        raise FileNotFoundError(f"no usable checkpoints under {ckpt_dir}")
+    return picked
+
+
+def load_tree(ckpt_dir, *, step: Optional[int] = None, verify: bool = True):
+    """Restore a flat-dict checkpoint with no abstract tree in hand.
+
+    The crash-recovery path: a node died without a graceful drain, so
+    nothing live can describe the tree — the manifest's ``tree_keys``
+    rebuild it from disk alone. Returns ``(dict, meta)``."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    step = _pick_step(ckpt_dir, step, verify)
+    d = ckpt_dir / f"step_{step:08d}"
+    host, meta = _load_verified(d)
+    keys = meta.get("tree_keys")
+    if keys is None or len(keys) != len(host):
+        raise CheckpointCorruptError(
+            f"{d}: no tree_keys manifest; need an abstract tree (restore())")
+    return dict(zip(keys, host)), meta
+
+
 def restore(ckpt_dir, abstract_tree, *, step: Optional[int] = None,
-            shardings=None):
+            shardings=None, verify: bool = True, retries: int = 0,
+            retry_backoff: float = 0.05, timeout: Optional[float] = None):
     """Restore into the structure of ``abstract_tree``; if ``shardings`` is
     given the leaves are placed with those shardings (which may correspond
     to a completely different mesh than the one that saved — ZeRO/elastic
-    reshard on restore)."""
+    reshard on restore). With ``verify`` (default) every leaf is checked
+    against the saved manifest; when ``step`` is None a corrupt newest
+    generation falls back to the last good one."""
+    return with_retry(
+        lambda: _restore_once(ckpt_dir, abstract_tree, step=step,
+                              shardings=shardings, verify=verify),
+        retries=retries, backoff=retry_backoff, timeout=timeout)
+
+
+def _restore_once(ckpt_dir, abstract_tree, *, step=None, shardings=None,
+                  verify=True):
     ckpt_dir = pathlib.Path(ckpt_dir)
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    step = _pick_step(ckpt_dir, step, verify)
     d = ckpt_dir / f"step_{step:08d}"
-    data = np.load(d / "leaves.npz")
+    if verify:
+        host, meta = _load_verified(d)
+    else:
+        data = np.load(d / "leaves.npz")
+        meta = json.loads((d / "meta.json").read_text())
+        host = [data[f"l{i}"] for i in range(int(meta["n_leaves"]))]
     leaves, treedef = jax.tree.flatten(abstract_tree)
-    host = [data[f"l{i}"] for i in range(len(leaves))]
+    if len(host) != len(leaves):
+        raise ValueError(
+            f"leaf count mismatch: {len(host)} saved vs {len(leaves)}")
     for h, a in zip(host, leaves):
         if tuple(h.shape) != tuple(a.shape):
             raise ValueError(f"shape mismatch {h.shape} vs {a.shape}")
@@ -116,5 +292,4 @@ def restore(ckpt_dir, abstract_tree, *, step: Optional[int] = None,
         out = [jax.device_put(h, s) for h, s in zip(host, sh_leaves)]
     else:
         out = [jax.numpy.asarray(h) for h in host]
-    meta = json.loads((d / "meta.json").read_text())
     return jax.tree.unflatten(treedef, out), meta

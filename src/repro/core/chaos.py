@@ -1,0 +1,359 @@
+"""Chaos fault-injection subsystem — deterministic, seed-driven.
+
+JIRIAF's pitch is unified control over pilot allocations on facilities
+the operator does not own: walltime kills, stale heartbeats, network
+partitions, and flaky filesystems are the steady state, not the
+exception. This module makes those failures *first-class, reproducible
+inputs* so every recovery path in the control plane is exercised under
+test and bench instead of assumed.
+
+Design rules:
+
+  * **Seams, not monkey-patching.** Every fault lands through an
+    existing public surface: heartbeats are simply not driven (crash),
+    ``Cluster.set_reachable`` flips the API-server boundary (partition),
+    ``Cluster.set_node_status`` is the JFM feed path (flap),
+    heartbeat latency inflation rides ``FacilityManager.scrape``'s
+    straggler detection, ``VirtualNode.cut_walltime`` revises the lease,
+    and checkpoint corruption edits bytes on disk exactly like a failing
+    filesystem would.
+  * **Deterministic.** The schedule is declarative (`FaultSpec` list or
+    the ``kind:target@at[+duration][x<mag>]`` string form used by
+    ``--chaos``); ``"*"`` targets resolve via a seeded RNG. Two runs
+    with the same seed and schedule inject byte-identical faults.
+  * **Audited.** ``InvariantAuditor`` checks the quota-ledger books,
+    every paged runtime's allocator refcount books, and slot-table/rid
+    exactly-once accounting every tick while chaos runs — a fault that
+    silently corrupts accounting fails immediately, not at the end.
+
+Driver contract (see ``bench_chaos_soak`` and ``launch/serve.py``): in
+place of the plain per-tick ``cluster.heartbeat`` loop + ``fm.feed``,
+call ``injector.apply(cluster, now, fm=fm)``.
+"""
+from __future__ import annotations
+
+import pathlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core.cluster import KIND_NODE, Cluster
+
+# fault kinds
+CRASH = "crash"              # heartbeats stop forever (process gone)
+FLAP = "flap"                # NotReady<->Ready oscillation via the JFM seam
+PARTITION = "partition"      # unreachable, alive; rejoins after duration
+STRAGGLER = "straggler"      # heartbeat latency inflated by `magnitude`
+CKPT_CORRUPT = "ckpt_corrupt"  # truncate newest checkpoint generation
+WALLTIME_CUT = "walltime_cut"  # lease revised to `magnitude` seconds left
+
+KINDS = (CRASH, FLAP, PARTITION, STRAGGLER, CKPT_CORRUPT, WALLTIME_CUT)
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One declarative fault: what, who, when, for how long, how hard."""
+    kind: str
+    at: float                    # injection time (sim seconds)
+    target: str = "*"            # node (pod for ckpt_corrupt); "*" = seeded
+    duration: float = 0.0        # flap/partition/straggler window
+    magnitude: float = 0.0       # straggler factor | walltime secs left
+
+    @staticmethod
+    def parse(text: str) -> "FaultSpec":
+        """``kind:target@at[+duration][x<magnitude>]`` — the ``--chaos``
+        flag's form, e.g. ``partition:n0@120+45`` or
+        ``straggler:*@60+30x8`` or ``walltime_cut:n2@100x70``."""
+        head, _, when = text.partition("@")
+        kind, _, target = head.partition(":")
+        if kind not in KINDS:
+            raise ValueError(f"unknown fault kind {kind!r} (have {KINDS})")
+        if not when:
+            raise ValueError(f"fault {text!r} needs @<time>")
+        mag = 0.0
+        if "x" in when:
+            when, _, m = when.partition("x")
+            mag = float(m)
+        dur = 0.0
+        if "+" in when:
+            when, _, d = when.partition("+")
+            dur = float(d)
+        return FaultSpec(kind=kind, at=float(when), target=target or "*",
+                         duration=dur, magnitude=mag)
+
+
+@dataclass
+class _Active:
+    spec: FaultSpec
+    target: str
+    until: float
+
+
+class ChaosInvariantError(AssertionError):
+    """An every-tick invariant broke while chaos was running."""
+
+
+@dataclass
+class FaultInjector:
+    """Applies a declarative fault schedule through control-plane seams.
+
+    ``apply(cluster, now, fm=...)`` replaces the driver's heartbeat +
+    JFM feed block: it fires due faults, drives heartbeats for every
+    node that can still send them (with straggler latency inflation),
+    runs the facility manager's feed, then overlays flap reports."""
+    schedule: List[FaultSpec] = field(default_factory=list)
+    seed: int = 0
+    ckpt_dir: Optional[str] = None      # where ckpt_corrupt finds pod dirs
+    base_latency: float = 1.0           # healthy heartbeat latency
+    log: List[Tuple[float, str, str]] = field(default_factory=list)
+    crashed: Set[str] = field(default_factory=set)
+    _active: List[_Active] = field(default_factory=list)
+    _fired: Set[int] = field(default_factory=set)
+    _rng: np.random.Generator = None
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self.schedule = [FaultSpec.parse(s) if isinstance(s, str) else s
+                         for s in self.schedule]
+
+    # ------------------------------------------------------------ state
+    def _windows(self, kind: str) -> List[_Active]:
+        return [a for a in self._active if a.spec.kind == kind]
+
+    def is_partitioned(self, name: str) -> bool:
+        return any(a.target == name for a in self._windows(PARTITION))
+
+    def is_flapping(self, name: str) -> bool:
+        return any(a.target == name for a in self._windows(FLAP))
+
+    def straggler_factor(self, name: str) -> float:
+        f = [a.spec.magnitude or 8.0 for a in self._windows(STRAGGLER)
+             if a.target == name]
+        return max(f) if f else 1.0
+
+    def _note(self, now: float, kind: str, target: str):
+        self.log.append((now, kind, target))
+
+    def _pick_node(self, cluster: Cluster) -> Optional[str]:
+        cands = sorted(n for n in cluster.nodes
+                       if n not in self.crashed and not any(
+                           a.target == n for a in self._active))
+        if not cands:
+            return None
+        return cands[int(self._rng.integers(len(cands)))]
+
+    def _pick_pod_dir(self) -> Optional[pathlib.Path]:
+        if self.ckpt_dir is None:
+            return None
+        dirs = sorted(d for d in pathlib.Path(self.ckpt_dir).iterdir()
+                      if d.is_dir() and list(d.glob("step_*")))
+        if not dirs:
+            return None
+        return dirs[int(self._rng.integers(len(dirs)))]
+
+    # ------------------------------------------------------------ fire
+    def _fire(self, i: int, spec: FaultSpec, cluster: Cluster, now: float):
+        self._fired.add(i)
+        target = spec.target
+        if spec.kind == CKPT_CORRUPT:
+            pod_dir = (pathlib.Path(self.ckpt_dir) / target
+                       if self.ckpt_dir and target != "*"
+                       else self._pick_pod_dir())
+            if pod_dir is not None and pod_dir.exists():
+                hit = corrupt_latest_generation(pod_dir)
+                if hit is not None:
+                    self._note(now, CKPT_CORRUPT, str(hit))
+                    cluster.record(now, KIND_NODE, pod_dir.name,
+                                   "ChaosCkptCorrupt", f"file={hit}")
+            return
+        if target == "*":
+            target = self._pick_node(cluster)
+            if target is None:
+                return
+        if target not in cluster.nodes:
+            # a typo'd node name must not silently disarm the fault
+            self._note(now, f"{spec.kind}_skipped", target)
+            return
+        self._note(now, spec.kind, target)
+        cluster.record(now, KIND_NODE, target, "ChaosInjected",
+                       f"kind={spec.kind} duration={spec.duration:.0f} "
+                       f"magnitude={spec.magnitude:g}")
+        if spec.kind == CRASH:
+            self.crashed.add(target)
+        elif spec.kind == PARTITION:
+            cluster.set_reachable(target, now, False)
+            self._active.append(_Active(spec, target, now + spec.duration))
+        elif spec.kind in (FLAP, STRAGGLER):
+            self._active.append(_Active(spec, target, now + spec.duration))
+        elif spec.kind == WALLTIME_CUT:
+            cluster.nodes[target].cut_walltime(now, spec.magnitude)
+
+    def _expire(self, cluster: Cluster, now: float):
+        still = []
+        for a in self._active:
+            if now < a.until:
+                still.append(a)
+                continue
+            if a.spec.kind == PARTITION and a.target in cluster.node_status:
+                cluster.set_reachable(a.target, now, True)  # rejoin
+            self._note(now, f"{a.spec.kind}_end", a.target)
+        self._active = still
+
+    # ------------------------------------------------------------ apply
+    def apply(self, cluster: Cluster, now: float, fm=None):
+        """One chaos tick: fire due faults, expire elapsed windows, drive
+        heartbeats through the normal path (crashed nodes stay silent,
+        partitioned nodes are dropped at the API-server boundary,
+        stragglers report inflated latency), feed the JFM scrape, then
+        overlay flap NotReady reports through the same feed seam."""
+        for i, spec in enumerate(self.schedule):
+            if i not in self._fired and spec.at <= now:
+                self._fire(i, spec, cluster, now)
+        self._expire(cluster, now)
+        for name in sorted(cluster.nodes):
+            if name in self.crashed:
+                continue
+            cluster.heartbeat(
+                name, now,
+                latency=self.base_latency * self.straggler_factor(name))
+        if fm is not None:
+            fm.feed(cluster, now)
+        for a in self._windows(FLAP):
+            st = cluster.node_status.get(a.target)
+            if st is not None and st.reachable:
+                # flaky kubelet: reports NotReady with fresh heartbeats —
+                # the controller must wait out stale_after, not evict
+                cluster.set_node_status(
+                    a.target, now, ready=False,
+                    heartbeat_age=st.heartbeat_age,
+                    heartbeat_latency=st.heartbeat_latency)
+
+
+def corrupt_latest_generation(pod_dir, frac: float = 0.5) -> Optional[str]:
+    """Truncate the newest generation's ``leaves.npz`` to ``frac`` of its
+    size — what a crashed writer or a flaky filesystem leaves behind.
+    Returns the damaged file's path (or None when nothing to damage)."""
+    steps = sorted(pathlib.Path(pod_dir).glob("step_*"))
+    if not steps:
+        return None
+    f = steps[-1] / "leaves.npz"
+    if not f.exists():
+        return None
+    data = f.read_bytes()
+    f.write_bytes(data[:max(1, int(len(data) * frac))])
+    return str(f)
+
+
+@dataclass
+class InvariantAuditor:
+    """Every-tick bookkeeping audit while chaos runs (tentpole (d)).
+
+    Checks three ledgers and raises ``ChaosInvariantError`` (with tick
+    context) the moment any goes out of balance:
+
+      1. quota ledger: per-node used+free == capacity and per-owner sums
+         match node truth (``QuotaLedger.assert_balanced``);
+      2. page-allocator refcount books per paged runtime: used+free ==
+         pool, the null page is never granted, live-page count matches
+         ``used_pages``, free-list entries all have refcount 0;
+      3. rid exactly-once: no rid completes twice, and no rid is queued
+         or in-flight in two places at once.
+    """
+    cluster: Cluster
+    engine: Optional[object] = None          # StreamEngine (or None)
+    checks: int = 0
+
+    def _fail(self, now: float, what: str):
+        raise ChaosInvariantError(f"[t={now:.1f}] {what}")
+
+    def audit(self, now: float) -> Dict[str, float]:
+        self.checks += 1
+        # Orphans on the far side of a partition (fence-pending) were
+        # evicted from the store but still physically hold resources on
+        # their node until fence_node reclaims them on rejoin — the one
+        # legitimate divergence between owner books and node truth. An
+        # orphan anywhere else is a real leak.
+        sever: Dict[str, list] = {}
+        for name, st in self.cluster.node_status.items():
+            if not st.reachable or name in self.cluster.fence_epochs:
+                sever[name] = self.cluster.orphaned_pods(name)
+        for name in self.cluster.nodes:
+            if name in sever:
+                continue
+            stray = self.cluster.orphaned_pods(name)
+            if stray:
+                self._fail(now, f"{name}: orphaned pods "
+                                f"{[p.name for p in stray]} on a healthy, "
+                                f"fence-clear node")
+        orphan_chips = sum(p.request_chips
+                           for pods in sever.values() for p in pods)
+        orphan_hbm = sum(p.request_hbm_bytes
+                         for pods in sever.values() for p in pods)
+        if orphan_chips or orphan_hbm:
+            led = self.cluster.ledger
+            owners = {rec.owner for rec in led._live()}
+            owner_chips = sum(led.usage(o).chips for o in owners)
+            owner_hbm = sum(led.usage(o).hbm_bytes for o in owners)
+            node_chips = sum(n.used_chips()
+                             for n in self.cluster.nodes.values())
+            node_hbm = sum(n.used_hbm()
+                           for n in self.cluster.nodes.values())
+            if owner_chips + orphan_chips != node_chips or \
+                    owner_hbm + orphan_hbm != node_hbm:
+                self._fail(now, "books off beyond the severed footprint: "
+                                f"owner {owner_chips} + orphan "
+                                f"{orphan_chips} vs node {node_chips} chips")
+            totals = {"chips_used": node_chips, "hbm_used": node_hbm,
+                      "orphaned_chips": orphan_chips}
+        else:
+            try:
+                totals = self.cluster.ledger.assert_balanced()
+            except ValueError as e:
+                self._fail(now, f"quota ledger: {e}")
+        out = {"nodes": len(self.cluster.nodes), **{
+            f"ledger_{k}": v for k, v in totals.items()
+            if isinstance(v, (int, float))}}
+        if self.engine is None:
+            return out
+        eng = self.engine
+        for name, rt in eng.runtimes.items():
+            alloc = getattr(rt, "alloc", None)
+            if alloc is None:
+                continue
+            if alloc.used_pages + alloc.free_pages != alloc.pool_pages:
+                self._fail(now, f"{name}: used({alloc.used_pages}) + "
+                                f"free({alloc.free_pages}) != "
+                                f"pool({alloc.pool_pages})")
+            if alloc.refcount[0] != 0:
+                self._fail(now, f"{name}: null page granted "
+                                f"(refcount[0]={alloc.refcount[0]})")
+            live = int(np.sum(alloc.refcount[1:] > 0))
+            if live != alloc.used_pages:
+                self._fail(now, f"{name}: {live} live pages vs "
+                                f"used_pages={alloc.used_pages}")
+            bad_free = [p for p in alloc._free if alloc.refcount[p] != 0]
+            if bad_free:
+                self._fail(now, f"{name}: free-list pages with live "
+                                f"refcounts: {bad_free[:4]}")
+        done = [rid for rid, _ in eng.completed]
+        if len(done) != len(set(done)):
+            dupes = sorted({r for r in done if done.count(r) > 1})
+            self._fail(now, f"duplicate completion for rids {dupes[:6]}")
+        seen: Dict[int, str] = {}
+        for r in eng.queue:
+            if r.rid in seen:
+                self._fail(now, f"rid {r.rid} queued twice")
+            seen[r.rid] = "queue"
+        for name, rt in eng.runtimes.items():
+            if not eng._node_reachable(name):
+                continue        # far side of a partition: not ours anymore
+            rids = [r.rid for r in rt.pending] + \
+                   [s.req.rid for s in rt.slots if s.busy]
+            for rid in rids:
+                if rid in seen:
+                    self._fail(now, f"rid {rid} in {name} AND {seen[rid]}")
+                seen[rid] = name
+        out["inflight"] = len(seen)
+        out["completed"] = len(done)
+        return out

@@ -125,6 +125,10 @@ class NodeStatus:
     heartbeat_latency: float = 0.0
     straggler: bool = False
     last_transition: float = 0.0
+    # False while a network partition separates the node from the control
+    # plane: the node may be alive and serving, but heartbeats don't
+    # arrive and kubelet calls (CreatePod/DeletePod) can't reach it
+    reachable: bool = True
 
 
 def _default_containers(name: str) -> List[Container]:
@@ -207,6 +211,11 @@ class PodRecord:
     # drain/reschedule lineage
     restored_from: Optional[str] = None    # predecessor pod name
     restored_state: Optional[dict] = None  # checkpointed runtime state
+    # epoch fencing: monotonically increasing cluster-wide binding
+    # counter stamped at assign(); a node that rejoins after a partition
+    # only holds bindings at-or-below its recorded fence floor, so its
+    # orphaned pods are discarded instead of double-serving (split-brain)
+    binding_epoch: int = 0
 
     @property
     def name(self) -> str:
@@ -232,6 +241,11 @@ class Cluster:
             qos.default_priority_classes()
         self.quotas: Dict[Tuple[str, Optional[str]], qos.Quota] = {}
         self.ledger = qos.QuotaLedger(self)
+        # epoch fencing state: last issued binding epoch, plus per-node
+        # fence floors (highest epoch evicted while the node was
+        # unreachable — anything at or below is stale on rejoin)
+        self.binding_epoch = 0
+        self.fence_epochs: Dict[str, int] = {}
         self.version = 0              # bumps on every watch emission
         self._watchers: Dict[str, List[Callable[[WatchEvent], None]]] = {}
         self._uid = itertools.count(1)
@@ -277,8 +291,14 @@ class Cluster:
 
     def heartbeat(self, name: str, now: float, latency: float = 0.0):
         """Node-side heartbeat: ticks the VK lease clock and refreshes the
-        status record. JFM's feed() refines straggler/staleness on top."""
+        status record. JFM's feed() refines straggler/staleness on top.
+        Heartbeats from a partitioned node never arrive — the API-server
+        boundary drops them, so staleness accrues and the lifecycle
+        controller eventually declares the node dead."""
         node = self.nodes[name]
+        st0 = self.node_status.get(name)
+        if st0 is not None and not st0.reachable:
+            return False
         node.tick(now, latency=latency)
         st = self.node_status[name]
         st.heartbeat_age = 0.0
@@ -310,6 +330,52 @@ class Cluster:
                         f"heartbeat_age={heartbeat_age:.0f}")
             self._emit(KIND_NODE, MODIFIED, name)
 
+    def set_reachable(self, name: str, now: float, reachable: bool):
+        """Partition / rejoin transition at the API-server boundary. A
+        rejoin does NOT fence by itself — the lifecycle controller calls
+        ``fence_node`` once it observes the node back and healthy."""
+        st = self.node_status[name]
+        if st.reachable == reachable:
+            return
+        st.reachable = reachable
+        self.record(now, KIND_NODE, name,
+                    "Rejoined" if reachable else "Partitioned",
+                    f"fence_epoch={self.fence_epochs.get(name, 0)}")
+        self._emit(KIND_NODE, MODIFIED, name, self.nodes.get(name))
+
+    def orphaned_pods(self, node_name: str) -> List[Pod]:
+        """Pod objects still held by the node's kubelet with no matching
+        record in the store (evicted while the node was unreachable)."""
+        node = self.nodes.get(node_name)
+        if node is None:
+            return []
+        out = []
+        for pod in list(node.pods.values()):
+            rec = self.pods.get(pod.name)
+            if rec is None or rec.pod is not pod:
+                out.append(pod)
+        return out
+
+    def fence_node(self, name: str, now: float) -> List[str]:
+        """Epoch fence on rejoin: every orphaned pod on the node was
+        bound at or below the node's fence floor and has since been
+        re-served elsewhere under a higher epoch — delete it so the stale
+        replica can never double-emit. Returns the fenced pod names."""
+        node = self.nodes.get(name)
+        if node is None:
+            return []
+        floor = self.fence_epochs.pop(name, 0)
+        fenced = []
+        for pod in self.orphaned_pods(name):
+            node.delete_pod(pod.name, now)
+            fenced.append(pod.name)
+            self.record(now, KIND_POD, pod.name, "Fenced",
+                        f"node={name} epoch<={floor} "
+                        f"current_epoch={self.binding_epoch}")
+        if fenced:
+            self._emit(KIND_NODE, MODIFIED, name, node)
+        return fenced
+
     def cordon(self, name: str, now: float, reason: str = "Draining"):
         st = self.node_status[name]
         if st.schedulable:
@@ -322,7 +388,8 @@ class Cluster:
         out = []
         for name, node in self.nodes.items():
             st = self.node_status.get(name)
-            if st is None or not st.ready or not st.schedulable:
+            if st is None or not st.ready or not st.schedulable \
+                    or not st.reachable:
                 continue
             if node.draining(now):
                 continue
@@ -442,8 +509,11 @@ class Cluster:
         rec = self.pods[pod_name]
         node = self.nodes[node_name]
         node.create_pod(rec.pod, now)
+        self.binding_epoch += 1
+        rec.binding_epoch = self.binding_epoch
         reason = "Rescheduled" if rec.restored_from else "Scheduled"
-        self.record(now, KIND_POD, pod_name, reason, f"node={node_name}")
+        self.record(now, KIND_POD, pod_name, reason,
+                    f"node={node_name} epoch={rec.binding_epoch}")
         self._emit(KIND_POD, MODIFIED, pod_name, rec)
         return rec
 
@@ -456,8 +526,19 @@ class Cluster:
             return None
         if rec.pod.node is not None:
             node = self.nodes.get(rec.pod.node)
+            st = self.node_status.get(rec.pod.node)
             if node is not None:
-                node.delete_pod(pod_name, now)
+                if st is not None and not st.reachable:
+                    # partition: DeletePod can't reach the kubelet; the
+                    # pod object stays orphaned node-side. Raise the fence
+                    # floor so a rejoin discards it (no split-brain).
+                    self.fence_epochs[rec.pod.node] = max(
+                        self.fence_epochs.get(rec.pod.node, 0),
+                        rec.binding_epoch)
+                    message = (message or f"node={rec.pod.node}") + \
+                        " [orphaned: node unreachable]"
+                else:
+                    node.delete_pod(pod_name, now)
         self.record(now, KIND_POD, pod_name, reason,
                     message or f"node={rec.pod.node or '-'}")
         self._emit(KIND_POD, DELETED, pod_name, rec)

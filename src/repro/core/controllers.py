@@ -41,7 +41,7 @@ from typing import Dict, List, Optional, Set
 import numpy as np
 
 from repro.checkpoint import checkpointer
-from repro.core.cluster import KIND_POD, Cluster, PodRecord
+from repro.core.cluster import KIND_NODE, KIND_POD, Cluster, PodRecord
 from repro.core.scheduler import Scheduler
 
 
@@ -102,14 +102,32 @@ class NodeLifecycleController:
     deployment_ctrl: Optional[DeploymentController] = None
     ckpt_dir: Optional[str] = None       # defaults to a temp dir on first use
     stale_after: float = 30.0            # no heartbeat for this long = dead
+    # two-phase drain support: with a positive interval, every
+    # checkpointable bound pod gets a periodic *background* snapshot, so
+    # a drain cut short by walltime/crash resumes from the last one
+    # instead of the crash path's start-fresh. 0 keeps the old behavior.
+    bg_checkpoint_every: float = 0.0
+    # paced (interruptible) drains: evict at most this many pods per
+    # reconcile pass. 0 = whole node in one pass (old behavior).
+    drain_pods_per_tick: int = 0
+    # bounded retry-with-backoff + wall timeout on the save/restore I/O
+    # of the drain path (flaky shared filesystems are the steady state)
+    ckpt_retries: int = 2
+    ckpt_timeout: Optional[float] = 10.0
     _drained: Set[str] = field(default_factory=set)
     _ckpt_steps: Dict[str, int] = field(default_factory=dict)
+    _last_bg_ckpt: Dict[str, float] = field(default_factory=dict)
+    _not_ready_seen: Set[str] = field(default_factory=set)
 
     def checkpoint_pod(self, rec: PodRecord, now: float) -> Optional[dict]:
         """Snapshot the pod's runtime state through repro.checkpoint: the
         same atomic save/restore path training and elastic scaling use.
-        Called on the drain path below and (via the ControlPlane wiring)
-        by the scheduler for preemption victims."""
+        Called on the drain path below, by the periodic background pass,
+        and (via the ControlPlane wiring) by the scheduler for preemption
+        victims."""
+        node_st = self.cluster.node_status.get(rec.pod.node or "")
+        if node_st is not None and not node_st.reachable:
+            return None                  # kubelet unreachable: can't snapshot
         dep = self.cluster.deployments.get(rec.owner or "")
         provider = dep.template.checkpoint_state if dep else None
         if provider is None:
@@ -124,17 +142,48 @@ class NodeLifecycleController:
         pod_dir = pathlib.Path(self.ckpt_dir) / rec.name
         checkpointer.save(pod_dir, step, tree,
                           meta={"pod": rec.name, "node": rec.pod.node or "",
-                                "time": now})
+                                "time": now},
+                          retries=self.ckpt_retries, retry_backoff=0.01,
+                          timeout=self.ckpt_timeout)
         self._ckpt_steps[rec.name] = step + 1
-        # restore from disk so the round trip is exercised, not assumed
-        restored, _meta = checkpointer.restore(pod_dir, tree, step=step)
+        # restore from disk so the round trip is exercised, not assumed;
+        # a generation that fails verification falls back to the last
+        # good one rather than poisoning the restore
+        try:
+            restored, _meta = checkpointer.restore(
+                pod_dir, tree, step=step, retries=self.ckpt_retries,
+                retry_backoff=0.01, timeout=self.ckpt_timeout)
+        except checkpointer.CheckpointCorruptError:
+            restored, _meta = checkpointer.restore(pod_dir, tree)
         self.cluster.record(now, KIND_POD, rec.name, "Checkpointed",
                             f"dir={pod_dir} step={step}")
         return {k: np.asarray(v) for k, v in restored.items()}
 
+    def recover_from_disk(self, pod_name: str, now: float) -> dict:
+        """Crash-path recovery: rebuild the pod's last *verified*
+        checkpoint generation from disk alone (no live provider — the
+        node is gone). Corrupted or truncated generations are skipped in
+        favor of the last good one; no usable generation means {}."""
+        if self.ckpt_dir is None:
+            return {}
+        pod_dir = pathlib.Path(self.ckpt_dir) / pod_name
+        if not pod_dir.exists():
+            return {}
+        try:
+            state, meta = checkpointer.load_tree(pod_dir)
+        except (FileNotFoundError, checkpointer.CheckpointCorruptError,
+                OSError):
+            return {}
+        self.cluster.record(now, KIND_POD, pod_name, "CrashRestored",
+                            f"step={meta.get('step')} dir={pod_dir}")
+        return {k: np.asarray(v) for k, v in state.items()}
+
     def _drain_node(self, name: str, now: float):
         self.cluster.cordon(name, now, reason="Draining")
-        for rec in self.cluster.pods_on(name):
+        pods = self.cluster.pods_on(name)
+        if self.drain_pods_per_tick > 0:
+            pods = pods[:self.drain_pods_per_tick]
+        for rec in pods:
             state = self.checkpoint_pod(rec, now)
             evicted = self.cluster.evict(
                 rec.name, now, reason="Evicted",
@@ -144,7 +193,8 @@ class NodeLifecycleController:
             if evicted.owner and self.deployment_ctrl is not None:
                 self.deployment_ctrl.park_state(
                     evicted.owner, evicted.name, state or {})
-        self._drained.add(name)
+        if not self.cluster.pods_on(name):
+            self._drained.add(name)      # paced drains continue next pass
 
     def drain_allocation(self, names: List[str], now: float):
         """Batch drain a whole pilot allocation (§4.5.4 at site scale):
@@ -166,14 +216,36 @@ class NodeLifecycleController:
             self.cluster.set_node_status(name, now, ready=False,
                                          heartbeat_age=st.heartbeat_age)
         for rec in self.cluster.pods_on(name):
+            # crash path resumes from the last good on-disk generation
+            # (the periodic background pass, or a drain that got partway)
+            # instead of the old start-fresh; {} when nothing usable
+            state = self.recover_from_disk(rec.name, now)
             evicted = self.cluster.evict(rec.name, now, reason="Evicted",
                                          message=f"node {name} {why}")
-            # crash path: no checkpoint to park, replacement starts fresh
             if evicted and evicted.owner and self.deployment_ctrl is not None:
                 self.deployment_ctrl.park_state(
-                    evicted.owner, evicted.name, {})
+                    evicted.owner, evicted.name, state)
+
+    def _background_checkpoints(self, now: float):
+        """Periodic phase-1 snapshots of every checkpointable bound pod:
+        the generation the crash path falls back to."""
+        if self.bg_checkpoint_every <= 0:
+            return
+        for rec in list(self.cluster.pods.values()):
+            if not rec.bound:
+                continue
+            last = self._last_bg_ckpt.get(rec.name)
+            if last is not None and now - last < self.bg_checkpoint_every:
+                continue
+            try:
+                got = self.checkpoint_pod(rec, now)
+            except (OSError, checkpointer.CheckpointCorruptError):
+                continue                # transient I/O: retry next pass
+            if got is not None:
+                self._last_bg_ckpt[rec.name] = now
 
     def reconcile(self, now: float):
+        self._background_checkpoints(now)
         to_drain = []
         for name, node in list(self.cluster.nodes.items()):
             st = self.cluster.node_status.get(name)
@@ -188,13 +260,25 @@ class NodeLifecycleController:
             # are caught even when no JFM feed refreshes heartbeat_age
             age = max(st.heartbeat_age, now - node.last_heartbeat)
             stale = age > self.stale_after
-            if (stale or not st.ready) and \
-                    (st.ready or self.cluster.pods_on(name)):
-                self._fail_node(name, now,
-                                "heartbeat stale" if stale else "not ready")
+            if stale and (st.ready or self.cluster.pods_on(name)):
+                self._fail_node(name, now, "heartbeat stale")
+                self._not_ready_seen.add(name)
                 continue
             if not st.ready:
+                # flap window: a NotReady report with heartbeats still
+                # fresh is NOT failed — wait out stale_after; most flaps
+                # recover and cost nothing. (The old code evicted here.)
+                self._not_ready_seen.add(name)
                 continue
+            if name in self._not_ready_seen:
+                # exactly one recovery event per NotReady episode
+                self._not_ready_seen.discard(name)
+                self.cluster.record(now, KIND_NODE, name, "NodeRecovered",
+                                    f"heartbeat_age={age:.0f}")
+            if st.reachable and name in self.cluster.fence_epochs:
+                # partition healed and the node is back + healthy: fence
+                # its stale-epoch orphans before anything can double-serve
+                self.cluster.fence_node(name, now)
             if node.draining(now) and name not in self._drained:
                 to_drain.append(name)
         # same-pass expirations (one pilot allocation typically shares a

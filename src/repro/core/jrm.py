@@ -155,6 +155,14 @@ class VirtualNode:
                     return False
         return True
 
+    def cut_walltime(self, now: float, remaining: float) -> float:
+        """Facility-side lease revision (``scontrol update`` analog): the
+        allocation now expires ``remaining`` seconds from ``now``. The
+        chaos injector's walltime-cut fault goes through this seam so a
+        drain can be caught mid-flight by an early expiry."""
+        self.walltime = (now - self.created_at) + max(remaining, 0.0)
+        return self.walltime
+
     # ------------------------------------------------------- resources
     def used_chips(self) -> int:
         return sum(p.request_chips for p in self.pods.values()

@@ -45,6 +45,7 @@ no site spec, so single-facility behavior is unchanged.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -57,6 +58,13 @@ FilterStage = Callable[[PodRecord, VirtualNode, "Scheduler", float],
                        Optional[str]]
 # A scorer returns a number; higher is better.
 ScoreStage = Callable[[PodRecord, VirtualNode, "Scheduler", float], float]
+
+
+def _jitter_u(name: str, attempt: int) -> float:
+    """Deterministic uniform-ish [0, 1) from (pod, attempt): reproducible
+    across runs (no RNG state to thread through the control plane), but
+    decorrelated across pods so simultaneous failures spread out."""
+    return (zlib.crc32(f"{name}#{attempt}".encode()) & 0xFFFFFFFF) / 2**32
 
 
 @dataclass
@@ -301,6 +309,12 @@ class Scheduler:
         default_factory=lambda: list(DEFAULT_SCORERS))
     backoff_base: float = 5.0
     backoff_max: float = 60.0
+    # decorrelation jitter on the exponential backoff: each retry is
+    # stretched by up to this fraction, derived deterministically from
+    # (pod name, attempt) — a mass node failure requeues hundreds of
+    # pods at the same instant, and without jitter they all retry (and
+    # all fail, and all retry again) in synchronized storms. 0 disables.
+    backoff_jitter: float = 0.25
     enable_preemption: bool = True
     topology: Optional[SiteTopology] = None     # federation config
     # §4.5.4 hook for preemption victims: ControlPlane wires this to
@@ -459,6 +473,8 @@ class Scheduler:
             else:
                 backoff = min(self.backoff_base * (2 ** (rec.attempts - 1)),
                               self.backoff_max)
+                backoff *= 1.0 + self.backoff_jitter * _jitter_u(
+                    rec.name, rec.attempts)
             rec.next_retry = now + backoff
             if changed:
                 # one event per reason *transition*, not per retry: a pod

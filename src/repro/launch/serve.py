@@ -158,6 +158,19 @@ def main(argv=None):
                     help="traffic shaping: fraction of requests that join a"
                          " shared-prefix template group (makes"
                          " --prefix-cache hits visible from the driver)")
+    ap.add_argument("--chaos", default="",
+                    help='comma-separated fault schedule "kind:target@at'
+                         '[+duration][x<mag>]" (kinds: crash, flap,'
+                         " partition, straggler, ckpt_corrupt,"
+                         ' walltime_cut; target "*" picks a seeded'
+                         ' victim), e.g. "partition:n0@120+45,crash:*@300".'
+                         " Replaces the heartbeat/JFM block with the"
+                         " FaultInjector seam, enables background"
+                         " checkpoints, and audits bookkeeping invariants"
+                         " every tick")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help='seed for "*" victim selection (same schedule +'
+                         " seed => identical fault storm)")
     args = ap.parse_args(argv)
     if (args.prefix_cache or args.spec_decode) and not args.paged:
         ap.error("--prefix-cache/--spec-decode require --paged (they are"
@@ -291,6 +304,25 @@ def main(argv=None):
         print(f"[qos] batch tenant: {batch.bound}/{args.batch_load}"
               f" preemptible pods bound")
 
+    # ---- chaos fault injection (seeded, declarative schedule) ----
+    injector = auditor = None
+    if args.chaos:
+        import tempfile
+        from repro.core.chaos import FaultInjector, InvariantAuditor
+        if not plane.nodes.ckpt_dir:
+            plane.nodes.ckpt_dir = tempfile.mkdtemp(prefix="serve-chaos-")
+        if plane.nodes.bg_checkpoint_every <= 0:
+            # periodic snapshots bound how far a crash can roll back
+            plane.nodes.bg_checkpoint_every = args.dt
+        injector = FaultInjector(
+            schedule=[s.strip() for s in args.chaos.split(",") if s.strip()],
+            seed=args.chaos_seed, ckpt_dir=plane.nodes.ckpt_dir)
+        auditor = InvariantAuditor(cluster, engine)
+        print(f"[chaos] {len(injector.schedule)} faults scheduled "
+              f"(seed={args.chaos_seed}); bg checkpoints every "
+              f"{plane.nodes.bg_checkpoint_every:.0f}s -> "
+              f"{plane.nodes.ckpt_dir}")
+
     # ---- drive with the §6.2 pressure trajectory ----
     gt = ground_truth(args.ticks)
     killed_sites = set()
@@ -314,15 +346,22 @@ def main(argv=None):
                 wf = fe.table[pilot.wf_id]
                 print(f"[jcs] t={t}: demand high at {wf.site} — reprovision"
                       f" pilot {pilot.wf_id} ({len(pilot.nodes)} nodes)")
-        for name, node in cluster.nodes.items():
-            if node.site not in killed_sites:
-                cluster.heartbeat(name, now)
-        fm.feed(cluster, now)
+        if injector is not None:
+            # one chaos tick: fire due faults, drive heartbeats for every
+            # node that can still send them, feed the JFM, overlay flaps
+            injector.apply(cluster, now, fm=fm)
+        else:
+            for name, node in cluster.nodes.items():
+                if node.site not in killed_sites:
+                    cluster.heartbeat(name, now)
+            fm.feed(cluster, now)
         engine.reconcile(now)          # controllers converge every tick
         if batch is not None:
             batch.advance()            # bound pods progress; resumed pods
             #                            recover from their checkpoint
         qlen = engine.tick(now, args.dt, lam)
+        if auditor is not None:
+            auditor.audit(now)         # books must balance on every tick
         if t % 2 == 1:
             engine.control_step(now)
         if t % 10 == 0:
@@ -382,6 +421,13 @@ def main(argv=None):
     for ev in cluster.events:
         trail[ev.reason] = trail.get(ev.reason, 0) + 1
     print(f"[events] {dict(sorted(trail.items()))}")
+    if injector is not None:
+        fired = {}
+        for _, kind, target in injector.log:
+            fired[kind] = fired.get(kind, 0) + 1
+        print(f"[chaos] faults fired: {dict(sorted(fired.items()))}; "
+              f"audits passed={auditor.checks}; "
+              f"fence floors outstanding={len(cluster.fence_epochs)}")
     if batch is not None:
         print(f"[qos] batch: {batch.bound}/{args.batch_load} bound at end, "
               f"{trail.get('Preempted', 0)} preemptions, "

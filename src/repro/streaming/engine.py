@@ -88,6 +88,10 @@ class StreamEngine:
     priority_class: str = "standard"  # serving Deployment's initial tier
     use_runtime: bool = True          # slot-slab runtime (when family allows)
     runtime_cfg: Optional[RuntimeConfig] = None
+    # per-rid greedy token logs on every replica runtime (needs a
+    # runtime_cfg with admit_tail=0): the chaos bench's oracle-comparison
+    # evidence that recovery is token-identical, never duplicated
+    record_tokens: bool = False
     history: list = field(default_factory=list)
     # declarative control plane (built from ``nodes`` unless injected)
     cluster: Optional[Cluster] = None
@@ -99,6 +103,10 @@ class StreamEngine:
     _cp_ports: Dict[str, int] = field(default_factory=dict)
     _next_cp_port: int = 20000
     _budget_frac: float = 0.0         # fractional service budget carry
+    # last known node per replica: when a pod vanishes from the store we
+    # still need to know whether its node was reachable (partition vs
+    # graceful retire) to pick the right recovery path in _sync
+    _pod_nodes: Dict[str, str] = field(default_factory=dict)
 
     # ------------------------------------------------------------ setup
     @property
@@ -171,7 +179,8 @@ class StreamEngine:
             return None
         kernels = self.serving.runtime_kernels(self.runtime_cfg)
         return DecodeRuntime(kernels, self.serving.params,
-                             gen=self.serving.build_gen)
+                             gen=self.serving.build_gen,
+                             record_tokens=self.record_tokens)
 
     def _credit_partial(self, name: str, rt: DecodeRuntime):
         """Credit partial generation of in-flight slots before their
@@ -210,17 +219,39 @@ class StreamEngine:
                 self.runtimes.pop(name, None)
         return rt
 
+    def _node_reachable(self, name: str) -> bool:
+        """Whether the replica's (last known) node is control-plane
+        reachable. Unknown nodes count as reachable."""
+        node = self._pod_nodes.get(name)
+        st = self.cluster.node_status.get(node) if node else None
+        return st is None or st.reachable
+
     def _sync(self, now: float):
         live = {r.name: r for r in self.cluster.pods_of(DEPLOYMENT)
                 if r.bound}
+        for name, rec in live.items():
+            if rec.pod.node:
+                self._pod_nodes[name] = rec.pod.node
         for name in list(self.registries):
             if name not in live:
                 rt = self.runtimes.pop(name, None)
-                if rt is not None:          # zero loss: hand back in-flight
-                    self._credit_partial(name, rt)
+                if rt is not None:
+                    if self._node_reachable(name):
+                        # graceful retire: credit partial output, hand
+                        # back in-flight with max_new = remaining
+                        self._credit_partial(name, rt)
+                    # else: partition — the replica's streamed output is
+                    # unobservable, so nothing is credited; the frontend
+                    # re-issues its in-flight requests (zero loss even
+                    # for rids admitted after the last checkpoint) and
+                    # they replay from the prompt. Checkpoint-restored
+                    # copies of the same rids dedupe against these queue
+                    # entries below, and the orphaned replica itself is
+                    # epoch-fenced on rejoin, so nothing double-emits.
                     self.queue = rt.drain() + self.queue
                 self.registries.pop(name, None)
                 self.stats.pop(name, None)
+                self._pod_nodes.pop(name, None)
         # prune the §4.6.3 control-plane port map with the registries —
         # ports stay stable for live pods but no longer grow monotonically
         # across evict/reschedule cycles
@@ -290,6 +321,13 @@ class StreamEngine:
         tokens_before = self.total_tokens
         for name in sorted(self.registries):
             reg = self.registries[name]
+            if not self._node_reachable(name):
+                # partitioned replica: the frontend can't route to it nor
+                # observe its output — freeze it (no metering, no pump)
+                # until the lifecycle controller re-serves its work
+                # elsewhere and the rejoining node is epoch-fenced
+                reg.gauge("ersap_queue_len").set(len(self.queue))
+                continue
             n_take = min(len(self.queue), budget)
             took, self.queue = self.queue[:n_take], self.queue[n_take:]
             rt = self.runtimes.get(name)

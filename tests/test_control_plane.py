@@ -70,11 +70,13 @@ def test_scheduler_backoff_retries_until_capacity_frees():
     rec = cluster.submit(mkpod("waiting", chips=2), 0.0)
     sched.run_once(0.0)
     assert not rec.bound and rec.attempts == 1
-    assert rec.next_retry == pytest.approx(5.0)
+    # exponential base stretched by the decorrelation jitter (<= 25%)
+    assert 5.0 <= rec.next_retry <= 5.0 * (1 + sched.backoff_jitter)
     sched.run_once(1.0)                     # still backing off: not retried
     assert rec.attempts == 1
-    sched.run_once(6.0)                     # retried, still no room
-    assert rec.attempts == 2 and rec.next_retry == pytest.approx(16.0)
+    sched.run_once(7.0)                     # retried, still no room
+    assert rec.attempts == 2
+    assert 10.0 <= rec.next_retry - 7.0 <= 10.0 * (1 + sched.backoff_jitter)
     cluster.evict("big", 20.0)              # capacity frees
     sched.run_once(20.0)
     assert rec.bound
