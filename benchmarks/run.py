@@ -647,6 +647,151 @@ def bench_chaos_soak():
         f"audit_ticks={2 * (ticks + drain)};seeds=2")
 
 
+def bench_scale_bringup():
+    """Event-driven control plane at 10k-node / 50k-pod scale (ISSUE-8):
+    bring the fleet up, then run a churn phase — full heartbeat storms
+    every tick plus evictions, walltime cuts and straggler flips — and
+    report watch-bus throughput (deltas dispatched per second), per-tick
+    reconcile latency, and a machine-independent polling-vs-event
+    steady-state speedup measured head-to-head in one process.
+
+    Internal assertion gates (this bench is part of ``--check``): every
+    replica binds after bring-up AND after the churn settles, the
+    incremental capacity index verifies against a from-scratch recompute
+    at the end, bus throughput stays above an absolute floor set far
+    below any healthy interpreter, and the event plane's steady-state
+    tick beats polling by a comfortable margin (the point of the
+    refactor: reconcile work scales with the *delta rate*, not the
+    fleet size)."""
+    from repro.core.cluster import Cluster, Deployment, PodTemplate
+    from repro.core.controllers import ControlPlane
+    from repro.core.jrm import SliceSpec, start_vk
+
+    n_nodes = 2_000 if FAST else 10_000
+    n_deps = 20 if FAST else 50
+    per_dep = 500 if FAST else 1_000          # pods = n_deps * per_dep
+    churn_ticks = 6 if FAST else 20
+    # absolute churn-phase floor, set ~3-5x below healthy interpreter
+    # rates (34k/s fast, 125k/s full on the dev box) so only a genuine
+    # regression — not a slow CI runner — trips it
+    events_floor = 10_000.0 if FAST else 25_000.0
+    speedup_floor = 2.0                       # steady-state tick, evt vs poll
+    sites = [f"site{i}" for i in range(8)]
+    tol = [{"key": "virtual-kubelet.io/provider", "value": "mock"}]
+    n_pods = n_deps * per_dep
+
+    t0 = time.perf_counter()
+    cluster = Cluster()
+    plane = ControlPlane(cluster)
+    for i in range(n_nodes):
+        cluster.register_node(
+            start_vk(f"n{i}", site=sites[i % len(sites)],
+                     slice_spec=SliceSpec(chips=8)), 0.0)
+        cluster.heartbeat(f"n{i}", 0.0)
+    for d in range(n_deps):
+        cluster.apply_deployment(Deployment(
+            f"d{d}", per_dep, template=PodTemplate(
+                labels={"app": f"d{d}"}, tolerations=list(tol),
+                request_chips=1)), 0.0)
+    now = 0.0
+    for _ in range(5):
+        plane.step(now)
+        now += 10.0
+        if sum(1 for r in cluster.pods.values() if r.bound) == n_pods:
+            break
+    bound = sum(1 for r in cluster.pods.values() if r.bound)
+    assert bound == n_pods, f"bring-up stalled at {bound}/{n_pods}"
+    bringup_s = time.perf_counter() - t0
+
+    # churn: every node heartbeats every tick (the bus load that made
+    # polling necessary in the first place), plus evictions that should
+    # wake parked work, walltime cuts that drain, straggler flips that
+    # regroup the index
+    names = list(cluster.nodes)
+    tick_s = []
+    churn_from = cluster.deltas_dispatched
+    for t in range(churn_ticks):
+        now += 10.0
+        s = time.perf_counter()
+        for n in names:
+            cluster.heartbeat(n, now)
+        pods = list(cluster.pods)
+        stride = max(1, len(pods) // 50)
+        for name in pods[(t * 37) % stride::stride][:50]:
+            cluster.evict(name, now)
+        cluster.cut_walltime(f"n{(t * 13 + 1) % n_nodes}", now, 30.0)
+        for i in range(5):
+            nd = f"n{(t * 101 + i * 7) % n_nodes}"
+            st = cluster.node_status[nd]
+            cluster.set_node_status(nd, now, ready=st.ready,
+                                    straggler=not st.straggler)
+        plane.step(now)
+        tick_s.append(time.perf_counter() - s)
+    # bus throughput over the churn phase only: bring-up wall time is
+    # dominated by the 50k actual binds (pod objects, containers, the
+    # ledger), which is placement work, not event pumping
+    events_per_s = (cluster.deltas_dispatched - churn_from) / sum(tick_s)
+    # settle: drained/evicted replicas must all re-bind
+    for _ in range(30):
+        now += 10.0
+        for n in names:
+            cluster.heartbeat(n, now)
+        plane.step(now)
+        if sum(1 for r in cluster.pods.values() if r.bound) == n_pods:
+            break
+    bound = sum(1 for r in cluster.pods.values() if r.bound)
+    assert bound == n_pods, f"churn never settled: {bound}/{n_pods}"
+    plane.scheduler._index.verify(now)
+    elapsed = time.perf_counter() - t0
+    assert events_per_s >= events_floor, \
+        f"bus throughput {events_per_s:.0f}/s below floor {events_floor:.0f}"
+
+    # head-to-head: identical steady-state cluster (all replicas bound,
+    # every node heartbeating), one tick measured under each plane. The
+    # polling tick scans the whole fleet; the event tick does O(deltas).
+    def steady_tick_us(polling):
+        c = Cluster()
+        p = ControlPlane(c, polling=polling)
+        small = 300 if FAST else 400
+        for i in range(small):
+            c.register_node(
+                start_vk(f"m{i}", slice_spec=SliceSpec(chips=4)), 0.0)
+            c.heartbeat(f"m{i}", 0.0)
+        c.apply_deployment(Deployment("svc", small * 2, template=PodTemplate(
+            labels={"app": "svc"}, tolerations=list(tol),
+            request_chips=1)), 0.0)
+        p.step(0.0)
+        assert sum(1 for r in c.pods.values() if r.bound) == small * 2
+        state = {"now": 0.0}
+
+        def tick():
+            state["now"] += 10.0
+            for n in c.nodes:
+                c.heartbeat(n, state["now"])
+            p.step(state["now"])
+
+        return _timeit(tick, n=20 if FAST else 40, warmup=3)
+
+    poll_us = steady_tick_us(polling=True)
+    evt_us = steady_tick_us(polling=False)
+    steady_speedup = poll_us / evt_us
+    assert steady_speedup >= speedup_floor, \
+        f"steady-state speedup {steady_speedup:.1f}x < {speedup_floor}x"
+
+    lat = sorted(tick_s)
+    p50 = lat[len(lat) // 2] * 1e3
+    p99 = lat[min(len(lat) - 1, int(len(lat) * 0.99))] * 1e3
+    row("scale_bringup", sum(tick_s) / len(tick_s) * 1e6,
+        f"nodes={n_nodes};pods={n_pods};bringup_s={bringup_s:.2f};"
+        f"total_s={elapsed:.2f};"
+        f"events_dispatched={cluster.deltas_dispatched};"
+        f"events_per_s={events_per_s:.0f};events_floor={events_floor:.0f};"
+        f"churn_tick_p50_ms={p50:.1f};churn_tick_p99_ms={p99:.1f};"
+        f"steady_poll_us={poll_us:.0f};steady_event_us={evt_us:.0f};"
+        f"steady_speedup={steady_speedup:.2f};"
+        f"speedup_floor={speedup_floor};fast={FAST}")
+
+
 # ------------------------------------------------------- serving runtime
 
 def bench_serving_throughput():
@@ -1096,7 +1241,7 @@ BENCHES = [
     bench_queue_16, bench_queue_32,
     bench_dbn_tracking, bench_dbn_control,
     bench_deployment_40, bench_control_plane_churn, bench_federation_churn,
-    bench_priority_spike, bench_chaos_soak,
+    bench_priority_spike, bench_chaos_soak, bench_scale_bringup,
     bench_serving_throughput, bench_paged_decode, bench_prefix_reuse,
     bench_kernel_flash_attention, bench_kernel_mlstm, bench_kernel_ssm,
     bench_kernel_decode_attention,
@@ -1154,6 +1299,7 @@ def run_check(tol: float, record: bool) -> int:
     # exactly-once, token-identical recovery, bounded recovery latency)
     bench_priority_spike()
     bench_chaos_soak()
+    bench_scale_bringup()
 
     def smoke():
         bench_serving_throughput()

@@ -187,7 +187,10 @@ class FaultInjector:
         elif spec.kind in (FLAP, STRAGGLER):
             self._active.append(_Active(spec, target, now + spec.duration))
         elif spec.kind == WALLTIME_CUT:
-            cluster.nodes[target].cut_walltime(now, spec.magnitude)
+            # through the store seam, not node.cut_walltime directly: the
+            # revised lease must reach event-driven subscribers (the
+            # lifecycle controller's deadline heap) as a Node delta
+            cluster.cut_walltime(target, now, spec.magnitude)
 
     def _expire(self, cluster: Cluster, now: float):
         still = []

@@ -59,6 +59,7 @@ pods and backs the scheduler's ``filter_quota`` stage.
 from __future__ import annotations
 
 import itertools
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -84,6 +85,10 @@ class WatchEvent:
     type: str                 # ADDED | MODIFIED | DELETED
     name: str
     obj: object = None
+    # what changed, for O(1) subscriber dispatch without diffing the
+    # object: "heartbeat" | "status" | "bind" | "phase" | "walltime" |
+    # "reachable" | "fence" | "cordon" | "spec" | "" (structural)
+    reason: str = ""
 
 
 @dataclass
@@ -216,6 +221,9 @@ class PodRecord:
     # only holds bindings at-or-below its recorded fence floor, so its
     # orphaned pods are discarded instead of double-serving (split-brain)
     binding_epoch: int = 0
+    # submission-order stamp (store index materializations sort on it so
+    # pods_on returns submission order, not bind order)
+    seq: int = 0
 
     @property
     def name(self) -> str:
@@ -240,7 +248,6 @@ class Cluster:
         self.priority_classes: Dict[str, qos.PriorityClass] = \
             qos.default_priority_classes()
         self.quotas: Dict[Tuple[str, Optional[str]], qos.Quota] = {}
-        self.ledger = qos.QuotaLedger(self)
         # epoch fencing state: last issued binding epoch, plus per-node
         # fence floors (highest epoch evicted while the node was
         # unreachable — anything at or below is stale on rejoin)
@@ -249,16 +256,63 @@ class Cluster:
         self.version = 0              # bumps on every watch emission
         self._watchers: Dict[str, List[Callable[[WatchEvent], None]]] = {}
         self._uid = itertools.count(1)
+        # watch-bus dispatch queue (breadth-ordered delivery even when a
+        # subscriber's callback writes back into the store) + counters
+        self._dispatch_queue: deque = deque()
+        self._dispatching = False
+        self.deltas_emitted = 0       # WatchEvents produced
+        self.deltas_dispatched = 0    # callback deliveries performed
+        # secondary store indices, maintained at the mutation sites so
+        # pending_pods / pods_on / pods_of are O(result) not O(store)
+        self._pod_seq = itertools.count(1)    # submission order stamp
+        self._pending: Dict[str, PodRecord] = {}
+        self._pods_by_owner: Dict[str, Dict[str, PodRecord]] = {}
+        self._pods_by_node: Dict[str, Dict[str, PodRecord]] = {}
+        # the ledger subscribes to the watch bus, so it must come last
+        self.ledger = qos.QuotaLedger(self)
 
     # ------------------------------------------------------- watch bus
     def watch(self, kind: str, callback: Callable[[WatchEvent], None]):
-        self._watchers.setdefault(kind, []).append(callback)
+        """Subscribe ``callback`` to ``kind`` deltas. Returns an
+        unsubscribe handle; calling it (even from inside a dispatch, even
+        from the callback itself) is safe — an unsubscribed callback is
+        never invoked again, including for deltas already queued."""
+        subs = self._watchers.setdefault(kind, [])
+        subs.append(callback)
 
-    def _emit(self, kind: str, type_: str, name: str, obj=None):
+        def _unsubscribe():
+            try:
+                subs.remove(callback)
+            except ValueError:
+                pass
+        return _unsubscribe
+
+    def _emit(self, kind: str, type_: str, name: str, obj=None,
+              reason: str = ""):
+        """Queue-based dispatch: if a callback writes back into the store,
+        the nested delta is appended to the queue and delivered after the
+        current one finishes its subscriber list — every subscriber sees
+        every delta exactly once, in emission order, with no recursion."""
         self.version += 1
-        ev = WatchEvent(kind, type_, name, obj)
-        for cb in self._watchers.get(kind, []):
-            cb(ev)
+        self.deltas_emitted += 1
+        self._dispatch_queue.append(WatchEvent(kind, type_, name, obj,
+                                               reason))
+        if self._dispatching:
+            return
+        self._dispatching = True
+        try:
+            while self._dispatch_queue:
+                ev = self._dispatch_queue.popleft()
+                subs = self._watchers.get(ev.kind)
+                if not subs:
+                    continue
+                for cb in list(subs):
+                    if cb not in subs:      # unsubscribed mid-dispatch
+                        continue
+                    self.deltas_dispatched += 1
+                    cb(ev)
+        finally:
+            self._dispatching = False
 
     # ----------------------------------------------------- event store
     def record(self, now: float, kind: str, name: str, reason: str,
@@ -309,7 +363,12 @@ class Cluster:
             self.record(now, KIND_NODE, name,
                         "Ready" if node.ready else "NotReady",
                         f"alive_left={node.alive_left(now):.0f}")
-            self._emit(KIND_NODE, MODIFIED, name, node)
+            self._emit(KIND_NODE, MODIFIED, name, node, reason="status")
+        # every heartbeat is a delta (reason="heartbeat"): the lifecycle
+        # controller's staleness clock keys off it, and it is the bulk of
+        # the bus load at scale — subscribers must handle it in O(1) and
+        # must NOT treat it as a capacity or eligibility change
+        self._emit(KIND_NODE, MODIFIED, name, node, reason="heartbeat")
         return node.ready
 
     def set_node_status(self, name: str, now: float, *, ready: bool,
@@ -319,6 +378,7 @@ class Cluster:
         """JFM feed path: overwrite the scraped condition."""
         st = self.node_status.setdefault(name, NodeStatus())
         changed = st.ready != ready
+        straggler_changed = st.straggler != straggler
         st.heartbeat_age = heartbeat_age
         st.heartbeat_latency = heartbeat_latency
         st.straggler = straggler
@@ -328,7 +388,13 @@ class Cluster:
             self.record(now, KIND_NODE, name,
                         "Ready" if ready else "NotReady",
                         f"heartbeat_age={heartbeat_age:.0f}")
-            self._emit(KIND_NODE, MODIFIED, name)
+            self._emit(KIND_NODE, MODIFIED, name, self.nodes.get(name),
+                       reason="status")
+        elif straggler_changed:
+            # a straggler flip regroups the node in the scheduler's
+            # capacity index even when readiness is unchanged
+            self._emit(KIND_NODE, MODIFIED, name, self.nodes.get(name),
+                       reason="status")
 
     def set_reachable(self, name: str, now: float, reachable: bool):
         """Partition / rejoin transition at the API-server boundary. A
@@ -341,7 +407,8 @@ class Cluster:
         self.record(now, KIND_NODE, name,
                     "Rejoined" if reachable else "Partitioned",
                     f"fence_epoch={self.fence_epochs.get(name, 0)}")
-        self._emit(KIND_NODE, MODIFIED, name, self.nodes.get(name))
+        self._emit(KIND_NODE, MODIFIED, name, self.nodes.get(name),
+                   reason="reachable")
 
     def orphaned_pods(self, node_name: str) -> List[Pod]:
         """Pod objects still held by the node's kubelet with no matching
@@ -373,7 +440,7 @@ class Cluster:
                         f"node={name} epoch<={floor} "
                         f"current_epoch={self.binding_epoch}")
         if fenced:
-            self._emit(KIND_NODE, MODIFIED, name, node)
+            self._emit(KIND_NODE, MODIFIED, name, node, reason="fence")
         return fenced
 
     def cordon(self, name: str, now: float, reason: str = "Draining"):
@@ -382,7 +449,20 @@ class Cluster:
             st.schedulable = False
             self.record(now, KIND_NODE, name, reason,
                         f"alive_left={self.nodes[name].alive_left(now):.0f}")
-            self._emit(KIND_NODE, MODIFIED, name, self.nodes[name])
+            self._emit(KIND_NODE, MODIFIED, name, self.nodes[name],
+                       reason="cordon")
+
+    def cut_walltime(self, name: str, now: float,
+                     remaining: float) -> VirtualNode:
+        """Facility-side lease revision (chaos walltime_cut, scontrol
+        update): shorten the node's remaining walltime through the store
+        so the delta reaches the lifecycle controller's deadline clock —
+        mutating ``node.cut_walltime`` directly would leave event-driven
+        subscribers believing the old expiry."""
+        node = self.nodes[name]
+        node.cut_walltime(now, remaining)
+        self._emit(KIND_NODE, MODIFIED, name, node, reason="walltime")
+        return node
 
     def schedulable_nodes(self, now: float) -> List[VirtualNode]:
         out = []
@@ -497,8 +577,12 @@ class Cluster:
                         submitted_at=now, site_selector=tuple(site_selector),
                         site_anti_affinity=tuple(site_anti_affinity),
                         data_stream=data_stream, restored_from=restored_from,
-                        restored_state=restored_state)
+                        restored_state=restored_state,
+                        seq=next(self._pod_seq))
         self.pods[pod.name] = rec
+        self._pending[pod.name] = rec
+        if owner is not None:
+            self._pods_by_owner.setdefault(owner, {})[pod.name] = rec
         self._emit(KIND_POD, ADDED, pod.name, rec)
         self.record(now, KIND_POD, pod.name, "Created",
                     f"owner={owner or '-'}")
@@ -511,10 +595,12 @@ class Cluster:
         node.create_pod(rec.pod, now)
         self.binding_epoch += 1
         rec.binding_epoch = self.binding_epoch
+        self._pending.pop(pod_name, None)
+        self._pods_by_node.setdefault(node_name, {})[pod_name] = rec
         reason = "Rescheduled" if rec.restored_from else "Scheduled"
         self.record(now, KIND_POD, pod_name, reason,
                     f"node={node_name} epoch={rec.binding_epoch}")
-        self._emit(KIND_POD, MODIFIED, pod_name, rec)
+        self._emit(KIND_POD, MODIFIED, pod_name, rec, reason="bind")
         return rec
 
     def evict(self, pod_name: str, now: float, reason: str = "Evicted",
@@ -524,7 +610,15 @@ class Cluster:
         rec = self.pods.pop(pod_name, None)
         if rec is None:
             return None
+        self._pending.pop(pod_name, None)
+        if rec.owner is not None:
+            owned = self._pods_by_owner.get(rec.owner)
+            if owned is not None:
+                owned.pop(pod_name, None)
         if rec.pod.node is not None:
+            on_node = self._pods_by_node.get(rec.pod.node)
+            if on_node is not None:
+                on_node.pop(pod_name, None)
             node = self.nodes.get(rec.pod.node)
             st = self.node_status.get(rec.pod.node)
             if node is not None:
@@ -544,17 +638,30 @@ class Cluster:
         self._emit(KIND_POD, DELETED, pod_name, rec)
         return rec
 
+    # Index-backed reads. All three are O(result), not O(store): the
+    # dicts are maintained at submit/assign/evict. Materializations sort
+    # on PodRecord.seq where insertion order could differ from submission
+    # order (pods_on inserts at bind time), so callers observe exactly
+    # the ordering the old full scans produced.
+    def note_pod_phase(self, pod_name: str, now: float) -> None:
+        """Seam for pod-side phase transitions that happen without a
+        store mutation (a container finishing on the kubelet): emits a
+        Pod MODIFIED delta so event-driven subscribers (quota ledger,
+        capacity index, deployment controller) observe the change."""
+        rec = self.pods.get(pod_name)
+        if rec is not None:
+            self._emit(KIND_POD, MODIFIED, pod_name, rec, reason="phase")
+
     def pending_pods(self) -> List[PodRecord]:
-        return [r for r in self.pods.values() if not r.bound]
+        return list(self._pending.values())
 
     def pods_on(self, node_name: str) -> List[PodRecord]:
-        return [r for r in self.pods.values() if r.pod.node == node_name]
+        return sorted(self._pods_by_node.get(node_name, {}).values(),
+                      key=lambda r: r.seq)
 
     def pods_of(self, deployment: str, live_only: bool = True) -> List[PodRecord]:
         out = []
-        for r in self.pods.values():
-            if r.owner != deployment:
-                continue
+        for r in self._pods_by_owner.get(deployment, {}).values():
             if live_only and r.bound and r.pod.phase in (
                     PodPhase.SUCCEEDED, PodPhase.FAILED):
                 continue
@@ -586,7 +693,7 @@ class Cluster:
             self.record(now, KIND_DEPLOYMENT, name, "Scaled",
                         f"{dep.replicas}->{replicas} by {source}")
             dep.replicas = replicas
-            self._emit(KIND_DEPLOYMENT, MODIFIED, name, dep)
+            self._emit(KIND_DEPLOYMENT, MODIFIED, name, dep, reason="spec")
         return dep
 
     def set_priority(self, name: str, priority_class: str, now: float,
@@ -615,5 +722,5 @@ class Cluster:
                 rec.next_retry = now
         self.record(now, KIND_DEPLOYMENT, name, "PriorityChanged",
                     f"{old}->{priority_class} by {source}")
-        self._emit(KIND_DEPLOYMENT, MODIFIED, name, dep)
+        self._emit(KIND_DEPLOYMENT, MODIFIED, name, dep, reason="spec")
         return dep

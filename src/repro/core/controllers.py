@@ -33,15 +33,17 @@ FailedScheduling transition event instead of hot-looping (see
 """
 from __future__ import annotations
 
+import heapq
 import pathlib
 import tempfile
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
 from repro.checkpoint import checkpointer
-from repro.core.cluster import KIND_NODE, KIND_POD, Cluster, PodRecord
+from repro.core.cluster import (ADDED, KIND_DEPLOYMENT, KIND_NODE, KIND_POD,
+                                Cluster, PodRecord, WatchEvent)
 from repro.core.scheduler import Scheduler
 
 
@@ -51,6 +53,33 @@ class DeploymentController:
     # state parked by the NodeLifecycleController, keyed by deployment:
     # [(predecessor pod name, runtime state), ...]
     pending_restores: Dict[str, List] = field(default_factory=dict)
+    # polling=True reproduces the pre-event-driven behavior bit for bit:
+    # every Deployment is reconciled every pass. Event-driven (default)
+    # reconciles only Deployments a watch delta has marked dirty — a
+    # spec write, or any delta of an owned pod (create/bind/evict/phase;
+    # an evict always precedes its park_state, so parked restores are
+    # consumed or dropped on exactly the pass polling would).
+    polling: bool = False
+    event_budget: int = 0       # max dirty Deployments per pass (0 = all)
+    # insertion-ordered (dict-as-ordered-set): when the budget caps a
+    # pass, the OLDEST-dirty Deployments go first, so one that keeps
+    # re-dirtying itself (its own pod churn) cannot starve the rest
+    _dirty: Dict[str, None] = field(default_factory=dict, init=False,
+                                    repr=False)
+
+    def __post_init__(self):
+        self.cluster.watch(KIND_DEPLOYMENT, self._on_deployment_delta)
+        self.cluster.watch(KIND_POD, self._on_pod_delta)
+        for name in self.cluster.deployments:
+            self._dirty.setdefault(name)
+
+    def _on_deployment_delta(self, ev: WatchEvent) -> None:
+        self._dirty.setdefault(ev.name)
+
+    def _on_pod_delta(self, ev: WatchEvent) -> None:
+        owner = getattr(ev.obj, "owner", None)
+        if owner is not None:
+            self._dirty.setdefault(owner)
 
     def park_state(self, deployment: str, pod_name: str, state: dict):
         self.pending_restores.setdefault(deployment, []).append(
@@ -59,7 +88,20 @@ class DeploymentController:
     def reconcile(self, now: float) -> List[str]:
         """One pass: returns names of pods created this pass."""
         created = []
-        for dep in self.cluster.deployments.values():
+        chosen = None
+        if not self.polling:
+            # budget selection is dirty-FIFO (oldest first, fair); the
+            # visit below stays in store order so dirty Deployments
+            # reconcile in the same relative order the polling scan used
+            names = list(self._dirty)
+            if self.event_budget and len(names) > self.event_budget:
+                names = names[:self.event_budget]
+            chosen = set(names)
+            for name in names:     # re-dirtied mid-pass -> back of queue
+                self._dirty.pop(name, None)
+        for dep in list(self.cluster.deployments.values()):
+            if chosen is not None and dep.name not in chosen:
+                continue
             live = self.cluster.pods_of(dep.name)
             # scale down: prefer retiring still-pending pods, then newest
             while len(live) > dep.replicas:
@@ -114,10 +156,109 @@ class NodeLifecycleController:
     # of the drain path (flaky shared filesystems are the steady state)
     ckpt_retries: int = 2
     ckpt_timeout: Optional[float] = 10.0
+    # polling=True reconciles every node every pass (the reference
+    # behavior). Event-driven (default) reconciles only nodes that are
+    # *dirty* (a non-heartbeat Node delta arrived) or *due* (a deadline
+    # from the lazy heap fired: walltime expiry, drain-margin entry, or
+    # heartbeat staleness). Pod deltas never dirty a node: a pod can
+    # only bind to a ready+schedulable node, so a bind cannot create
+    # lifecycle-actionable state that a deadline or node delta doesn't
+    # already cover.
+    polling: bool = False
+    event_budget: int = 0       # max nodes reconciled per pass (0 = all)
     _drained: Set[str] = field(default_factory=set)
     _ckpt_steps: Dict[str, int] = field(default_factory=dict)
     _last_bg_ckpt: Dict[str, float] = field(default_factory=dict)
     _not_ready_seen: Set[str] = field(default_factory=set)
+    # insertion-ordered (dict-as-ordered-set), same fairness contract as
+    # the DeploymentController: budget picks oldest-dirty first
+    _dirty: Dict[str, None] = field(default_factory=dict, init=False,
+                                    repr=False)
+    # lazy deadline heap: (time, entry-kind, node). Walltime entries are
+    # pushed at registration / walltime-cut; heartbeat-staleness entries
+    # are re-armed from the *live* last_heartbeat at pop time, so the
+    # 10k-per-tick heartbeat storm costs O(1) per heartbeat and the heap
+    # stays O(nodes)
+    _deadlines: List[Tuple[float, str, str]] = field(default_factory=list,
+                                                     init=False, repr=False)
+    _hb_armed: Set[str] = field(default_factory=set, init=False, repr=False)
+    _reg_seq: Dict[str, int] = field(default_factory=dict, init=False,
+                                     repr=False)
+
+    def __post_init__(self):
+        self.cluster.watch(KIND_NODE, self._on_node_delta)
+        for name in self.cluster.nodes:
+            self._track_node(name)
+
+    def _track_node(self, name: str) -> None:
+        self._reg_seq.setdefault(name, len(self._reg_seq))
+        self._dirty.setdefault(name)
+        self._push_walltime_deadlines(name)
+        self._arm_heartbeat(name)
+
+    def _push_walltime_deadlines(self, name: str) -> None:
+        node = self.cluster.nodes.get(name)
+        if node is None or node.walltime <= 0:
+            return
+        expiry = node.created_at + node.walltime
+        heapq.heappush(self._deadlines, (expiry, "expiry", name))
+        heapq.heappush(self._deadlines,
+                       (expiry - node.drain_margin, "drain", name))
+
+    def _arm_heartbeat(self, name: str) -> None:
+        if name in self._hb_armed:
+            return
+        node = self.cluster.nodes.get(name)
+        if node is None:
+            return
+        self._hb_armed.add(name)
+        heapq.heappush(self._deadlines,
+                       (node.last_heartbeat + self.stale_after, "hb", name))
+
+    def _on_node_delta(self, ev: WatchEvent) -> None:
+        if ev.reason == "heartbeat":
+            # O(1) on the hot path: make sure a staleness deadline is
+            # armed; its pop re-reads the live heartbeat clock
+            self._arm_heartbeat(ev.name)
+            return
+        if ev.type == ADDED:
+            self._track_node(ev.name)
+            return
+        self._dirty.setdefault(ev.name)
+        if ev.reason == "walltime":
+            # lease revised: the old heap entries pop harmlessly (the
+            # body is idempotent); the new ones carry the revised times
+            self._push_walltime_deadlines(ev.name)
+
+    def _pop_due(self, now: float) -> Set[str]:
+        due: Set[str] = set()
+        while self._deadlines and self._deadlines[0][0] <= now:
+            _, kind, name = heapq.heappop(self._deadlines)
+            node = self.cluster.nodes.get(name)
+            if kind == "hb":
+                self._hb_armed.discard(name)
+                if node is not None:
+                    next_hb = node.last_heartbeat + self.stale_after
+                    st = self.cluster.node_status.get(name)
+                    actionable = (st is not None and st.ready) or \
+                        bool(self.cluster.pods_on(name))
+                    if next_hb > now:
+                        self._arm_heartbeat(name)
+                    elif actionable:
+                        # stale this very tick: the body below handles
+                        # it; re-arm epsilon-late so an exactly-at-the-
+                        # boundary age (== stale_after, not >) is caught
+                        # on the next pass, matching the polling scan
+                        self._hb_armed.add(name)
+                        heapq.heappush(self._deadlines,
+                                       (now + 1e-9, "hb", name))
+                        due.add(name)
+                    # stale and inactionable (already failed, no pods):
+                    # stay disarmed — the next heartbeat delta re-arms
+                continue
+            if node is not None:
+                due.add(name)
+        return due
 
     def checkpoint_pod(self, rec: PodRecord, now: float) -> Optional[dict]:
         """Snapshot the pod's runtime state through repro.checkpoint: the
@@ -194,7 +335,11 @@ class NodeLifecycleController:
                 self.deployment_ctrl.park_state(
                     evicted.owner, evicted.name, state or {})
         if not self.cluster.pods_on(name):
-            self._drained.add(name)      # paced drains continue next pass
+            self._drained.add(name)
+        else:
+            # paced drains continue next pass: keep the node dirty so
+            # the event-driven loop returns to it without a new delta
+            self._dirty.setdefault(name)
 
     def drain_allocation(self, names: List[str], now: float):
         """Batch drain a whole pilot allocation (§4.5.4 at site scale):
@@ -244,43 +389,72 @@ class NodeLifecycleController:
             if got is not None:
                 self._last_bg_ckpt[rec.name] = now
 
+    def _reconcile_node(self, name: str, now: float,
+                        to_drain: List[str]) -> None:
+        """The per-node reconcile body — shared verbatim between the
+        polling scan and the event-driven dirty/due path, so the two
+        modes can only differ in *which* nodes they visit, never in what
+        they do to one. It is idempotent and convergent: visiting a node
+        polling would not have visited is always a no-op."""
+        node = self.cluster.nodes.get(name)
+        st = self.cluster.node_status.get(name)
+        if node is None or st is None:
+            return
+        if node.walltime > 0 and node.alive_left(now) <= 0:
+            if node.ready or st.ready or self.cluster.pods_on(name):
+                node.ready = False
+                self._fail_node(name, now, "walltime expired")
+            return
+        # staleness from the node's own heartbeat clock, so dead nodes
+        # are caught even when no JFM feed refreshes heartbeat_age
+        age = max(st.heartbeat_age, now - node.last_heartbeat)
+        stale = age > self.stale_after
+        if stale and (st.ready or self.cluster.pods_on(name)):
+            self._fail_node(name, now, "heartbeat stale")
+            self._not_ready_seen.add(name)
+            return
+        if not st.ready:
+            # flap window: a NotReady report with heartbeats still
+            # fresh is NOT failed — wait out stale_after; most flaps
+            # recover and cost nothing. (The old code evicted here.)
+            self._not_ready_seen.add(name)
+            return
+        if name in self._not_ready_seen:
+            # exactly one recovery event per NotReady episode
+            self._not_ready_seen.discard(name)
+            self.cluster.record(now, KIND_NODE, name, "NodeRecovered",
+                                f"heartbeat_age={age:.0f}")
+        if st.reachable and name in self.cluster.fence_epochs:
+            # partition healed and the node is back + healthy: fence
+            # its stale-epoch orphans before anything can double-serve
+            self.cluster.fence_node(name, now)
+        if node.draining(now) and name not in self._drained:
+            to_drain.append(name)
+
     def reconcile(self, now: float):
         self._background_checkpoints(now)
-        to_drain = []
-        for name, node in list(self.cluster.nodes.items()):
-            st = self.cluster.node_status.get(name)
-            if st is None:
-                continue
-            if node.walltime > 0 and node.alive_left(now) <= 0:
-                if node.ready or st.ready or self.cluster.pods_on(name):
-                    node.ready = False
-                    self._fail_node(name, now, "walltime expired")
-                continue
-            # staleness from the node's own heartbeat clock, so dead nodes
-            # are caught even when no JFM feed refreshes heartbeat_age
-            age = max(st.heartbeat_age, now - node.last_heartbeat)
-            stale = age > self.stale_after
-            if stale and (st.ready or self.cluster.pods_on(name)):
-                self._fail_node(name, now, "heartbeat stale")
-                self._not_ready_seen.add(name)
-                continue
-            if not st.ready:
-                # flap window: a NotReady report with heartbeats still
-                # fresh is NOT failed — wait out stale_after; most flaps
-                # recover and cost nothing. (The old code evicted here.)
-                self._not_ready_seen.add(name)
-                continue
-            if name in self._not_ready_seen:
-                # exactly one recovery event per NotReady episode
-                self._not_ready_seen.discard(name)
-                self.cluster.record(now, KIND_NODE, name, "NodeRecovered",
-                                    f"heartbeat_age={age:.0f}")
-            if st.reachable and name in self.cluster.fence_epochs:
-                # partition healed and the node is back + healthy: fence
-                # its stale-epoch orphans before anything can double-serve
-                self.cluster.fence_node(name, now)
-            if node.draining(now) and name not in self._drained:
-                to_drain.append(name)
+        if self.polling:
+            names = list(self.cluster.nodes)
+        else:
+            due = self._pop_due(now)
+            # budget selection is dirty-FIFO (oldest first, then due
+            # deadlines) so a node that re-dirties itself every pass (a
+            # paced drain) cannot starve the rest
+            fifo = list(self._dirty)
+            fifo += [n for n in due if n not in self._dirty]
+            self._dirty = {}
+            if self.event_budget and len(fifo) > self.event_budget:
+                for n in fifo[self.event_budget:]:
+                    self._dirty.setdefault(n)
+                fifo = fifo[:self.event_budget]
+            # visit in registration order, exactly like the polling
+            # scan's dict iteration, so multi-node waves (a shared
+            # allocation expiring) produce an identical event trail
+            names = sorted(set(fifo),
+                           key=lambda n: self._reg_seq.get(n, 1 << 62))
+        to_drain: List[str] = []
+        for name in names:
+            self._reconcile_node(name, now, to_drain)
         # same-pass expirations (one pilot allocation typically shares a
         # lease) drain as a single wave: cordon all first, then evict
         if to_drain:
@@ -289,11 +463,24 @@ class NodeLifecycleController:
 
 @dataclass
 class ControlPlane:
-    """Store + scheduler + controllers behind one reconcile call."""
+    """Store + scheduler + controllers behind one reconcile call.
+
+    ``step`` is a *dispatch pump*: between ticks, watch deltas accumulate
+    into each controller's dirty set (and the scheduler's capacity index
+    and wake flags); one ``step`` drains them — lifecycle deadlines and
+    dirty nodes, dirty Deployments, then the pending queue. ``polling``
+    reproduces the pre-event-driven plane exactly (every object dirty
+    every tick, full-scan placement, no wake): the differential harness
+    in tests/test_event_plane.py runs both modes over the same scenario
+    scripts and asserts identical stores, event trails, and token
+    outputs. ``event_budget`` caps dirty objects reconciled per
+    controller per tick; the remainder carries to the next tick."""
     cluster: Cluster
     scheduler: Scheduler = None
     deployments: DeploymentController = None
     nodes: NodeLifecycleController = None
+    polling: bool = False
+    event_budget: int = 0
 
     def __post_init__(self):
         if self.scheduler is None:
@@ -309,6 +496,14 @@ class ControlPlane:
             # preemption victims take the same §4.5.4 checkpoint path as
             # drained pods, so a preempted batch job resumes where it was
             self.scheduler.checkpoint_cb = self.nodes.checkpoint_pod
+        if self.polling:
+            self.deployments.polling = True
+            self.nodes.polling = True
+            self.scheduler.use_index = False
+            self.scheduler.wake_on_freed = False
+        if self.event_budget:
+            self.deployments.event_budget = self.event_budget
+            self.nodes.event_budget = self.event_budget
 
     def step(self, now: float):
         """One control-plane tick: lifecycle first (drains/evictions free

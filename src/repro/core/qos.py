@@ -209,16 +209,28 @@ class QuotaLedger:
     """Fair-share accounting over the cluster store.
 
     Usage is *derived* from the store (bound, non-terminal pods) and
-    memoized on the store's watch version, so every preempt -> requeue
-    -> reschedule cycle re-balances the books automatically — there is
-    no imperative counter that could leak. ``assert_balanced`` makes
+    memoized until a relevant watch delta arrives, so every preempt ->
+    requeue -> reschedule cycle re-balances the books automatically —
+    there is no imperative counter that could leak. The ledger
+    subscribes to Pod and Node deltas and marks itself dirty on any of
+    them except heartbeats (which change no usage), so at 10k-node
+    scale the per-tick heartbeat storm no longer invalidates the cache
+    the way version-keyed memoization did. ``assert_balanced`` makes
     the invariant checkable per tick: per-owner books must sum exactly
     to the node-side truth, and node ``used + free == capacity``."""
 
     def __init__(self, cluster):
         self.cluster = cluster
         self._cache: Dict[Tuple, Usage] = {}
-        self._cache_version = -1
+        self._dirty = True
+        # deferred import: cluster.py imports this module at load time
+        from repro.core import cluster as _c
+        cluster.watch(_c.KIND_POD, self._on_delta)
+        cluster.watch(_c.KIND_NODE, self._on_delta)
+
+    def _on_delta(self, ev) -> None:
+        if ev.reason != "heartbeat":
+            self._dirty = True
 
     def _live(self):
         for rec in self.cluster.pods.values():
@@ -230,9 +242,9 @@ class QuotaLedger:
 
     def usage(self, owner: Optional[str],
               site: Optional[str] = None) -> Usage:
-        if self._cache_version != self.cluster.version:
+        if self._dirty:
             self._cache.clear()
-            self._cache_version = self.cluster.version
+            self._dirty = False
         key = (owner, site)
         cached = self._cache.get(key)
         if cached is not None:

@@ -45,11 +45,16 @@ no site spec, so single-facility behavior is unchanged.
 """
 from __future__ import annotations
 
+import bisect
+import itertools
 import zlib
+from collections import Counter
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
-from repro.core.cluster import KIND_POD, Cluster, PodRecord
+from repro.core.cluster import (ADDED, DELETED, MODIFIED, KIND_DEPLOYMENT,
+                                KIND_NODE, KIND_POD, KIND_QUOTA, Cluster,
+                                PodRecord, WatchEvent)
 from repro.core.jrm import VirtualNode
 from repro.core.state_machine import PodPhase
 
@@ -220,12 +225,17 @@ def score_non_straggler(rec, node, sched, now):
 
 
 def _peer_sites(rec, sched) -> Dict[str, int]:
-    """Bound replicas of ``rec``'s owner, counted per site. Memoized on
-    the cluster's watch version: scoring evaluates every candidate node
-    (x2 site stages) per pod, and rescanning the pod table each time
-    turned the §5.1 forty-node bring-up O(pods^2 x nodes)."""
+    """Bound replicas of ``rec``'s owner, counted per site. Served from
+    the scheduler's delta-maintained capacity index (O(1)); the polling
+    reference path (``use_index=False``) falls back to a full pod-table
+    scan memoized on the cluster's watch version — without the memo,
+    scoring every candidate node (x2 site stages) per pod turned the
+    §5.1 forty-node bring-up O(pods^2 x nodes)."""
     if rec.owner is None:
         return {}
+    idx = sched._index
+    if idx is not None and sched.use_index:
+        return idx.owner_sites.get(rec.owner, {})
     key = (rec.owner, sched.cluster.version)
     cached = sched._peer_site_cache
     if cached is not None and cached[0] == key:
@@ -292,6 +302,296 @@ DEFAULT_SCORERS: List[ScoreStage] = [
 ]
 
 
+# ---------------------------------------------------------- capacity index
+
+def _spec_signature(rec: PodRecord) -> tuple:
+    """Everything the DEFAULT filter chain reads off the pod record: two
+    pending pods with equal signatures are rejected by exactly the same
+    nodes for exactly the same reasons at one (store version, now)."""
+    return (rec.owner, rec.pod.request_chips, rec.pod.request_hbm_bytes,
+            rec.request_kv_pages, rec.expected_duration,
+            rec.site_selector, rec.site_anti_affinity,
+            tuple(sorted(rec.pod.node_selector.items())),
+            tuple(tuple(sorted(t.items())) for t in rec.pod.tolerations),
+            repr(rec.pod.affinity))
+
+
+_TERMINAL = (PodPhase.SUCCEEDED, PodPhase.FAILED)
+
+
+class CapacityIndex:
+    """Incremental per-node / per-site free-capacity index, maintained
+    from watch deltas — the generalization of the memoized-on-version
+    pattern the quota ledger and peer-site scoring used, except deltas
+    update it in O(log nodes) instead of invalidating it wholesale.
+
+    Structure: eligible nodes (ready, schedulable, reachable) are
+    grouped by ``(site, straggler)`` — the only node attributes the
+    DEFAULT score stages read besides free HBM and used fraction, so
+    every score stage is constant within a group except
+    ``score_bestfit_hbm`` and ``score_spread``. Each group keeps its
+    entries sorted ascending by ``(free_hbm, used_frac, reg_seq)``.
+
+    Equivalence with the full-scan ``max(candidates, key=score)``:
+
+    * within a group, the score tuple varies only in
+      ``(-(free_hbm - req), -used_frac)`` and the full scan's tie-break
+      (first node in registration order wins ``max``) is ``-reg_seq`` —
+      so the *lexicographically smallest* ``(free_hbm, used_frac,
+      reg_seq)`` entry with ``free_hbm >= req`` is the within-group
+      argmax. ``bisect`` finds it; the walk runs the full live filter
+      chain per entry (draining, walltime, quota and any time-dependent
+      predicate stay authoritative — the index only orders candidates).
+    * across groups, the winners compete on the full live score with
+      ``-reg_seq`` as tie-break, reproducing global ``max`` exactly.
+
+    Invalidation rules (see docs/ARCHITECTURE.md): Pod ``bind`` /
+    ``DELETED`` / ``phase`` deltas reindex the touched node and adjust
+    the per-owner site counts + preemption-victim histogram; Node
+    ``ADDED``/``DELETED``/status deltas reindex that node; ``heartbeat``
+    deltas are ignored by construction (they change no capacity).
+    ``verify()`` recomputes everything from the store and raises on any
+    drift — the property suite and the scale bench call it."""
+
+    def __init__(self, cluster: Cluster):
+        self.cluster = cluster
+        # (site, straggler) -> ascending [(free_hbm, used_frac, seq, name)]
+        self.groups: Dict[Tuple[str, bool], list] = {}
+        self.node_entry: Dict[str, tuple] = {}   # name -> indexed snapshot
+        self.reg_seq: Dict[str, int] = {}
+        self.site_free_chips: Counter = Counter()
+        self.site_free_hbm: Counter = Counter()
+        self.owner_sites: Dict[str, Dict[str, int]] = {}
+        self._counted_site: Dict[str, Tuple[Optional[str], str]] = {}
+        self._victims: Counter = Counter()       # priority -> victim count
+        self._victim_prio: Dict[str, int] = {}
+        self._victims_dirty = False
+        self._reg = itertools.count(1)
+        for name in cluster.nodes:
+            self.add_node(name)
+        for rec in cluster.pods.values():
+            if rec.bound:
+                self._count_pod(rec)
+
+    # ------------------------------------------------------ node deltas
+    def add_node(self, name: str) -> None:
+        self.reg_seq[name] = next(self._reg)
+        self.reindex_node(name)
+        # a re-registered node may still carry bound pods from its
+        # previous incarnation: count them back in
+        for rec in self.cluster.pods_on(name):
+            self._count_pod(rec)
+
+    def remove_node(self, name: str) -> None:
+        self._drop_entry(name)
+        self.reg_seq.pop(name, None)
+        # bound pods now point at a vanished node: the full scan's
+        # peer-site counting skips them, so the index must too
+        for rec in self.cluster.pods_on(name):
+            self._uncount_pod(rec.name)
+
+    def _drop_entry(self, name: str) -> None:
+        old = self.node_entry.pop(name, None)
+        if old is None:
+            return
+        gkey, entry, free_chips = old
+        grp = self.groups.get(gkey)
+        if grp is not None:
+            i = bisect.bisect_left(grp, entry)
+            if i < len(grp) and grp[i] == entry:
+                del grp[i]
+            if not grp:
+                del self.groups[gkey]
+        self.site_free_chips[gkey[0]] -= free_chips
+        self.site_free_hbm[gkey[0]] -= entry[0]
+
+    def reindex_node(self, name: str) -> bool:
+        """Recompute one node's eligibility and sort keys from the
+        authoritative node/status objects. Returns True when the node
+        gained schedulable capacity (became eligible, or free capacity
+        grew) — the scheduler's capacity-freed wake signal."""
+        old = self.node_entry.get(name)
+        self._drop_entry(name)
+        node = self.cluster.nodes.get(name)
+        st = self.cluster.node_status.get(name)
+        if node is None or st is None:
+            return False
+        if not (st.ready and st.schedulable and st.reachable):
+            return False
+        free_hbm = node.free_hbm()
+        free_chips = node.free_chips()
+        used_frac = node.used_chips() / max(float(node.slice_spec.chips),
+                                            1.0)
+        gkey = (node.site, bool(st.straggler))
+        entry = (free_hbm, used_frac, self.reg_seq.get(name, 0), name)
+        grp = self.groups.setdefault(gkey, [])
+        bisect.insort(grp, entry)
+        self.node_entry[name] = (gkey, entry, free_chips)
+        self.site_free_chips[gkey[0]] += free_chips
+        self.site_free_hbm[gkey[0]] += free_hbm
+        if old is None:
+            return True
+        return free_chips > old[2] or free_hbm > old[1][0]
+
+    # ------------------------------------------------------- pod deltas
+    def on_pod_event(self, ev: WatchEvent) -> None:
+        rec = ev.obj
+        if rec is None:
+            return
+        if ev.type == MODIFIED and ev.reason == "bind":
+            self.reindex_node(rec.pod.node)
+            self._count_pod(rec)
+        elif ev.type == DELETED and rec.pod.node is not None:
+            self.reindex_node(rec.pod.node)
+            self._uncount_pod(rec.name)
+        elif ev.type == MODIFIED and ev.reason == "phase":
+            if rec.pod.node is not None:
+                self.reindex_node(rec.pod.node)
+            if rec.pod.phase in _TERMINAL:
+                self._uncount_pod(rec.name)
+
+    def _count_pod(self, rec: PodRecord) -> None:
+        """Start counting a bound, live pod in the per-owner site counts
+        (peer-site scoring) and the preemption-victim histogram."""
+        if rec.name in self._counted_site or rec.pod.phase in _TERMINAL:
+            return
+        node = self.cluster.nodes.get(rec.pod.node)
+        if node is None:
+            return
+        self._counted_site[rec.name] = (rec.owner, node.site)
+        if rec.owner is not None:
+            sites = self.owner_sites.setdefault(rec.owner, {})
+            sites[node.site] = sites.get(node.site, 0) + 1
+        if rec.preemptible:
+            self._victim_prio[rec.name] = rec.priority
+            self._victims[rec.priority] += 1
+
+    def _uncount_pod(self, name: str) -> None:
+        counted = self._counted_site.pop(name, None)
+        if counted is None:
+            return
+        owner, site = counted
+        if owner is not None:
+            sites = self.owner_sites.get(owner)
+            if sites is not None:
+                sites[site] -= 1
+                if sites[site] <= 0:
+                    del sites[site]
+                if not sites:
+                    del self.owner_sites[owner]
+        prio = self._victim_prio.pop(name, None)
+        if prio is not None:
+            self._victims[prio] -= 1
+            if self._victims[prio] <= 0:
+                del self._victims[prio]
+
+    # ----------------------------------------------- preemption victims
+    def mark_victims_dirty(self) -> None:
+        """set_priority re-tiers bound pods through a Deployment delta
+        (no per-pod deltas): rebuild the histogram lazily on next use."""
+        self._victims_dirty = True
+
+    def _rebuild_victims(self) -> None:
+        self._victims.clear()
+        self._victim_prio.clear()
+        for name, (owner, site) in self._counted_site.items():
+            rec = self.cluster.pods.get(name)
+            if rec is not None and rec.preemptible:
+                self._victim_prio[name] = rec.priority
+                self._victims[rec.priority] += 1
+        self._victims_dirty = False
+
+    def has_victims_below(self, priority: int) -> bool:
+        """O(#tiers) early-out for the preemption scan: no bound
+        preemptible pod below ``priority`` means ``_try_preempt`` cannot
+        succeed anywhere — skip its full node walk."""
+        if self._victims_dirty:
+            self._rebuild_victims()
+        return any(p < priority for p in self._victims)
+
+    # ---------------------------------------------------------- lookup
+    def select(self, rec: PodRecord, sched: "Scheduler",
+               now: float) -> Optional[VirtualNode]:
+        """First live-feasible entry per group (= within-group argmax,
+        see class docstring), then the global max over group winners on
+        the full score with registration order as tie-break."""
+        best = None
+        best_key = None
+        req_hbm = rec.pod.request_hbm_bytes
+        for (site, straggler), entries in self.groups.items():
+            if rec.site_selector and site not in rec.site_selector:
+                continue
+            if site in rec.site_anti_affinity:
+                continue
+            i = bisect.bisect_left(entries, (req_hbm,))
+            while i < len(entries):
+                _, _, seq, name = entries[i]
+                node = self.cluster.nodes.get(name)
+                if node is not None and \
+                        sched.feasible(rec, node, now) is None:
+                    key = (sched.score(rec, node, now), -seq)
+                    if best_key is None or key > best_key:
+                        best, best_key = node, key
+                    break
+                i += 1
+        return best
+
+    # ---------------------------------------------------------- verify
+    def verify(self, now: float = 0.0) -> None:
+        """Full from-scratch recompute vs the incremental state; raises
+        AssertionError naming the first drift. The property suite runs
+        it after randomized op interleavings; the scale bench runs it
+        once after churn."""
+        cl = self.cluster
+        want_entries: Dict[str, tuple] = {}
+        want_chips: Counter = Counter()
+        want_hbm: Counter = Counter()
+        for name, node in cl.nodes.items():
+            st = cl.node_status.get(name)
+            if st is None or not (st.ready and st.schedulable
+                                  and st.reachable):
+                continue
+            gkey = (node.site, bool(st.straggler))
+            used_frac = node.used_chips() / max(
+                float(node.slice_spec.chips), 1.0)
+            want_entries[name] = (gkey, (node.free_hbm(), used_frac,
+                                         self.reg_seq.get(name, 0), name))
+            want_chips[node.site] += node.free_chips()
+            want_hbm[node.site] += node.free_hbm()
+        have = {n: (g, e) for n, (g, e, _) in self.node_entry.items()}
+        assert have == want_entries, \
+            f"node entries drifted: {have} != {want_entries}"
+        for gkey, grp in self.groups.items():
+            assert grp == sorted(grp), f"group {gkey} unsorted: {grp}"
+            for entry in grp:
+                name = entry[3]
+                assert want_entries.get(name) == (gkey, entry), \
+                    f"stale group entry {entry} in {gkey}"
+        assert +self.site_free_chips == +want_chips, \
+            f"site free chips drifted: {self.site_free_chips} != {want_chips}"
+        assert +self.site_free_hbm == +want_hbm, \
+            f"site free HBM drifted: {self.site_free_hbm} != {want_hbm}"
+        want_sites: Dict[str, Dict[str, int]] = {}
+        want_victims: Counter = Counter()
+        for rec in cl.pods.values():
+            if not rec.bound or rec.pod.phase in _TERMINAL:
+                continue
+            node = cl.nodes.get(rec.pod.node)
+            if node is None:
+                continue
+            if rec.owner is not None:
+                sites = want_sites.setdefault(rec.owner, {})
+                sites[node.site] = sites.get(node.site, 0) + 1
+            if rec.preemptible:
+                want_victims[rec.priority] += 1
+        assert self.owner_sites == want_sites, \
+            f"owner sites drifted: {self.owner_sites} != {want_sites}"
+        if self._victims_dirty:
+            self._rebuild_victims()
+        assert +self._victims == +want_victims, \
+            f"victim histogram drifted: {self._victims} != {want_victims}"
+
+
 @dataclass
 class Decision:
     pod: str
@@ -322,7 +622,72 @@ class Scheduler:
     # runtime state rides its requeued record (None -> no checkpoint)
     checkpoint_cb: Optional[Callable[[PodRecord, float], Optional[dict]]] = \
         None
+    # event-driven switches. ``use_index`` routes placement through the
+    # delta-maintained CapacityIndex fast path (bisect per group instead
+    # of a full node scan); ``wake_on_freed`` re-arms parked
+    # FailedScheduling pods the moment a capacity-freed or
+    # quota-released delta arrives, demoting the jittered backoff to a
+    # fallback. Both False reproduces the pure polling scheduler —
+    # the differential harness pins the two paths against each other.
+    use_index: bool = True
+    wake_on_freed: bool = True
     _peer_site_cache: Optional[tuple] = field(default=None, repr=False)
+    _index: Optional[CapacityIndex] = field(default=None, init=False,
+                                            repr=False)
+    _wake_capacity: bool = field(default=False, init=False, repr=False)
+    _wake_quota_owners: Set[str] = field(default_factory=set, init=False,
+                                         repr=False)
+    _scan_stamp: Optional[tuple] = field(default=None, init=False,
+                                         repr=False)
+    _scan_cache: Dict[tuple, str] = field(default_factory=dict, init=False,
+                                          repr=False)
+
+    def __post_init__(self):
+        self._index = CapacityIndex(self.cluster)
+        self.cluster.watch(KIND_POD, self._on_pod_delta)
+        self.cluster.watch(KIND_NODE, self._on_node_delta)
+        self.cluster.watch(KIND_QUOTA, self._on_quota_delta)
+        self.cluster.watch(KIND_DEPLOYMENT, self._on_deployment_delta)
+
+    # ---------------------------------------------------- delta intake
+    def _on_pod_delta(self, ev: WatchEvent) -> None:
+        self._index.on_pod_event(ev)
+        rec = ev.obj
+        if ev.type == DELETED and rec is not None \
+                and rec.pod.node is not None:
+            # a bound pod left: its chips/HBM and its quota share are
+            # both free again
+            self._wake_capacity = True
+            if rec.owner is not None and \
+                    any(k[0] == rec.owner for k in self.cluster.quotas):
+                self._wake_quota_owners.add(rec.owner)
+
+    def _on_node_delta(self, ev: WatchEvent) -> None:
+        if ev.reason == "heartbeat":
+            return      # no capacity or eligibility change, by contract
+        if ev.type == ADDED:
+            self._index.add_node(ev.name)
+            self._wake_capacity = True
+        elif ev.type == DELETED:
+            self._index.remove_node(ev.name)
+        elif self._index.reindex_node(ev.name):
+            self._wake_capacity = True
+
+    def _on_quota_delta(self, ev: WatchEvent) -> None:
+        self._wake_quota_owners.add(ev.name)    # ev.name is the owner
+
+    def _on_deployment_delta(self, ev: WatchEvent) -> None:
+        self._index.mark_victims_dirty()
+
+    @property
+    def _fast_path(self) -> bool:
+        """The bisect shortcut is only provably identical to the full
+        scan under the DEFAULT stage lists (the equivalence argument in
+        CapacityIndex leans on what those stages read); any custom stage
+        falls back to the authoritative scan."""
+        return (self.use_index and self._index is not None
+                and self.scorers == DEFAULT_SCORERS
+                and self.filters == DEFAULT_FILTERS)
 
     # ------------------------------------------------------ single pod
     def feasible(self, rec: PodRecord, node: VirtualNode,
@@ -340,6 +705,22 @@ class Scheduler:
 
     def select_node(self, rec: PodRecord,
                     now: float) -> Tuple[Optional[VirtualNode], str]:
+        if self._fast_path:
+            node = self._index.select(rec, self, now)
+            if node is not None:
+                return node, "best-fit"
+            # no indexed candidate: the authoritative scan composes the
+            # polling-identical per-node reject string — memoized per
+            # (spec signature, store version, now) so a thousand parked
+            # clones cost one scan, not a thousand — and, should a node
+            # the index missed (a kubelet-side phase change that never
+            # reached note_pod_phase) be live-feasible, binds it exactly
+            # as the polling path would
+            return self._scan_memo(rec, now)
+        return self._scan(rec, now)
+
+    def _scan(self, rec: PodRecord,
+              now: float) -> Tuple[Optional[VirtualNode], str]:
         reasons = []
         cands = []
         for node in self.cluster.nodes.values():
@@ -353,6 +734,21 @@ class Scheduler:
         best = max(cands, key=lambda n: self.score(rec, n, now))
         return best, "best-fit"
 
+    def _scan_memo(self, rec: PodRecord,
+                   now: float) -> Tuple[Optional[VirtualNode], str]:
+        stamp = (self.cluster.version, now)
+        if self._scan_stamp != stamp:
+            self._scan_stamp = stamp
+            self._scan_cache.clear()
+        sig = _spec_signature(rec)
+        hit = self._scan_cache.get(sig)
+        if hit is not None:
+            return None, hit
+        node, reason = self._scan(rec, now)
+        if node is None:
+            self._scan_cache[sig] = reason
+        return node, reason
+
     # ------------------------------------------------------ preemption
     def _try_preempt(self, rec: PodRecord, now: float) -> Optional[Decision]:
         """Evict strictly lower-priority *preemptible* pods from one
@@ -362,6 +758,11 @@ class Scheduler:
         the §4.5.4 path) and requeued with their spec and state intact —
         preemption moves work, it never loses it. Equal-or-higher
         priority and non-preemptible classes are never victims."""
+        if self.use_index and self._index is not None and \
+                not self._index.has_victims_below(rec.priority):
+            # histogram early-out: zero bound preemptible pods below this
+            # priority anywhere -> the walk below cannot choose victims
+            return None
         best = None
         for node in self.cluster.nodes.values():
             # every non-capacity constraint still applies to the preemptor:
@@ -433,15 +834,40 @@ class Scheduler:
         self.cluster.assign(rec.name, node.name, now)
         return Decision(rec.name, node.name, "preempted", tuple(names))
 
+    # -------------------------------------------------- wake-on-freed
+    def _woken(self, rec: PodRecord, wake_cap: bool,
+               wake_owners: Set[str]) -> bool:
+        """Does a freed-capacity / released-quota delta re-arm this
+        parked pod right now (ahead of its backoff timer)? Only pods
+        parked by a scheduling *failure* wake — a pod deferred by hand
+        or re-tiered by ``set_priority`` keeps its explicit timer — and
+        a quota-blocked pod only wakes for its own owner's quota (more
+        chips cannot cure a fair-share cap, and vice versa)."""
+        if rec.attempts == 0 or not rec.last_reason:
+            return False
+        if is_quota_blocked(rec.last_reason):
+            return rec.owner in wake_owners
+        return wake_cap
+
     # ------------------------------------------------------- main loop
     def run_once(self, now: float) -> List[Decision]:
         """One reconcile pass over the pending queue, ordered by
         (priority desc, fair-share ratio asc, FIFO): among equal
         priorities the owner furthest below its quota binds first. Pods
-        in backoff are skipped until their retry time."""
+        in backoff are skipped until their retry time — unless a
+        capacity-freed or quota-released delta arrived since the last
+        pass (``wake_on_freed``), which re-arms the pods that delta
+        could actually help; the jittered exponential backoff remains
+        as the fallback for anything the wake signals miss."""
         out = []
         ledger = self.cluster.ledger
         fair = bool(self.cluster.quotas)
+        wake_cap, wake_owners = False, frozenset()
+        if self.wake_on_freed:
+            wake_cap = self._wake_capacity
+            wake_owners = self._wake_quota_owners
+        self._wake_capacity = False
+        self._wake_quota_owners = set()
         pending = sorted(
             self.cluster.pending_pods(),
             key=lambda r: (-r.priority,
@@ -450,7 +876,8 @@ class Scheduler:
         for rec in pending:
             if rec.name not in self.cluster.pods:
                 continue                     # preempted away this pass
-            if rec.next_retry > now:
+            if rec.next_retry > now and \
+                    not self._woken(rec, wake_cap, wake_owners):
                 continue
             node, reason = self.select_node(rec, now)
             if node is not None:

@@ -168,6 +168,11 @@ def main(argv=None):
                          " FaultInjector seam, enables background"
                          " checkpoints, and audits bookkeeping invariants"
                          " every tick")
+    ap.add_argument("--event-budget", type=int, default=0,
+                    help="cap dirty objects reconciled per controller per"
+                         " tick (0 = unbounded); excess carries to the"
+                         " next tick — bounds per-tick reconcile latency"
+                         " at large fleet sizes")
     ap.add_argument("--chaos-seed", type=int, default=0,
                     help='seed for "*" victim selection (same schedule +'
                          " seed => identical fault storm)")
@@ -225,7 +230,8 @@ def main(argv=None):
     topo = SiteTopology.parse(args.site_latency) if args.site_latency \
         else None
     plane = ControlPlane(cluster, scheduler=Scheduler(cluster,
-                                                      topology=topo))
+                                                      topology=topo),
+                         event_budget=args.event_budget)
     for pilot in pilots:
         print(f"[jcs] pilot {pilot.wf_id}: {len(pilot.nodes)} JRM nodes, "
               f"{len(pilot.tunnels)} SSH tunnels")

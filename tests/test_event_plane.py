@@ -1,0 +1,448 @@
+"""Differential polling-vs-event-driven control-plane harness (ISSUE-8).
+
+The tentpole claim: the event-driven plane (controllers reconcile only
+dirty objects off watch deltas, the scheduler places through an
+incrementally-maintained capacity index) is *observationally identical*
+to the polling plane (every object visited every tick, full-scan
+placement). ``ControlPlane(polling=True)`` keeps the old plane alive
+behind a flag; each scenario script here runs under both modes and the
+harness asserts three things are byte-identical:
+
+  * the final **store** — every pod's node/phase/owner/priority/retry
+    bookkeeping/binding epoch, every node's status and resident pod
+    set, every Deployment's replica state, the fence epochs;
+  * the **event trail** — the full (time, kind, name, reason) audit
+    sequence (messages are excluded only because checkpoint paths
+    embed per-run tempdirs);
+  * the **pod token outputs** — BatchTenant progress counters and
+    checkpoint round-trip evidence, the workload-visible effect.
+
+Strict runs disable ``wake_on_freed`` on the event side: wake
+intentionally binds parked pods *earlier* than polling's backoff timer
+(that improvement is proven separately below, including the satellite
+regression for quota-blocked pods parked at ``backoff_max``).
+
+The property test at the bottom drives randomized op interleavings and
+checks the scheduler's incremental indices against a from-scratch
+recompute (``CapacityIndex.verify``) plus quota-ledger book balance.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # clean env: deterministic fallback
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core.chaos import FaultInjector, InvariantAuditor
+from repro.core.cluster import Cluster, Deployment, PodTemplate
+from repro.core.controllers import ControlPlane
+from repro.core.jrm import SliceSpec, start_vk
+from repro.core.qos import BatchTenant, PriorityClass, Quota
+from repro.core.state_machine import Container, Pod
+
+TOL = [{"key": "virtual-kubelet.io/provider", "value": "mock"}]
+GB = 1024**3
+
+
+def mkpod(name, chips=1):
+    return Pod(name, [Container("c")], tolerations=list(TOL),
+               request_chips=chips)
+
+
+def add_node(cluster, name, now, *, chips=4, site="Local", walltime=0.0):
+    cluster.register_node(
+        start_vk(name, site=site, walltime=walltime, now=now,
+                 slice_spec=SliceSpec(chips=chips)), now)
+    cluster.heartbeat(name, now)
+
+
+# ------------------------------------------------------------- snapshots
+
+def store_snapshot(cluster):
+    """Everything observable about the final store, order-insensitive
+    where the store itself is a dict keyed by name."""
+    pods = {n: (r.pod.node, r.pod.phase.name, r.owner, r.priority,
+                r.preemptible, r.attempts, round(r.next_retry, 9),
+                r.last_reason, r.binding_epoch, r.restored_from)
+            for n, r in cluster.pods.items()}
+    nodes = {n: (st.ready, st.schedulable, st.reachable, st.straggler,
+                 tuple(sorted(cluster.nodes[n].pods))
+                 if n in cluster.nodes else ())
+             for n, st in cluster.node_status.items()}
+    deps = {n: (d.replicas, d.next_ordinal, d.template.priority_class)
+            for n, d in cluster.deployments.items()}
+    return (pods, nodes, deps, cluster.binding_epoch,
+            dict(cluster.fence_epochs))
+
+
+def trail(cluster):
+    """The audit sequence. Messages excluded: checkpoint events embed
+    per-run tempdir paths; everything else must line up exactly."""
+    return [(e.time, e.kind, e.name, e.reason) for e in cluster.events]
+
+
+def run_mode(scenario, polling, tmp_path=None, wake=False):
+    cluster = Cluster()
+    plane = ControlPlane(cluster, polling=polling)
+    if not polling and not wake:
+        # strict identity: wake binds parked pods EARLIER by design;
+        # it is asserted as an improvement in the wake tests below
+        plane.scheduler.wake_on_freed = False
+    if tmp_path is not None:
+        mode = "wake" if wake else ("polling" if polling else "event")
+        plane.nodes.ckpt_dir = str(tmp_path / mode)
+    tokens = scenario(cluster, plane)
+    return cluster, plane, tokens
+
+
+def assert_identical(scenario, tmp_path=None):
+    """The differential harness: polling vs event-driven over one
+    scenario script -> identical stores, trails and token outputs."""
+    c_poll, _, tok_poll = run_mode(scenario, polling=True,
+                                   tmp_path=tmp_path)
+    c_evt, plane_evt, tok_evt = run_mode(scenario, polling=False,
+                                         tmp_path=tmp_path)
+    assert store_snapshot(c_poll) == store_snapshot(c_evt)
+    assert trail(c_poll) == trail(c_evt)
+    assert tok_poll == tok_evt
+    # the event side must actually have run on the index fast path, and
+    # its incremental state must agree with a from-scratch recompute
+    assert plane_evt.scheduler.use_index and \
+        plane_evt.scheduler._index is not None
+    plane_evt.scheduler._index.verify(1e9)
+    return c_poll, c_evt
+
+
+# ------------------------------------------------------------- scenarios
+# Each scenario drives the full loop through (cluster, plane) only and
+# returns the workload-visible token outputs.
+
+def scenario_churn(cluster, plane):
+    """Node churn: short-walltime nodes drain and expire mid-run,
+    replacements register late, stragglers flip in and out."""
+    for i in range(6):
+        add_node(cluster, f"n{i}", 0.0, chips=2,
+                 site="alpha" if i < 3 else "beta",
+                 walltime=250.0 if i % 2 else 0.0)
+    cluster.apply_priority_class(PriorityClass("batch", 10), 0.0)
+    tenant = BatchTenant(cluster, replicas=8, now=0.0)
+    for t in range(0, 601, 10):
+        now = float(t)
+        if t == 300:     # replacement capacity arrives
+            add_node(cluster, "r0", now, chips=2, site="alpha")
+            add_node(cluster, "r1", now, chips=2, site="beta")
+        if t == 200:     # straggler flip regroups the index
+            cluster.set_node_status("n0", now, ready=True, straggler=True)
+        if t == 400:
+            cluster.set_node_status("n0", now, ready=True, straggler=False)
+        for n in list(cluster.nodes):
+            cluster.heartbeat(n, now)
+        plane.step(now)
+        tenant.advance()
+    assert tenant.mismatches == []
+    return (dict(tenant.counters), sorted(tenant.resumed),
+            tenant.total_progress)
+
+
+def scenario_drain_site_kill(cluster, plane):
+    """Operator kills a whole site mid-run; its pods checkpoint and
+    re-serve on the surviving site."""
+    for i in range(3):
+        add_node(cluster, f"a{i}", 0.0, chips=4, site="alpha")
+        add_node(cluster, f"b{i}", 0.0, chips=4, site="beta")
+    cluster.apply_priority_class(PriorityClass("batch", 10), 0.0)
+    tenant = BatchTenant(cluster, replicas=10, now=0.0)
+    for t in range(0, 401, 10):
+        now = float(t)
+        if t == 100:
+            plane.drain_site("beta", now)
+        for n in list(cluster.nodes):
+            cluster.heartbeat(n, now)
+        plane.step(now)
+        tenant.advance()
+    live = cluster.pods_of("batch")
+    assert live and all(r.pod.node is None or
+                        cluster.nodes[r.pod.node].site == "alpha"
+                        for r in live)
+    assert tenant.mismatches == []
+    return (dict(tenant.counters), sorted(tenant.resumed),
+            tenant.total_progress)
+
+
+def scenario_preemption_spike(cluster, plane):
+    """Quota-capped batch tenant preempted by a latency-critical spike
+    (scale + set_priority), then the spike recedes."""
+    for i in range(4):
+        add_node(cluster, f"n{i}", 0.0, chips=2)
+    cluster.apply_priority_class(PriorityClass("batch", 10), 0.0)
+    cluster.apply_priority_class(
+        PriorityClass("critical", 100, preemptible=False), 0.0)
+    cluster.apply_priority_class(PriorityClass("standard", 50), 0.0)
+    cluster.apply_quota(Quota("batch", chips=6), 0.0)
+    tenant = BatchTenant(cluster, replicas=8, now=0.0)
+    cluster.apply_deployment(Deployment("web", 0, template=PodTemplate(
+        labels={"app": "web"}, tolerations=list(TOL), request_chips=1,
+        priority_class="standard")), 0.0)
+    for t in range(0, 301, 10):
+        now = float(t)
+        if t == 50:      # the spike: scale up and escalate mid-flight
+            cluster.scale("web", 5, now, source="hpa")
+        if t == 80:
+            cluster.set_priority("web", "critical", now, source="twin")
+        if t == 180:     # spike recedes; batch reclaims its share
+            cluster.scale("web", 1, now, source="hpa")
+        for n in list(cluster.nodes):
+            cluster.heartbeat(n, now)
+        plane.step(now)
+        tenant.advance()
+    assert tenant.mismatches == []
+    return (dict(tenant.counters), sorted(tenant.resumed),
+            tenant.total_progress,
+            {n: (r.pod.node, r.priority) for n, r in cluster.pods.items()
+             if r.owner == "web"})
+
+
+def scenario_fault_storm(cluster, plane):
+    """The PR-7 chaos storm: seeded crash/partition/flap/walltime-cut
+    schedule through the public seams, invariant-audited every tick."""
+    for i in range(5):
+        add_node(cluster, f"n{i}", 0.0, chips=2,
+                 site="alpha" if i < 3 else "beta")
+    cluster.apply_priority_class(PriorityClass("batch", 10), 0.0)
+    tenant = BatchTenant(cluster, replicas=6, now=0.0)
+    inj = FaultInjector(["crash:*@40", "partition:*@80+60",
+                         "flap:*@120+30", "walltime_cut:n1@200x50"],
+                        seed=11)
+    auditor = InvariantAuditor(cluster)
+    for t in range(0, 401, 10):
+        now = float(t)
+        inj.apply(cluster, now)
+        for n in list(cluster.nodes):
+            cluster.heartbeat(n, now)
+        plane.step(now)
+        tenant.advance()
+        auditor.audit(now)
+    # a crash loses un-checkpointed progress by design — what matters
+    # here is that both planes lose EXACTLY the same progress, so the
+    # mismatch evidence is part of the compared token output
+    return (dict(tenant.counters), sorted(tenant.resumed),
+            tenant.total_progress, list(tenant.mismatches),
+            list(inj.log))
+
+
+def test_differential_churn():
+    assert_identical(scenario_churn)
+
+
+def test_differential_drain_site_kill(tmp_path):
+    assert_identical(scenario_drain_site_kill, tmp_path)
+
+
+def test_differential_preemption_spike(tmp_path):
+    assert_identical(scenario_preemption_spike, tmp_path)
+
+
+def test_differential_fault_storm(tmp_path):
+    assert_identical(scenario_fault_storm, tmp_path)
+
+
+def test_wake_mode_reaches_same_outcomes():
+    """wake_on_freed changes *when* parked pods retry, never *where*
+    they land: every scenario still converges to a fully-bound tenant
+    with balanced books and a verified index."""
+    for scenario in (scenario_churn, scenario_preemption_spike):
+        cluster, plane, _ = run_mode(scenario, polling=False, wake=True)
+        plane.scheduler._index.verify(1e9)
+        cluster.ledger.assert_balanced()
+
+
+# ----------------------------------------- wake-on-freed (satellite 4)
+
+def park(sched, cluster, now, rounds=8):
+    """Drive a pending pod to its max-backoff parking orbit."""
+    for i in range(rounds):
+        sched.run_once(now + float(i))
+
+
+def test_quota_release_wakes_parked_pod_same_tick():
+    """Regression: a quota-blocked pod parks at backoff_max (waiting
+    cannot free a fair-share cap) — but a quota *raise* must re-arm it
+    on the very next pass, not after the parked timer runs out."""
+    cluster = Cluster()
+    add_node(cluster, "n0", 0.0, chips=4)
+    cluster.apply_quota(Quota("t", chips=1), 0.0)
+    plane = ControlPlane(cluster)
+    cluster.submit(mkpod("p0"), 0.0, owner="t")
+    cluster.submit(mkpod("p1"), 0.0, owner="t")
+    plane.scheduler.run_once(0.0)
+    rec = cluster.pods["p1"]
+    assert cluster.pods["p0"].bound and not rec.bound
+    assert rec.next_retry >= plane.scheduler.backoff_max
+    cluster.apply_quota(Quota("t", chips=4), 1.0)     # the release
+    plane.scheduler.run_once(1.0)
+    assert rec.bound, "quota-released delta must re-arm the parked pod"
+
+
+def test_quota_release_stays_parked_without_wake():
+    """The pre-fix behavior, kept honest behind the polling flag: with
+    wake disabled the same pod sleeps out its full backoff_max."""
+    cluster = Cluster()
+    add_node(cluster, "n0", 0.0, chips=4)
+    cluster.apply_quota(Quota("t", chips=1), 0.0)
+    plane = ControlPlane(cluster, polling=True)
+    cluster.submit(mkpod("p0"), 0.0, owner="t")
+    cluster.submit(mkpod("p1"), 0.0, owner="t")
+    plane.scheduler.run_once(0.0)
+    cluster.apply_quota(Quota("t", chips=4), 1.0)
+    plane.scheduler.run_once(1.0)
+    assert not cluster.pods["p1"].bound          # still parked...
+    plane.scheduler.run_once(cluster.pods["p1"].next_retry)
+    assert cluster.pods["p1"].bound              # ...until the timer
+
+
+def test_consumer_exit_wakes_quota_blocked_sibling():
+    """Freeing share by a sibling's exit is a quota release too: the
+    bound consumer's DELETED delta wakes pods of the same owner."""
+    cluster = Cluster()
+    add_node(cluster, "n0", 0.0, chips=4)
+    cluster.apply_quota(Quota("t", chips=1), 0.0)
+    plane = ControlPlane(cluster)
+    cluster.submit(mkpod("p0"), 0.0, owner="t")
+    cluster.submit(mkpod("p1"), 0.0, owner="t")
+    plane.scheduler.run_once(0.0)
+    assert not cluster.pods["p1"].bound
+    cluster.evict("p0", 2.0)                     # consumer exits
+    plane.scheduler.run_once(2.0)
+    assert cluster.pods["p1"].bound
+
+
+def test_capacity_freed_wakes_backoff_parked_pod():
+    """A no-fit pod in exponential backoff retries immediately when a
+    bound pod's eviction frees chips, instead of waiting out its
+    jittered timer."""
+    cluster = Cluster()
+    add_node(cluster, "n0", 0.0, chips=1)
+    plane = ControlPlane(cluster)
+    cluster.submit(mkpod("p0"), 0.0)
+    cluster.submit(mkpod("p1"), 0.0)
+    park(plane.scheduler, cluster, 0.0)
+    rec = cluster.pods["p1"]
+    assert cluster.pods["p0"].bound and not rec.bound
+    assert rec.next_retry > 10.0
+    cluster.evict("p0", 8.0)                     # capacity freed
+    plane.scheduler.run_once(8.0)
+    assert rec.bound
+
+
+def test_heartbeats_never_wake_parked_pods():
+    """The bulk of bus traffic at scale is heartbeats; they carry no
+    capacity information and must not re-arm anything."""
+    cluster = Cluster()
+    add_node(cluster, "n0", 0.0, chips=1)
+    plane = ControlPlane(cluster)
+    cluster.submit(mkpod("p0"), 0.0)
+    cluster.submit(mkpod("p1"), 0.0)
+    plane.scheduler.run_once(0.0)
+    rec = cluster.pods["p1"]
+    attempts = rec.attempts
+    cluster.heartbeat("n0", 1.0)
+    plane.scheduler.run_once(1.0)
+    assert not rec.bound and rec.attempts == attempts
+
+
+def test_node_added_wakes_parked_pods():
+    cluster = Cluster()
+    add_node(cluster, "n0", 0.0, chips=1)
+    plane = ControlPlane(cluster)
+    cluster.submit(mkpod("p0"), 0.0)
+    cluster.submit(mkpod("p1"), 0.0)
+    park(plane.scheduler, cluster, 0.0)
+    rec = cluster.pods["p1"]
+    assert not rec.bound and rec.next_retry > 10.0
+    add_node(cluster, "n1", 9.0, chips=1)        # fresh capacity
+    plane.scheduler.run_once(9.0)
+    assert rec.bound
+
+
+def test_event_budget_carries_remainder_across_ticks():
+    """``event_budget`` caps dirty objects reconciled per controller per
+    tick; the excess stays dirty and lands next tick — bounded tick
+    latency without dropped work."""
+    cluster = Cluster()
+    for i in range(2):
+        add_node(cluster, f"n{i}", 0.0, chips=4)
+    plane = ControlPlane(cluster, event_budget=1)
+    for name in ("a", "b"):
+        cluster.apply_deployment(Deployment(name, 2, template=PodTemplate(
+            labels={"app": name}, tolerations=list(TOL),
+            request_chips=1)), 0.0)
+    plane.step(0.0)
+    made = {r.owner for r in cluster.pods.values()}
+    assert made == {"a"}, "budget 1: only the first dirty Deployment runs"
+    plane.step(1.0)
+    made = {r.owner for r in cluster.pods.values()}
+    assert made == {"a", "b"}, "the remainder must carry, not drop"
+    assert all(r.bound for r in cluster.pods.values())
+
+
+# --------------------------------------- property test (satellite 2)
+
+OWNERS = ("alpha", "beta", "gamma")
+
+
+@settings(max_examples=20, deadline=None)
+@given(data=st.data())
+def test_incremental_indices_match_recompute(data):
+    """Randomized bind/evict/scale/heartbeat/cut_walltime/status
+    interleavings: after every burst the scheduler's incremental
+    capacity index must equal a from-scratch recompute and the quota
+    ledger's books must balance against node-side truth."""
+    cluster = Cluster()
+    plane = ControlPlane(cluster)
+    cluster.apply_quota(Quota("alpha", chips=5), 0.0)
+    n_nodes, n_pods = 0, 0
+    now = 0.0
+    for _ in range(3):
+        add_node(cluster, f"n{n_nodes}", now,
+                 chips=data.draw(st.integers(1, 4)))
+        n_nodes += 1
+    n_ops = data.draw(st.integers(15, 30))
+    for _ in range(n_ops):
+        now += data.draw(st.floats(0.5, 15.0))
+        op = data.draw(st.sampled_from(
+            ("register", "deregister", "submit", "step", "evict",
+             "heartbeat", "cut_walltime", "status")))
+        names = list(cluster.nodes)
+        if op == "register":
+            add_node(cluster, f"n{n_nodes}", now,
+                     chips=data.draw(st.integers(1, 4)),
+                     walltime=data.draw(st.sampled_from((0.0, 120.0))))
+            n_nodes += 1
+        elif op == "deregister" and len(names) > 1:
+            cluster.deregister_node(
+                data.draw(st.sampled_from(names)), now)
+        elif op == "submit":
+            cluster.submit(
+                mkpod(f"p{n_pods}", chips=data.draw(st.integers(1, 2))),
+                now, owner=data.draw(st.sampled_from(OWNERS)),
+                priority=data.draw(st.integers(0, 2)))
+            n_pods += 1
+        elif op == "step":
+            plane.step(now)
+        elif op == "evict" and cluster.pods:
+            name = data.draw(st.sampled_from(sorted(cluster.pods)))
+            cluster.evict(name, now)
+        elif op == "heartbeat" and names:
+            cluster.heartbeat(data.draw(st.sampled_from(names)), now)
+        elif op == "cut_walltime" and names:
+            cluster.cut_walltime(data.draw(st.sampled_from(names)), now,
+                                 data.draw(st.floats(0.0, 60.0)))
+        elif op == "status" and names:
+            cluster.set_node_status(
+                data.draw(st.sampled_from(names)), now,
+                ready=data.draw(st.booleans()),
+                straggler=data.draw(st.booleans()))
+        plane.scheduler._index.verify(now)
+    plane.step(now + 1.0)
+    plane.scheduler._index.verify(now + 1.0)
+    cluster.ledger.assert_balanced()
