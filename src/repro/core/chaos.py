@@ -47,8 +47,10 @@ PARTITION = "partition"      # unreachable, alive; rejoins after duration
 STRAGGLER = "straggler"      # heartbeat latency inflated by `magnitude`
 CKPT_CORRUPT = "ckpt_corrupt"  # truncate newest checkpoint generation
 WALLTIME_CUT = "walltime_cut"  # lease revised to `magnitude` seconds left
+SURGE = "surge"              # flash crowd: arrival rate x `magnitude`
 
-KINDS = (CRASH, FLAP, PARTITION, STRAGGLER, CKPT_CORRUPT, WALLTIME_CUT)
+KINDS = (CRASH, FLAP, PARTITION, STRAGGLER, CKPT_CORRUPT, WALLTIME_CUT,
+         SURGE)
 
 
 @dataclass(frozen=True)
@@ -132,6 +134,17 @@ class FaultInjector:
              if a.target == name]
         return max(f) if f else 1.0
 
+    def surge_factor(self, owner: str = "*") -> float:
+        """Arrival-rate multiplier for ``owner``'s request stream right
+        now (product over active surge windows whose target is the owner
+        or ``"*"``). Drivers wire this into the real `RequestSource`
+        seam each tick: ``eng.source.surge = inj.surge_factor(owner)``."""
+        f = 1.0
+        for a in self._windows(SURGE):
+            if a.target in ("*", owner):
+                f *= (a.spec.magnitude or 2.0)
+        return f
+
     def _note(self, now: float, kind: str, target: str):
         self.log.append((now, kind, target))
 
@@ -156,6 +169,15 @@ class FaultInjector:
     def _fire(self, i: int, spec: FaultSpec, cluster: Cluster, now: float):
         self._fired.add(i)
         target = spec.target
+        if spec.kind == SURGE:
+            # target is a request-stream *owner* (or "*" for every
+            # stream), not a node — skip node resolution entirely
+            self._note(now, SURGE, target)
+            cluster.record(now, KIND_NODE, target, "ChaosInjected",
+                           f"kind={SURGE} duration={spec.duration:.0f} "
+                           f"magnitude={spec.magnitude:g}")
+            self._active.append(_Active(spec, target, now + spec.duration))
+            return
         if spec.kind == CKPT_CORRUPT:
             pod_dir = (pathlib.Path(self.ckpt_dir) / target
                        if self.ckpt_dir and target != "*"

@@ -237,12 +237,17 @@ class PodRecord:
 class Cluster:
     """Typed object store + watch bus + event trail (see module map)."""
 
-    def __init__(self):
+    def __init__(self, events_cap: int = 0):
         self.nodes: Dict[str, VirtualNode] = {}
         self.node_status: Dict[str, NodeStatus] = {}
         self.pods: Dict[str, PodRecord] = {}
         self.deployments: Dict[str, Deployment] = {}
         self.events: List[ClusterEvent] = []
+        # ring cap on the event trail for long soaks (0 = unbounded);
+        # ``events_truncated`` is the explicit marker audits check so a
+        # trimmed trail is distinguishable from a short one
+        self.events_cap = int(events_cap)
+        self.events_truncated = 0
         # QoS objects: named tiers + per-owner fair-share caps, and the
         # derived-usage ledger the scheduler's quota filter consults
         self.priority_classes: Dict[str, qos.PriorityClass] = \
@@ -318,6 +323,10 @@ class Cluster:
     def record(self, now: float, kind: str, name: str, reason: str,
                message: str = ""):
         self.events.append(ClusterEvent(now, kind, name, reason, message))
+        if self.events_cap and len(self.events) > self.events_cap:
+            drop = len(self.events) - self.events_cap
+            del self.events[:drop]
+            self.events_truncated += drop
 
     def events_for(self, name: str) -> List[ClusterEvent]:
         return [e for e in self.events if e.name == name]

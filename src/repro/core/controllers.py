@@ -166,6 +166,10 @@ class NodeLifecycleController:
     # already cover.
     polling: bool = False
     event_budget: int = 0       # max nodes reconciled per pass (0 = all)
+    # checkpoint bytes captured per pod by the most recent drain wave —
+    # what the transfer-cost model charges when the displaced pod
+    # re-binds at another site (cleared by the caller per wave)
+    drain_bytes: Dict[str, int] = field(default_factory=dict)
     _drained: Set[str] = field(default_factory=set)
     _ckpt_steps: Dict[str, int] = field(default_factory=dict)
     _last_bg_ckpt: Dict[str, float] = field(default_factory=dict)
@@ -326,6 +330,9 @@ class NodeLifecycleController:
             pods = pods[:self.drain_pods_per_tick]
         for rec in pods:
             state = self.checkpoint_pod(rec, now)
+            if state:
+                self.drain_bytes[rec.name] = sum(
+                    int(getattr(v, "nbytes", 0)) for v in state.values())
             evicted = self.cluster.evict(
                 rec.name, now, reason="Evicted",
                 message=f"node {name} draining")
@@ -481,6 +488,13 @@ class ControlPlane:
     nodes: NodeLifecycleController = None
     polling: bool = False
     event_budget: int = 0
+    # failover cost hook: called as ``on_transfer(now, window_s)`` when a
+    # drain_site wave re-binds displaced pods cross-site — window_s is
+    # the topology-modeled checkpoint-transfer time the evacuation pays
+    # (the engine serves degraded for its duration)
+    on_transfer: object = None
+    last_transfer_s: float = 0.0
+    last_transfer_bytes: int = 0
 
     def __post_init__(self):
         if self.scheduler is None:
@@ -520,6 +534,33 @@ class ControlPlane:
         names = [n.name for n in self.cluster.site_nodes(site)]
         self.cluster.record(now, "Node", site, "SiteDrain",
                             f"nodes={len(names)}")
+        self.nodes.drain_bytes.clear()
         self.nodes.drain_allocation(names, now)
+        moved = dict(self.nodes.drain_bytes)
         self.deployments.reconcile(now)
-        return self.scheduler.run_once(now)
+        out = self.scheduler.run_once(now)
+        # cost-modeled failover: checkpoint state does not teleport — pay
+        # the topology's transfer time for every displaced pod that
+        # re-bound at another site, take the max as the evacuation window
+        # (transfers run in parallel) and report it to the engine so it
+        # serves degraded until the state has actually arrived
+        topo = getattr(self.scheduler, "topology", None)
+        window, total = 0.0, 0
+        if topo is not None and moved:
+            for rec in self.cluster.pods.values():
+                src_pod = rec.restored_from
+                if src_pod not in moved or not rec.bound:
+                    continue
+                node = self.cluster.nodes.get(rec.pod.node)
+                if node is not None and node.site != site:
+                    window = max(window, topo.transfer_cost(
+                        moved[src_pod], site, node.site))
+                    total += moved[src_pod]
+        self.last_transfer_s = window
+        self.last_transfer_bytes = total
+        if window > 0:
+            self.cluster.record(now, "Node", site, "SiteDrainTransfer",
+                                f"bytes={total} window={window:.3f}s")
+            if self.on_transfer is not None:
+                self.on_transfer(now, window)
+        return out

@@ -29,7 +29,7 @@ parses ``--quota`` specs through :func:`parse_quotas`.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.state_machine import PodPhase
@@ -331,3 +331,206 @@ class QuotaLedger:
         return {"chips_capacity": cap_chips, "chips_used": used_chips,
                 "chips_free": free_chips, "hbm_used": used_hbm,
                 "hbm_free": free_hbm}
+
+
+# --------------------------------------------------------------------------
+# Overload protection: brownout levels, retry budgets, replica breakers.
+# --------------------------------------------------------------------------
+
+def tier_label(priority: int) -> str:
+    """Map a numeric request priority to the name of the highest default
+    PriorityClass at or below it (the tenant label retry budgets key on)."""
+    best = BATCH
+    for cls in DEFAULT_PRIORITY_CLASSES:
+        if cls.value <= priority and cls.value >= best.value:
+            best = cls
+    return best.name
+
+
+def shed_floor_for_level(level: int) -> int:
+    """Minimum admitted ``Request.priority`` at a brownout level.
+
+    Level 0 (normal) and 1 (degrade-only: cap max_new, spec decode off)
+    shed nothing; level 2 sheds the batch tier (< standard); level 3
+    sheds everything below latency-critical. Latency-critical traffic is
+    never shed by brownout — only an explicit deadline can drop it."""
+    if level <= 1:
+        return 0
+    if level == 2:
+        return STANDARD.value
+    return LATENCY_CRITICAL.value
+
+
+@dataclass
+class BrownoutController:
+    """Watermark + hysteresis brownout state machine (tentpole b).
+
+    Pressure each tick is ``max(slab occupancy, queue-delay EWMA /
+    delay_target_s)``. Sustained pressure >= ``high_water`` for
+    ``dwell_ticks`` consecutive ticks escalates one level; sustained
+    pressure <= ``low_water`` for ``recover_ticks`` de-escalates one
+    level (staged recovery — a momentarily empty queue cannot snap the
+    system from level 3 to 0 and instantly re-trigger). The band between
+    the watermarks holds the current level and resets both counters, so
+    oscillation around a single watermark cannot flap the level."""
+    high_water: float = 0.85
+    low_water: float = 0.5
+    delay_target_s: float = 30.0
+    ewma_alpha: float = 0.4
+    dwell_ticks: int = 2
+    recover_ticks: int = 3
+    max_level: int = 3
+    degrade_max_new: int = 8
+    # state
+    level: int = 0
+    delay_ewma: float = 0.0
+    last_pressure: float = 0.0
+    transitions: List[Tuple[float, int, int, float]] = field(
+        default_factory=list)        # (now, old, new, pressure)
+    _over: int = 0
+    _under: int = 0
+
+    def update(self, now: float, occupancy: float,
+               queue_delay_s: float) -> int:
+        self.delay_ewma += self.ewma_alpha * (queue_delay_s - self.delay_ewma)
+        p = max(occupancy,
+                self.delay_ewma / max(self.delay_target_s, 1e-9))
+        self.last_pressure = p
+        if p >= self.high_water:
+            self._over += 1
+            self._under = 0
+        elif p <= self.low_water:
+            self._under += 1
+            self._over = 0
+        else:                        # hysteresis dead band: hold level
+            self._over = 0
+            self._under = 0
+        if self._over >= self.dwell_ticks and self.level < self.max_level:
+            self.transitions.append((now, self.level, self.level + 1, p))
+            self.level += 1
+            self._over = 0
+        elif self._under >= self.recover_ticks and self.level > 0:
+            self.transitions.append((now, self.level, self.level - 1, p))
+            self.level -= 1
+            self._under = 0
+        return self.level
+
+    def shed_floor(self) -> int:
+        return shed_floor_for_level(self.level)
+
+    def max_new_cap(self) -> Optional[int]:
+        """Output-length cap while degraded (level >= 1), else None."""
+        return self.degrade_max_new if self.level >= 1 else None
+
+    def spec_enabled(self) -> bool:
+        """Speculative decode is a throughput luxury: off while degraded."""
+        return self.level == 0
+
+
+@dataclass
+class RetryBudget:
+    """Per-tenant token-bucket retry budgets (tentpole c).
+
+    Each backpressured retry costs one token from the tenant's bucket
+    (refill ``rate``/s up to ``burst``). When the bucket is dry the
+    retry is shed instead of re-queued, so client retries cannot
+    amplify an overload incident into a retry storm."""
+    rate: float = 0.5
+    burst: float = 10.0
+    granted: int = 0
+    denied: int = 0
+    _buckets: Dict[str, Tuple[float, float]] = field(default_factory=dict)
+
+    def allow(self, tenant: str, now: float) -> bool:
+        tokens, last = self._buckets.get(tenant, (self.burst, now))
+        tokens = min(self.burst, tokens + max(now - last, 0.0) * self.rate)
+        ok = tokens >= 1.0
+        if ok:
+            tokens -= 1.0
+            self.granted += 1
+        else:
+            self.denied += 1
+        self._buckets[tenant] = (tokens, now)
+        return ok
+
+    def tokens(self, tenant: str, now: float) -> float:
+        t, last = self._buckets.get(tenant, (self.burst, now))
+        return min(self.burst, t + max(now - last, 0.0) * self.rate)
+
+
+BREAKER_CLOSED = "closed"
+BREAKER_OPEN = "open"
+BREAKER_HALF_OPEN = "half-open"
+
+
+@dataclass
+class ReplicaBreaker:
+    """Per-replica circuit breaker (tentpole c).
+
+    A replica that takes work but emits zero tokens for ``stall_ticks``
+    consecutive ticks (or reports errors) is *ejected*: the engine
+    routes around it entirely. After ``probe_after_s`` the breaker goes
+    half-open and admits up to ``probe_budget`` probe requests; a
+    healthy probe closes the breaker (rejoin), a stalled probe re-opens
+    it for another cool-off."""
+    stall_ticks: int = 3
+    probe_after_s: float = 30.0
+    probe_budget: int = 2
+    ejections: int = 0
+    rejoins: int = 0
+    _state: Dict[str, str] = field(default_factory=dict)
+    _stall: Dict[str, int] = field(default_factory=dict)
+    _opened_at: Dict[str, float] = field(default_factory=dict)
+    _probes: Dict[str, int] = field(default_factory=dict)
+
+    def state(self, name: str) -> str:
+        return self._state.get(name, BREAKER_CLOSED)
+
+    def allow(self, name: str, now: float) -> int:
+        """How many requests ``name`` may take this tick: -1 unbounded
+        (closed), 0 none (open, still cooling off), or the remaining
+        probe budget (half-open)."""
+        st = self.state(name)
+        if st == BREAKER_CLOSED:
+            return -1
+        if st == BREAKER_OPEN:
+            if now - self._opened_at.get(name, now) >= self.probe_after_s:
+                self._state[name] = BREAKER_HALF_OPEN
+                self._probes[name] = 0
+                return self.probe_budget
+            return 0
+        return max(self.probe_budget - self._probes.get(name, 0), 0)
+
+    def note_probe(self, name: str, n: int) -> None:
+        if self.state(name) == BREAKER_HALF_OPEN:
+            self._probes[name] = self._probes.get(name, 0) + n
+
+    def observe(self, name: str, now: float, tokens_delta: int,
+                had_work: bool, errors: int = 0) -> None:
+        stalled = (had_work and tokens_delta <= 0) or errors > 0
+        st = self.state(name)
+        if st == BREAKER_HALF_OPEN:
+            if had_work:             # probe outcome resolved
+                if stalled:
+                    self._state[name] = BREAKER_OPEN
+                    self._opened_at[name] = now
+                else:
+                    self._state[name] = BREAKER_CLOSED
+                    self._stall[name] = 0
+                    self.rejoins += 1
+            return
+        if st == BREAKER_OPEN:
+            return
+        if stalled:
+            self._stall[name] = self._stall.get(name, 0) + 1
+            if self._stall[name] >= self.stall_ticks:
+                self._state[name] = BREAKER_OPEN
+                self._opened_at[name] = now
+                self.ejections += 1
+        else:
+            self._stall[name] = 0
+
+    def forget(self, name: str) -> None:
+        """Replica retired: drop its breaker state."""
+        for m in (self._state, self._stall, self._opened_at, self._probes):
+            m.pop(name, None)

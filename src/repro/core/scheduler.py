@@ -74,11 +74,15 @@ def _jitter_u(name: str, attempt: int) -> float:
 
 @dataclass
 class SiteTopology:
-    """Federation config: symmetric inter-site latency matrix (ms) and the
-    home site of each named data stream (EJFAT/ERSAP source pinning)."""
+    """Federation config: symmetric inter-site latency matrix (ms), the
+    home site of each named data stream (EJFAT/ERSAP source pinning),
+    and a symmetric inter-site bandwidth matrix (Gbps) feeding the
+    checkpoint-transfer cost model."""
     latency_ms: Dict[Tuple[str, str], float] = field(default_factory=dict)
     data_sites: Dict[str, str] = field(default_factory=dict)
     default_latency_ms: float = 100.0     # unlisted site pairs
+    bandwidth_gbps: Dict[Tuple[str, str], float] = field(default_factory=dict)
+    default_bandwidth_gbps: float = 1.0   # unlisted site pairs
 
     def latency(self, a: str, b: str) -> float:
         if a == b:
@@ -90,10 +94,36 @@ class SiteTopology:
         self.latency_ms[(a, b)] = ms
         return self
 
+    def bandwidth(self, a: str, b: str) -> float:
+        if a == b:
+            return float("inf")           # intra-site: no WAN hop
+        return self.bandwidth_gbps.get(
+            (a, b), self.bandwidth_gbps.get((b, a),
+                                            self.default_bandwidth_gbps))
+
+    def set_bandwidth(self, a: str, b: str, gbps: float) -> "SiteTopology":
+        self.bandwidth_gbps[(a, b)] = gbps
+        return self
+
+    def transfer_cost(self, state_bytes: int, src: str, dst: str) -> float:
+        """Seconds to move ``state_bytes`` of checkpoint state from
+        ``src`` to ``dst``: one RTT-ish latency hit plus serialization
+        over the site pair's bandwidth. 0 for intra-site moves — the
+        cost model `drain_site` and preemption ranking pay instead of
+        assuming state teleports between facilities."""
+        if src == dst or state_bytes <= 0:
+            return 0.0
+        bw = self.bandwidth(a=src, b=dst)
+        ser = 0.0 if bw == float("inf") else \
+            state_bytes * 8 / (bw * 1e9)
+        return self.latency(src, dst) / 1000.0 + ser
+
     @staticmethod
-    def parse(spec: str, data_spec: str = "") -> "SiteTopology":
+    def parse(spec: str, data_spec: str = "",
+              bw_spec: str = "") -> "SiteTopology":
         """``"jlab:nersc:40,nersc:ornl:18"`` -> latency entries;
-        ``"ejfat=jlab"`` -> data-stream home sites."""
+        ``"ejfat=jlab"`` -> data-stream home sites;
+        ``"jlab:nersc:10"`` (bw_spec) -> bandwidth entries in Gbps."""
         topo = SiteTopology()
         for part in spec.split(","):
             part = part.strip()
@@ -107,6 +137,12 @@ class SiteTopology:
                 continue
             stream, site = part.split("=")
             topo.data_sites[stream] = site
+        for part in bw_spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            a, b, gbps = part.split(":")
+            topo.set_bandwidth(a, b, float(gbps))
         return topo
 
 
@@ -797,7 +833,15 @@ class Scheduler:
                 # zero victims means select_node already rejected this node
                 # for a non-preemptable reason — nothing to free here
                 continue
-            cost = sum(v.priority for v in chosen), len(chosen)
+            # cost-ranked by (victim priority sum, checkpoint-transfer
+            # seconds to re-home the victims' state off this node's site,
+            # victim count): between equal-priority eviction sets, prefer
+            # the one whose state is cheap to move — without a topology
+            # (or stateless victims) the transfer term is 0 everywhere
+            # and the ranking reduces to the old (priority, count) order
+            cost = (sum(v.priority for v in chosen),
+                    round(self._transfer_penalty(chosen, node), 6),
+                    len(chosen))
             if best is None or cost < best[0]:
                 best = (cost, node, chosen)
         if best is None:
@@ -833,6 +877,32 @@ class Scheduler:
             names.append(v.name)
         self.cluster.assign(rec.name, node.name, now)
         return Decision(rec.name, node.name, "preempted", tuple(names))
+
+    def _victim_state_bytes(self, v: PodRecord) -> int:
+        """Checkpoint footprint estimate for a preemption victim: the
+        actual restored-state array bytes when the pod carries state,
+        else a nominal footprint from its declared KV page pool (2 KiB
+        per page stands in for the page's KV payload)."""
+        st = v.restored_state
+        if st:
+            return sum(int(getattr(x, "nbytes", 0)) for x in st.values())
+        return int(v.request_kv_pages) * 2048
+
+    def _transfer_penalty(self, chosen, node) -> float:
+        """Summed cheapest-destination transfer seconds for the victims'
+        checkpoint state, were it re-homed off ``node``'s site."""
+        if self.topology is None:
+            return 0.0
+        sites = {n.site for n in self.cluster.nodes.values()} - {node.site}
+        if not sites:
+            return 0.0
+        total = 0.0
+        for v in chosen:
+            b = self._victim_state_bytes(v)
+            if b:
+                total += min(self.topology.transfer_cost(b, node.site, s)
+                             for s in sites)
+        return total
 
     # -------------------------------------------------- wake-on-freed
     def _woken(self, rec: PodRecord, wake_cap: bool,

@@ -81,6 +81,13 @@ class Request:
     # prefix cache exploits. 0/0 keeps fully independent prompts.
     prefix_group: int = 0
     prefix_len: int = 0
+    # overload protection: absolute completion deadline (sim seconds;
+    # 0.0 = none). The engine sheds a request whose deadline has passed
+    # while it queued *before* it burns prefill compute.
+    deadline: float = 0.0
+    # QoS tier of the issuing tenant (PriorityClass.value — batch=0,
+    # standard=10, latency-critical=100). Brownout sheds low tiers first.
+    priority: int = 10
 
 
 @dataclass
@@ -101,14 +108,50 @@ class RequestSource:
     prefix_share: float = 0.0
     prefix_len: int = 0
     prefix_groups: int = 1
+    # overload shaping: ttl > 0 stamps every request with an absolute
+    # deadline = arrival + ttl. ``surge`` multiplies the instantaneous
+    # arrival rate (the flash-crowd seam chaos `surge:` faults drive).
+    # ``tiers`` is an optional ((priority, weight), ...) mix; empty keeps
+    # every request at the standard tier (priority 10).
+    ttl: float = 0.0
+    surge: float = 1.0
+    tiers: tuple = ()
 
     def __post_init__(self):
         self.rng = np.random.default_rng(self.seed)
+        # backpressure backlog: (not_before, Request) pairs re-released by
+        # ``arrivals``. Deferral never touches the RNG, so retried traffic
+        # does not perturb the deterministic arrival stream.
+        self._deferred = []
+        self.deferred_total = 0
+
+    def defer(self, requests, not_before: float) -> None:
+        """Park rejected requests for client-side retry at ``not_before``."""
+        for req in requests:
+            self._deferred.append((float(not_before), req))
+        self.deferred_total += len(requests)
+
+    def _take_deferred(self, now: float):
+        due = [r for t, r in self._deferred if t <= now]
+        self._deferred = [(t, r) for t, r in self._deferred if t > now]
+        return due
+
+    def _tier(self) -> int:
+        if not self.tiers:
+            return 10
+        total = sum(w for _, w in self.tiers)
+        u = self.rng.random() * total
+        acc = 0.0
+        for prio, w in self.tiers:
+            acc += w
+            if u < acc:
+                return int(prio)
+        return int(self.tiers[-1][0])
 
     def arrivals(self, now: float, dt: float, lam: float, prompt_len=32,
                  max_new=16):
-        n = self.rng.poisson(lam * dt)
-        out = []
+        out = self._take_deferred(now)
+        n = self.rng.poisson(lam * max(self.surge, 0.0) * dt)
         for _ in range(n):
             self.rid += 1
             plen = prompt_len if self.prompt_range is None else \
@@ -122,6 +165,9 @@ class RequestSource:
                     and self.rng.random() < self.prefix_share):
                 grp = 1 + int(self.rng.integers(self.prefix_groups))
                 pfx = min(self.prefix_len, plen)
-            out.append(Request(self.rid, now + self.rng.uniform(0, dt),
-                               plen, mnew, prefix_group=grp, prefix_len=pfx))
+            arrival = now + self.rng.uniform(0, dt)
+            ddl = arrival + self.ttl if self.ttl > 0 else 0.0
+            out.append(Request(self.rid, arrival, plen, mnew,
+                               prefix_group=grp, prefix_len=pfx,
+                               deadline=ddl, priority=self._tier()))
         return out

@@ -162,8 +162,10 @@ def main(argv=None):
                     help='comma-separated fault schedule "kind:target@at'
                          '[+duration][x<mag>]" (kinds: crash, flap,'
                          " partition, straggler, ckpt_corrupt,"
-                         ' walltime_cut; target "*" picks a seeded'
-                         ' victim), e.g. "partition:n0@120+45,crash:*@300".'
+                         " walltime_cut, surge — surge multiplies the"
+                         ' arrival rate by <mag>; target "*" picks a'
+                         ' seeded victim), e.g.'
+                         ' "partition:n0@120+45,surge:ersap@300+100x6".'
                          " Replaces the heartbeat/JFM block with the"
                          " FaultInjector seam, enables background"
                          " checkpoints, and audits bookkeeping invariants"
@@ -176,6 +178,28 @@ def main(argv=None):
     ap.add_argument("--chaos-seed", type=int, default=0,
                     help='seed for "*" victim selection (same schedule +'
                          " seed => identical fault storm)")
+    ap.add_argument("--deadline", type=float, default=0.0, metavar="TTL",
+                    help="per-request time-to-live (s): requests carry"
+                         " deadline = arrival + TTL and are shed before"
+                         " prefill once expired (0 disables)")
+    ap.add_argument("--brownout", action="store_true",
+                    help="overload protection: bounded arrival queue with"
+                         " backpressure, watermark+hysteresis brownout"
+                         " (cap max_new, disable spec decode, shed low"
+                         " tiers first), and per-replica circuit breakers")
+    ap.add_argument("--retry-budget", type=float, default=0.0,
+                    metavar="RATE",
+                    help="per-tenant retry token-bucket refill rate (/s):"
+                         " backpressured retries beyond the budget are"
+                         " shed instead of re-queued (0 disables)")
+    ap.add_argument("--queue-cap", type=int, default=0,
+                    help="arrival FIFO bound (0 = unbounded; --brownout"
+                         " defaults it to 64 x service capacity)")
+    ap.add_argument("--site-bandwidth", default="",
+                    help='inter-site bandwidth matrix "a:b:gbps,..." for'
+                         " the checkpoint transfer-cost model paid by"
+                         " drain_site failover and preemption ranking"
+                         " (pairs with --site-latency)")
     args = ap.parse_args(argv)
     if (args.prefix_cache or args.spec_decode) and not args.paged:
         ap.error("--prefix-cache/--spec-decode require --paged (they are"
@@ -227,8 +251,8 @@ def main(argv=None):
         cluster.heartbeat(n.name, 0.0)
     fm = FacilityManager()
     fm.feed(cluster, 0.0)
-    topo = SiteTopology.parse(args.site_latency) if args.site_latency \
-        else None
+    topo = SiteTopology.parse(args.site_latency, "", args.site_bandwidth) \
+        if (args.site_latency or args.site_bandwidth) else None
     plane = ControlPlane(cluster, scheduler=Scheduler(cluster,
                                                       topology=topo),
                          event_budget=args.event_budget)
@@ -258,6 +282,8 @@ def main(argv=None):
         # the intern-table bookkeeping
         src_kw = dict(prefix_share=args.prefix_share,
                       prefix_len=args.page_size, prefix_groups=4)
+    if args.deadline > 0:
+        src_kw["ttl"] = args.deadline
     source = RequestSource(**src_kw)
     if args.vary_shapes:
         source = RequestSource(prompt_range=(8, 48), max_new_range=(2, 16),
@@ -283,6 +309,22 @@ def main(argv=None):
                                             scale_down_stabilization=120.0,
                                             occupancy_target=0.85)),
                           cluster=cluster, plane=plane)
+    # ---- overload protection layer (opt-in) ----
+    if args.brownout:
+        engine.brownout = qos.BrownoutController(delay_target_s=3 * args.dt)
+        engine.breaker = qos.ReplicaBreaker(probe_after_s=3 * args.dt)
+        engine.queue_cap = args.queue_cap or int(64 * mu_scaled * args.dt)
+    elif args.queue_cap:
+        engine.queue_cap = args.queue_cap
+    if args.retry_budget > 0:
+        engine.retry_budget = qos.RetryBudget(rate=args.retry_budget)
+        if not engine.queue_cap:
+            engine.queue_cap = int(64 * mu_scaled * args.dt)
+    if engine.queue_cap or args.brownout or args.deadline:
+        print(f"[overload] queue_cap={engine.queue_cap or 'off'} "
+              f"brownout={'on' if args.brownout else 'off'} "
+              f"retry_budget={args.retry_budget or 'off'}/s "
+              f"deadline={args.deadline or 'off'}s")
     # the chosen class is the twin policy's *resting* tier (otherwise the
     # first calm control step would demote a user-chosen tier back to
     # "standard"); a class at/above the escalation tier also becomes the
@@ -356,6 +398,9 @@ def main(argv=None):
             # one chaos tick: fire due faults, drive heartbeats for every
             # node that can still send them, feed the JFM, overlay flaps
             injector.apply(cluster, now, fm=fm)
+            # flash-crowd seam: active surge windows multiply the ersap
+            # stream's arrival rate through the real RequestSource
+            engine.source.surge = injector.surge_factor("ersap")
         else:
             for name, node in cluster.nodes.items():
                 if node.site not in killed_sites:
@@ -416,6 +461,19 @@ def main(argv=None):
                 print(f"[runtime] speculative decode: k={rc.spec_decode} "
                       f"drafted={drafted} accepted={accepted} "
                       f"(accept rate {rate:.2f})")
+    if engine.queue_cap or engine.brownout is not None or \
+            engine.retry_budget is not None or args.deadline:
+        bl = engine.brownout.level if engine.brownout is not None else 0
+        trans = len(engine.brownout.transitions) \
+            if engine.brownout is not None else 0
+        print(f"[overload] shed={dict(sorted(engine.shed_counts.items()))} "
+              f"rejected={engine.rejected_total} "
+              f"retried={engine.retried_total} "
+              f"brownout_level={bl} transitions={trans} "
+              f"transfer_windows={engine.transfer_windows}")
+        if engine.breaker is not None and engine.breaker.ejections:
+            print(f"[overload] breaker: {engine.breaker.ejections} ejected,"
+                  f" {engine.breaker.rejoins} rejoined")
     if len(cluster.site_names()) > 1:
         per_site = {}
         for pod in engine.pods.values():

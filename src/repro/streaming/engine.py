@@ -36,13 +36,14 @@ every sync — retired replicas leave no stale scrape targets or ports.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import qos
 from repro.core.cluster import Cluster, Deployment, PodTemplate
 from repro.core.controllers import ControlPlane
 from repro.core.hpa import HPA, HPAConfig, PressureSignals
@@ -107,6 +108,27 @@ class StreamEngine:
     # still need to know whether its node was reachable (partition vs
     # graceful retire) to pick the right recovery path in _sync
     _pod_nodes: Dict[str, str] = field(default_factory=dict)
+    # ------------- overload protection & graceful degradation ----------
+    # bounded arrival FIFO (0 = unbounded): overflow is backpressured to
+    # the RequestSource (reject-with-retry-after) instead of growing
+    queue_cap: int = 0
+    brownout: Optional[qos.BrownoutController] = None
+    retry_budget: Optional[qos.RetryBudget] = None
+    breaker: Optional[qos.ReplicaBreaker] = None
+    # per-rid greedy-log ring cap handed to every runtime (0 = unbounded)
+    token_log_cap: int = 0
+    # cost-modeled failover: while now < degrade_until (set by the
+    # drain_site transfer window) the engine serves at least at this
+    # brownout level — shed the batch tier, protect latency-critical
+    transfer_degrade_level: int = 2
+    degrade_until: float = 0.0
+    transfer_windows: int = 0
+    shed: list = field(default_factory=list)        # (rid, reason, now)
+    shed_counts: Dict[str, int] = field(default_factory=dict)
+    rejected_total: int = 0       # bounced off the bounded queue
+    retried_total: int = 0        # deferred for client retry
+    _level: int = 0               # effective brownout level this tick
+    _last_dt: float = 1.0
 
     # ------------------------------------------------------------ setup
     @property
@@ -125,6 +147,10 @@ class StreamEngine:
                 self.cluster.register_node(n, now)
         if self.plane is None:
             self.plane = ControlPlane(self.cluster)
+        if self.plane.on_transfer is None:
+            # drain_site reports its checkpoint-transfer window here so
+            # the engine serves degraded while state crosses facilities
+            self.plane.on_transfer = self._on_transfer
         if self.runtime_cfg is None:
             self.runtime_cfg = RuntimeConfig(max_batch=self.max_batch)
 
@@ -180,7 +206,8 @@ class StreamEngine:
         kernels = self.serving.runtime_kernels(self.runtime_cfg)
         return DecodeRuntime(kernels, self.serving.params,
                              gen=self.serving.build_gen,
-                             record_tokens=self.record_tokens)
+                             record_tokens=self.record_tokens,
+                             token_log_cap=self.token_log_cap)
 
     def _credit_partial(self, name: str, rt: DecodeRuntime):
         """Credit partial generation of in-flight slots before their
@@ -212,7 +239,7 @@ class StreamEngine:
             carried = rt.drain()
             rt = self._make_runtime(name)
             if rt is not None:
-                rt.submit(carried)
+                rt.submit(carried, force=True)
                 self.runtimes[name] = rt
             else:
                 self.queue = carried + self.queue
@@ -283,7 +310,7 @@ class StreamEngine:
                     # content store rides the checkpoint: restored rids
                     # replay their exact prompt tokens
                     rt.ingest_content(rec.restored_state)
-                    rt.submit(restored)
+                    rt.submit(restored, force=True)
                 else:
                     self.queue = restored + self.queue
             self.stats[name] = st
@@ -306,11 +333,93 @@ class StreamEngine:
             self.prom.monitors = [ServiceMonitor(
                 "ersap-mon", service_selector={"monitored": "true"})]
 
+    # --------------------------------------------- overload protection
+    def _on_transfer(self, now: float, window: float):
+        """drain_site failover hook: the checkpoint-transfer window just
+        started — serve degraded (shed batch, protect latency-critical)
+        until the state has physically arrived at the destination site."""
+        self.degrade_until = max(self.degrade_until, now + window)
+        self.transfer_windows += 1
+
+    def _shed(self, req: Request, reason: str, now: float):
+        self.shed.append((req.rid, reason, now))
+        self.shed_counts[reason] = self.shed_counts.get(reason, 0) + 1
+
+    def _backpressure(self, overflow: List[Request], now: float):
+        """Bounded-queue rejection: estimate retry-after from backlog vs
+        capacity, then per request either shed (deadline unreachable, or
+        the tenant's retry budget is dry — no retry storms) or defer back
+        through the RequestSource for a client-side retry."""
+        self.rejected_total += len(overflow)
+        cap = self.service_rate * max(len(self.registries), 1)
+        retry_after = max(self._last_dt,
+                          len(self.queue) / max(cap, 1e-9))
+        for r in overflow:
+            if r.deadline > 0 and now + retry_after > r.deadline:
+                self._shed(r, "deadline", now)
+            elif self.retry_budget is not None and not self.retry_budget \
+                    .allow(qos.tier_label(r.priority), now):
+                self._shed(r, "retry-budget", now)
+            else:
+                self.source.defer([r], now + retry_after)
+                self.retried_total += 1
+
+    def _police_queue(self, now: float):
+        """Deadline-aware admission + brownout shedding, applied to the
+        whole FIFO *before* any request reaches prefill: expired requests
+        and tiers below the current shed floor never burn compute."""
+        floor = qos.shed_floor_for_level(self._level)
+        keep: List[Request] = []
+        for r in self.queue:
+            if r.deadline > 0 and now > r.deadline:
+                self._shed(r, "deadline", now)
+            elif floor and r.priority < floor:
+                self._shed(r, "brownout", now)
+            else:
+                keep.append(r)
+        self.queue = keep
+
+    def _degrade_cap(self) -> int:
+        return (self.brownout.degrade_max_new if self.brownout is not None
+                else qos.BrownoutController.degrade_max_new)
+
     # ------------------------------------------------------------- tick
     def tick(self, now: float, dt: float, lam: float):
         """One engine step of simulated time dt with arrival rate lam.
         Capacity follows the *actual* replica set in the cluster store."""
-        self.queue.extend(self.source.arrivals(now, dt, lam))
+        self._last_dt = dt
+        arrivals = self.source.arrivals(now, dt, lam)
+        if self.queue_cap > 0 and \
+                len(self.queue) + len(arrivals) > self.queue_cap:
+            room = max(self.queue_cap - len(self.queue), 0)
+            # reject lowest-tier-first: latency-critical arrivals take
+            # the remaining room before any lower tier is admitted
+            # (stable sort keeps FIFO order within a tier)
+            ranked = sorted(arrivals, key=lambda r: -r.priority)
+            self.queue.extend(ranked[:room])
+            self._backpressure(ranked[room:], now)
+        else:
+            self.queue.extend(arrivals)
+        # brownout level: slab occupancy + queue-delay EWMA watermarks
+        # with hysteresis; a drain_site transfer window forces at least
+        # ``transfer_degrade_level`` for its duration
+        level = 0
+        if self.brownout is not None:
+            # arrival stamps land inside (now, now+dt), so clamp ages at 0;
+            # deferred re-releases keep their original stamp and age truly.
+            # Occupancy input: backlog share of the bounded queue when one
+            # is configured — the slab's per-tick *peak* saturates at 1.0
+            # whenever a single batch fills, which says nothing about
+            # sustained overload — else the slab share.
+            ages = [max(now - r.arrival, 0.0) for r in self.queue]
+            delay = float(np.mean(ages)) if ages else 0.0
+            occ = (len(self.queue) / self.queue_cap if self.queue_cap > 0
+                   else self.slab_pressure())
+            level = self.brownout.update(now, occ, delay)
+        if now < self.degrade_until:
+            level = max(level, self.transfer_degrade_level)
+        self._level = level
+        self._police_queue(now)
         # per-replica service capacity this tick (mu * dt, M/M/1 analog —
         # doubling replicas doubles capacity, the paper's 16->32 threads).
         # The fractional part carries across ticks so mu*dt < 1 meters
@@ -318,6 +427,7 @@ class StreamEngine:
         self._budget_frac += self.service_rate * dt
         budget = int(self._budget_frac)
         self._budget_frac -= budget
+        cap = self._degrade_cap() if level >= 1 else 0
         tokens_before = self.total_tokens
         for name in sorted(self.registries):
             reg = self.registries[name]
@@ -328,13 +438,40 @@ class StreamEngine:
                 # elsewhere and the rejoining node is epoch-fenced
                 reg.gauge("ersap_queue_len").set(len(self.queue))
                 continue
+            allow = -1
+            if self.breaker is not None:
+                allow = self.breaker.allow(name, now)
+                if allow == 0:
+                    # ejected replica: route around it entirely until the
+                    # cool-off elapses and probe traffic passes
+                    reg.gauge("ersap_queue_len").set(len(self.queue))
+                    continue
             n_take = min(len(self.queue), budget)
+            if allow >= 0:
+                n_take = min(n_take, allow)       # half-open: probes only
             took, self.queue = self.queue[:n_take], self.queue[n_take:]
+            if self.breaker is not None and allow >= 0:
+                self.breaker.note_probe(name, len(took))
+            if cap:
+                # polite degradation: cap generation length before
+                # dropping anyone (greedy decode is deterministic in the
+                # prompt, so capped output is a prefix of the full one)
+                took = [replace(r, max_new=min(r.max_new, cap))
+                        if r.max_new > cap else r for r in took]
             rt = self.runtimes.get(name)
             if rt is not None:
                 rt.reset_pressure()    # per-tick slab-pressure window
+                rt.spec_enabled = (level == 0)
+            st0 = self.stats.get(name)
+            tokens0 = st0.tokens if st0 is not None else 0
             self._process(took, name, now)
+            if self.breaker is not None:
+                st1 = self.stats.get(name)
+                self.breaker.observe(
+                    name, now, (st1.tokens if st1 is not None else 0)
+                    - tokens0, had_work=bool(took))
             reg.gauge("ersap_queue_len").set(len(self.queue))
+            reg.gauge("ersap_brownout_level").set(level)
             rt = self.runtimes.get(name)
             if rt is not None:
                 # slab pressure, both layouts: busy slots always (the
@@ -395,7 +532,12 @@ class StreamEngine:
             return
         fitting = [r for r in requests if rt.fits(r)]
         oversize = [r for r in requests if not rt.fits(r)]
-        rt.submit(fitting)
+        bounced = rt.submit(fitting)
+        if bounced:
+            # the runtime's bounded pending queue pushed back — return
+            # the overflow to the source with retry-after (never dropped
+            # silently, never queued unboundedly)
+            self._backpressure(bounced, now)
         for fin in rt.pump():
             self._finish(replica, fin.req, fin.tokens, now)
         for j in range(0, len(oversize), self.max_batch):

@@ -67,9 +67,16 @@ def requests_from_state(state) -> List[Request]:
     # page sharing instead of forking private copies
     grp = np.asarray(state.get("inflight_group", np.zeros(rids.size)))
     pfx = np.asarray(state.get("inflight_pfxlen", np.zeros(rids.size)))
+    # QoS columns (absent in pre-overload checkpoints): the deadline and
+    # tier survive the drain -> restore round trip, so a restored request
+    # is still sheddable/protected exactly like a never-moved one
+    ddl = np.asarray(state.get("inflight_deadline", np.zeros(rids.size)))
+    pri = np.asarray(state.get("inflight_priority",
+                               np.full(rids.size, 10)))
     return [Request(int(rids[i]), float(arrival[i]), int(plen[i]),
                     int(rem[i]), prefix_group=int(grp[i]),
-                    prefix_len=int(pfx[i])) for i in range(rids.size)]
+                    prefix_len=int(pfx[i]), deadline=float(ddl[i]),
+                    priority=int(pri[i])) for i in range(rids.size)]
 
 
 @dataclass(frozen=True)
@@ -116,6 +123,10 @@ class RuntimeConfig:
     # proposes k tokens per row and one k+1-wide dispatch verifies them
     # (greedy accept-prefix — token-identical to one-at-a-time). 0 = off.
     spec_decode: int = 0
+    # bounded pending queue (0 = unbounded): ``submit`` admits up to the
+    # cap and returns the overflow so the engine can apply backpressure
+    # (reject-with-retry-after) instead of letting the queue grow forever
+    pending_cap: int = 0
 
     @property
     def capacity(self) -> int:
@@ -527,6 +538,16 @@ class DecodeRuntime:
     peak_pages: int = 0
     record_tokens: bool = False       # keep per-request token ids (tests)
     token_log: Dict[int, list] = field(default_factory=dict)
+    # ring cap per rid on the greedy log (0 = unbounded): long soaks keep
+    # the newest ``token_log_cap`` ids; ``token_log_dropped[rid]`` counts
+    # the trimmed head — the explicit truncation marker that lets audits
+    # align a capped log against an oracle's tail instead of its prefix
+    token_log_cap: int = 0
+    token_log_dropped: Dict[int, int] = field(default_factory=dict)
+    # engine degrade knob: False routes decode through the plain block
+    # path even when rcfg.spec_decode is configured (brownout levels >= 1
+    # shed the speculative-decode luxury before shedding any request)
+    spec_enabled: bool = True
     # prefix-cache telemetry (cumulative since construction)
     prefix_lookups: int = 0
     prefix_hits: int = 0
@@ -649,11 +670,35 @@ class DecodeRuntime:
         return next((b for b in ladder if b >= need), ladder[-1])
 
     # -------------------------------------------------------------- intake
-    def submit(self, requests: List[Request]):
-        self.pending.extend(requests)
+    def submit(self, requests: List[Request],
+               force: bool = False) -> List[Request]:
+        """Enqueue requests; returns the overflow rejected by the bounded
+        pending queue (empty when ``pending_cap`` is 0 or everything
+        fits). ``force=True`` bypasses the cap — checkpoint-restored and
+        drain-carried work was already admitted once and must never be
+        bounced back into the arrival stream."""
+        cap = self.kernels.rcfg.pending_cap
+        if force or cap <= 0:
+            self.pending.extend(requests)
+            return []
+        room = max(cap - len(self.pending), 0)
+        self.pending.extend(requests[:room])
+        return list(requests[room:])
 
     def fits(self, req: Request) -> bool:
         return self.kernels.rcfg.fits(req)
+
+    def _log_tokens(self, rid: int, toks: list) -> None:
+        """Append to the per-rid greedy log, trimming the oldest entries
+        past ``token_log_cap`` and counting the drop."""
+        log = self.token_log.setdefault(rid, [])
+        log.extend(toks)
+        cap = self.token_log_cap
+        if cap and len(log) > cap:
+            drop = len(log) - cap
+            del log[:drop]
+            self.token_log_dropped[rid] = \
+                self.token_log_dropped.get(rid, 0) + drop
 
     @property
     def inflight(self) -> int:
@@ -919,7 +964,7 @@ class DecodeRuntime:
                 self._register_intern(self.content[r.rid], s.pages,
                                       int(first[j]), lb)
             if self.record_tokens:               # first token (prefill argmax)
-                self.token_log.setdefault(r.rid, []).append(int(first[j]))
+                self._log_tokens(r.rid, [int(first[j])])
         self.peak_slots = max(self.peak_slots, self.slots_in_use)
         # the fused tail advanced every live row (old and new) tail steps
         return self._harvest(rcfg.admit_tail)
@@ -1029,7 +1074,7 @@ class DecodeRuntime:
                 self._spec_init(s, first_of[i])
             self.slots[i] = s
             if self.record_tokens:
-                self.token_log.setdefault(r.rid, []).append(first_of[i])
+                self._log_tokens(r.rid, [first_of[i]])
         self.peak_slots = max(self.peak_slots, self.slots_in_use)
         return self._harvest(0)
 
@@ -1108,7 +1153,7 @@ class DecodeRuntime:
 
     def _decode_block(self) -> List[Finished]:
         rcfg = self.kernels.rcfg
-        if rcfg.spec_decode:
+        if rcfg.spec_decode and self.spec_enabled:
             return self._spec_block()
         maxrem = max((s.remaining for s in self.slots if s.busy), default=0)
         steps = next((b for b in self.kernels.rcfg.block_ladder
@@ -1133,11 +1178,19 @@ class DecodeRuntime:
             self.params, self.tok, self.cache, self.active, self.remaining,
             **kw)
         self.steps_dispatched += 1
-        if self.record_tokens:                  # test hook: syncs per block
+        if self.record_tokens or rcfg.spec_decode:  # syncs per block
             arr = np.asarray(toks)
             for i, rem in before.items():
-                self.token_log.setdefault(self.slots[i].req.rid, []).extend(
-                    arr[:min(steps, rem), i].tolist())
+                s = self.slots[i]
+                emitted = [int(t) for t in arr[:min(steps, rem), i]]
+                if self.record_tokens:
+                    self._log_tokens(s.req.rid, emitted)
+                if rcfg.spec_decode and emitted and s.history is not None:
+                    # keep the drafter's host mirrors current while spec
+                    # is browned out, so re-enabling it later verifies
+                    # against the true last token instead of a stale one
+                    s.history.extend(emitted)
+                    s.last_tok = emitted[-1]
         return self._harvest(steps)
 
     # ------------------------------------------------------ spec decode
@@ -1240,7 +1293,7 @@ class DecodeRuntime:
             self.spec_accepted += m
             self.spec_emitted += e
             if self.record_tokens:
-                self.token_log.setdefault(s.req.rid, []).extend(emitted)
+                self._log_tokens(s.req.rid, emitted)
             eidx = len(s.history) - s.lb        # emitted before this round
             st = self._stream.get(s.skey)
             if st is not None and eidx + e > len(st):
@@ -1294,12 +1347,13 @@ class DecodeRuntime:
         its page table, replaying identical tokens (the §4.5.4 page-table
         round-trip is logical, not physical)."""
         live = [(s.req.rid, s.req.arrival, s.req.prompt_len, s.remaining,
-                 s.req.prefix_group, s.req.prefix_len)
+                 s.req.prefix_group, s.req.prefix_len,
+                 s.req.deadline, s.req.priority)
                 for s in self.slots if s.busy and s.remaining > 0]
         live += [(r.rid, r.arrival, r.prompt_len, r.max_new,
-                  r.prefix_group, r.prefix_len)
+                  r.prefix_group, r.prefix_len, r.deadline, r.priority)
                  for r in self.pending]
-        arr = np.asarray(live, np.float64).reshape(-1, 6)
+        arr = np.asarray(live, np.float64).reshape(-1, 8)
         rids = arr[:, 0].astype(np.int64)
         # content rows for the in-flight rids, padded to one rectangle
         toks = [self.content.get(int(rid), np.zeros(0, np.int32))
@@ -1315,6 +1369,8 @@ class DecodeRuntime:
             "inflight_remaining": arr[:, 3].astype(np.int64),
             "inflight_group": arr[:, 4].astype(np.int64),
             "inflight_pfxlen": arr[:, 5].astype(np.int64),
+            "inflight_deadline": arr[:, 6],
+            "inflight_priority": arr[:, 7].astype(np.int64),
             "content_len": np.asarray([t.shape[0] for t in toks], np.int64),
             "content_tokens": content,
         }
@@ -1347,7 +1403,9 @@ class DecodeRuntime:
                 out.append(Request(s.req.rid, s.req.arrival,
                                    s.req.prompt_len, s.remaining,
                                    prefix_group=s.req.prefix_group,
-                                   prefix_len=s.req.prefix_len))
+                                   prefix_len=s.req.prefix_len,
+                                   deadline=s.req.deadline,
+                                   priority=s.req.priority))
                 self._retire_slot(i)
         self.content.clear()
         return out
