@@ -32,6 +32,7 @@ serving workload for CI smoke, ``--json-dir DIR`` relocates the JSONs.
 from __future__ import annotations
 
 import json
+import math
 import pathlib
 import time
 
@@ -1469,6 +1470,97 @@ def bench_roofline():
     row("roofline_dryrun_summary", 0.0, derived)
 
 
+def bench_observability_overhead():
+    """Observability cost floor: steady-state tokens/s with the full
+    plane wired (lifecycle Tracer + FlightRecorder with burn-rate
+    checks + TickProfiler) vs stock, same engine configuration and
+    manufactured request set. Tracing must be cheap enough to leave on:
+    ``--check`` floors ``tokens_ratio`` (on/off) at 0.95, i.e. <5%
+    throughput cost. The on-path report carries the pump/tick phase
+    breakdown so BENCH_serving.json records where the tick goes."""
+    import jax
+    from repro.configs.base import get_config
+    from repro.core.elastic import ElasticServing
+    from repro.core.jrm import SliceSpec, start_vk
+    from repro.core.observability import FlightRecorder, SLOConfig, \
+        TickProfiler
+    from repro.core.tracing import Tracer
+    from repro.data.pipeline import RequestSource
+    from repro.models import model_api as MA
+    from repro.streaming.engine import StreamEngine
+
+    cfg = get_config("qwen2-7b").reduced()
+    mod = MA.get_module(cfg)
+    host = jax.tree.map(np.asarray, mod.init(jax.random.PRNGKey(0), cfg))
+    serving = ElasticServing(cfg, tp=1).build(1, host_params=host)
+    n_req = 24 if FAST else 96
+
+    def request_set():
+        src = RequestSource(seed=11, prompt_range=(8, 48),
+                            max_new_range=(2, 32))
+        return src.arrivals(0.0, 1.0, lam=float(n_req))
+
+    def mk_engine(tag, obs):
+        nodes = [start_vk(f"obs-{tag}", now=0.0,
+                          slice_spec=SliceSpec(chips=4))]
+        eng = StreamEngine(cfg, serving, nodes, service_rate=1e9,
+                           max_batch=8, use_runtime=True)
+        eng.deploy(0.0)
+        if obs:
+            tracer = Tracer()
+            # a finite (never-tripping) SLO so check() pays the real
+            # burn-rate evaluation cost every tick
+            eng.enable_observability(
+                tracer=tracer,
+                recorder=FlightRecorder(tracer, slo=SLOConfig(lc_p99_s=1e9)),
+                profiler=TickProfiler())
+        return eng
+
+    def one_pass(eng, now):
+        eng.queue.extend(request_set())
+        t0 = time.perf_counter()
+        eng.tick(now, 1.0, lam=0.0)
+        if eng.recorder is not None:
+            eng.recorder.check(now)
+        return time.perf_counter() - t0
+
+    # interleaved min-of-many warm passes: the contrast is a few
+    # percent, so a sustained noise window hitting only one path's
+    # measurement run would swamp the signal the 0.95 --check floor
+    # guards — alternating passes exposes both engines to the same
+    # ambient conditions, and min-of-N converges each to its floor
+    eng_off = mk_engine("off", False)
+    eng_on = mk_engine("on", True)
+    n_pass = 13 if FAST else 7
+    cold = {"off": one_pass(eng_off, 0.0), "on": one_pass(eng_on, 0.0)}
+    warm = {"off": math.inf, "on": math.inf}
+    for t in range(1, n_pass):
+        warm["off"] = min(warm["off"], one_pass(eng_off, float(t)))
+        warm["on"] = min(warm["on"], one_pass(eng_on, float(t)))
+    tokens = sum(r.max_new for r in request_set())
+
+    def path_report(key, eng):
+        out = {"cold_s": round(cold[key], 4), "s": round(warm[key], 4),
+               "tok_per_s": round(tokens / warm[key], 1)}
+        if eng.tracer is not None:
+            assert eng.tracer.spans, "observability on but no spans"
+            out["spans"] = len(eng.tracer.spans)
+            out["profile"] = eng.profiler.summary()
+        return out
+
+    off = path_report("off", eng_off)
+    on = path_report("on", eng_on)
+    ratio = on["tok_per_s"] / off["tok_per_s"]
+    report = {"name": "observability_overhead",
+              "arch": f"{cfg.name}.reduced", "requests": n_req,
+              "fast": FAST, "off": off, "on": on,
+              "tokens_ratio": round(ratio, 3)}
+    write_serving("observability_overhead", report)
+    row("observability_overhead", on["s"] * 1e6,
+        f"tokens_ratio={ratio:.3f};on_tok_per_s={on['tok_per_s']};"
+        f"off_tok_per_s={off['tok_per_s']};spans={on['spans']}")
+
+
 BENCHES = [
     bench_lifecycle_create, bench_lifecycle_monitor,
     bench_hpa_formula, bench_hpa_scaling,
@@ -1478,6 +1570,7 @@ BENCHES = [
     bench_priority_spike, bench_chaos_soak, bench_overload_brownout,
     bench_scale_bringup,
     bench_serving_throughput, bench_paged_decode, bench_prefix_reuse,
+    bench_observability_overhead,
     bench_kernel_flash_attention, bench_kernel_mlstm, bench_kernel_ssm,
     bench_kernel_decode_attention,
     bench_roofline,
@@ -1495,6 +1588,8 @@ CHECK_METRICS = {
                      "prefix-cache admission vs PR-4 paged admission"),
     "spec_decode": ("prefix_reuse", "spec_speedup",
                     "k-token speculative decode vs 1-token-per-dispatch"),
+    "observability": ("observability_overhead", "tokens_ratio",
+                      "full tracing/recorder/profiler plane on vs off"),
 }
 
 
@@ -1544,6 +1639,7 @@ def run_check(tol: float, record: bool) -> int:
         bench_serving_throughput()
         bench_paged_decode()
         bench_prefix_reuse()
+        bench_observability_overhead()
         return json.loads((JSON_DIR / "BENCH_serving.json").read_text())
 
     def evaluate(ratios, baseline):
@@ -1559,6 +1655,10 @@ def run_check(tol: float, record: bool) -> int:
         if ratios.get("spec_decode", 0.0) < 1.3:
             failures.append(f"speculative decode speedup "
                             f"{ratios.get('spec_decode')} < 1.3x floor")
+        if ratios.get("observability", 0.0) < 0.95:
+            failures.append(f"observability plane costs >5% tokens/s "
+                            f"(on/off ratio "
+                            f"{ratios.get('observability')} < 0.95)")
         for key, got in sorted(ratios.items()):
             base = baseline.get(key)
             if base is not None and (base - got) / base > tol:
@@ -1633,7 +1733,14 @@ def main(argv=None) -> int:
     for b in BENCHES:
         if args.only and args.only not in b.__name__:
             continue
+        n0 = len(RESULTS)
+        t0 = time.perf_counter()
         b()
+        # stamp the bench's wall-clock (setup + all passes) on every row
+        # it emitted, so BENCH_run.json tracks where the suite's time goes
+        wall = round(time.perf_counter() - t0, 3)
+        for r in RESULTS[n0:]:
+            r["wall_s"] = wall
     (JSON_DIR / "BENCH_run.json").write_text(
         json.dumps(RESULTS, indent=2) + "\n")
     return 0

@@ -288,8 +288,13 @@ class InvariantAuditor:
     cluster: Cluster
     engine: Optional[object] = None          # StreamEngine (or None)
     checks: int = 0
+    # optional FlightRecorder: a violation dumps an incident bundle
+    # (recent spans + events) *before* the raise tears the run down
+    recorder: Optional[object] = None
 
     def _fail(self, now: float, what: str):
+        if self.recorder is not None:
+            self.recorder.trip(now, "invariant", what)
         raise ChaosInvariantError(f"[t={now:.1f}] {what}")
 
     def audit(self, now: float) -> Dict[str, float]:

@@ -170,6 +170,7 @@ class NodeLifecycleController:
     # what the transfer-cost model charges when the displaced pod
     # re-binds at another site (cleared by the caller per wave)
     drain_bytes: Dict[str, int] = field(default_factory=dict)
+    tracer: object = None       # optional observability-plane span sink
     _drained: Set[str] = field(default_factory=set)
     _ckpt_steps: Dict[str, int] = field(default_factory=dict)
     _last_bg_ckpt: Dict[str, float] = field(default_factory=dict)
@@ -302,6 +303,9 @@ class NodeLifecycleController:
             restored, _meta = checkpointer.restore(pod_dir, tree)
         self.cluster.record(now, KIND_POD, rec.name, "Checkpointed",
                             f"dir={pod_dir} step={step}")
+        if self.tracer is not None:
+            self.tracer.span("checkpoint", now, pod=rec.name,
+                             node=rec.pod.node or "", step=step)
         return {k: np.asarray(v) for k, v in restored.items()}
 
     def recover_from_disk(self, pod_name: str, now: float) -> dict:
@@ -321,6 +325,9 @@ class NodeLifecycleController:
             return {}
         self.cluster.record(now, KIND_POD, pod_name, "CrashRestored",
                             f"step={meta.get('step')} dir={pod_dir}")
+        if self.tracer is not None:
+            self.tracer.span("crash_restore", now, pod=pod_name,
+                             step=meta.get("step"))
         return {k: np.asarray(v) for k, v in state.items()}
 
     def _drain_node(self, name: str, now: float):
@@ -328,6 +335,9 @@ class NodeLifecycleController:
         pods = self.cluster.pods_on(name)
         if self.drain_pods_per_tick > 0:
             pods = pods[:self.drain_pods_per_tick]
+        if self.tracer is not None and pods:
+            self.tracer.span("drain_node", now, node=name,
+                             pods=tuple(r.name for r in pods))
         for rec in pods:
             state = self.checkpoint_pod(rec, now)
             if state:
@@ -495,6 +505,11 @@ class ControlPlane:
     on_transfer: object = None
     last_transfer_s: float = 0.0
     last_transfer_bytes: int = 0
+    # observability plane (optional): ``tracer`` propagates to the
+    # scheduler/lifecycle controller on first wire; ``profiler`` times
+    # the three phases of every ``step``
+    tracer: object = None
+    profiler: object = None
 
     def __post_init__(self):
         if self.scheduler is None:
@@ -522,9 +537,16 @@ class ControlPlane:
     def step(self, now: float):
         """One control-plane tick: lifecycle first (drains/evictions free
         capacity and park state), then replica convergence, then binding."""
-        self.nodes.reconcile(now)
-        self.deployments.reconcile(now)
-        return self.scheduler.run_once(now)
+        if self.profiler is None:
+            self.nodes.reconcile(now)
+            self.deployments.reconcile(now)
+            return self.scheduler.run_once(now)
+        with self.profiler.phase("tick.nodes_reconcile"):
+            self.nodes.reconcile(now)
+        with self.profiler.phase("tick.deploy_reconcile"):
+            self.deployments.reconcile(now)
+        with self.profiler.phase("tick.schedule"):
+            return self.scheduler.run_once(now)
 
     def drain_site(self, site: str, now: float):
         """Evacuate one whole facility (kill / maintenance / superseded
@@ -561,6 +583,9 @@ class ControlPlane:
         if window > 0:
             self.cluster.record(now, "Node", site, "SiteDrainTransfer",
                                 f"bytes={total} window={window:.3f}s")
+            if self.tracer is not None:
+                self.tracer.span("transfer_window", now, site=site,
+                                 window=window, bytes=total)
             if self.on_transfer is not None:
                 self.on_transfer(now, window)
         return out

@@ -12,6 +12,29 @@ from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
+#: Bucket ladder for count-valued distributions (slot/page occupancy
+#: peaks): powers of two up to a large pool, so the HPA/twin sees the
+#: shape of per-tick peaks instead of a last-write-wins gauge.
+COUNT_BUCKETS = (0.0, 1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024,
+                 4096, math.inf)
+
+
+def _series_key(name: str, labels: Optional[Dict[str, str]]) -> str:
+    """Canonical series key: ``name`` or ``name{k="v",...}`` with label
+    keys sorted, so the same label set always maps to one series."""
+    if not labels:
+        return name
+    inner = ",".join(f'{k}="{labels[k]}"' for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
+def split_series(key: str) -> Tuple[str, str]:
+    """Inverse-ish of ``_series_key``: ('base', '{k="v",...}' or '')."""
+    i = key.find("{")
+    if i < 0:
+        return key, ""
+    return key[:i], key[i:]
+
 
 @dataclass
 class Counter:
@@ -55,6 +78,28 @@ class Histogram:
     def mean(self):
         return self.total / self.n if self.n else 0.0
 
+    def quantile(self, q: float) -> float:
+        """Estimated q-quantile by linear interpolation within the
+        bucket holding the target rank (Prometheus histogram_quantile
+        semantics). Empty histogram -> 0.0; mass in the +Inf bucket
+        reports the largest finite bound."""
+        if self.n == 0:
+            return 0.0
+        q = min(max(q, 0.0), 1.0)
+        rank = q * self.n
+        acc = 0.0
+        prev = 0.0
+        for bound, cnt in zip(self.buckets, self.counts):
+            if cnt:
+                acc += cnt
+                if acc >= rank:
+                    if math.isinf(bound):
+                        return prev
+                    return prev + (bound - prev) * (1.0 - (acc - rank) / cnt)
+            if not math.isinf(bound):
+                prev = bound
+        return prev
+
 
 @dataclass
 class Registry:
@@ -62,23 +107,38 @@ class Registry:
     port: int = 2221
     metrics: Dict[str, object] = field(default_factory=dict)
 
-    def counter(self, name) -> Counter:
-        return self.metrics.setdefault(name, Counter())
+    def counter(self, name, labels: Optional[Dict[str, str]] = None) \
+            -> Counter:
+        key = _series_key(name, labels)
+        m = self.metrics.get(key)
+        if m is None:
+            m = self.metrics[key] = Counter()
+        return m
 
-    def gauge(self, name) -> Gauge:
-        return self.metrics.setdefault(name, Gauge())
+    def gauge(self, name, labels: Optional[Dict[str, str]] = None) -> Gauge:
+        key = _series_key(name, labels)
+        m = self.metrics.get(key)
+        if m is None:
+            m = self.metrics[key] = Gauge()
+        return m
 
-    def histogram(self, name, **kw) -> Histogram:
-        return self.metrics.setdefault(name, Histogram(**kw))
+    def histogram(self, name, labels: Optional[Dict[str, str]] = None,
+                  **kw) -> Histogram:
+        key = _series_key(name, labels)
+        m = self.metrics.get(key)
+        if m is None:
+            m = self.metrics[key] = Histogram(**kw)
+        return m
 
     def collect(self) -> Dict[str, float]:
         out = {}
-        for name, m in self.metrics.items():
+        for key, m in self.metrics.items():
+            base, lbl = split_series(key)
             if isinstance(m, Histogram):
-                out[name + "_sum"] = m.total
-                out[name + "_count"] = m.n
+                out[base + "_sum" + lbl] = m.total
+                out[base + "_count" + lbl] = m.n
             else:
-                out[name] = m.value
+                out[key] = m.value
         return out
 
 

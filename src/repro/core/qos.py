@@ -387,6 +387,7 @@ class BrownoutController:
     last_pressure: float = 0.0
     transitions: List[Tuple[float, int, int, float]] = field(
         default_factory=list)        # (now, old, new, pressure)
+    tracer: object = None            # optional: spans at level changes
     _over: int = 0
     _under: int = 0
 
@@ -407,10 +408,16 @@ class BrownoutController:
             self._under = 0
         if self._over >= self.dwell_ticks and self.level < self.max_level:
             self.transitions.append((now, self.level, self.level + 1, p))
+            if self.tracer is not None:
+                self.tracer.span("brownout", now, old=self.level,
+                                 new=self.level + 1, pressure=round(p, 4))
             self.level += 1
             self._over = 0
         elif self._under >= self.recover_ticks and self.level > 0:
             self.transitions.append((now, self.level, self.level - 1, p))
+            if self.tracer is not None:
+                self.tracer.span("brownout", now, old=self.level,
+                                 new=self.level - 1, pressure=round(p, 4))
             self.level -= 1
             self._under = 0
         return self.level
@@ -478,6 +485,7 @@ class ReplicaBreaker:
     probe_budget: int = 2
     ejections: int = 0
     rejoins: int = 0
+    tracer: object = None            # optional: spans at state changes
     _state: Dict[str, str] = field(default_factory=dict)
     _stall: Dict[str, int] = field(default_factory=dict)
     _opened_at: Dict[str, float] = field(default_factory=dict)
@@ -497,6 +505,10 @@ class ReplicaBreaker:
             if now - self._opened_at.get(name, now) >= self.probe_after_s:
                 self._state[name] = BREAKER_HALF_OPEN
                 self._probes[name] = 0
+                if self.tracer is not None:
+                    self.tracer.span("breaker", now, replica=name,
+                                     old=BREAKER_OPEN,
+                                     new=BREAKER_HALF_OPEN)
                 return self.probe_budget
             return 0
         return max(self.probe_budget - self._probes.get(name, 0), 0)
@@ -518,6 +530,10 @@ class ReplicaBreaker:
                     self._state[name] = BREAKER_CLOSED
                     self._stall[name] = 0
                     self.rejoins += 1
+                if self.tracer is not None:
+                    self.tracer.span("breaker", now, replica=name,
+                                     old=BREAKER_HALF_OPEN,
+                                     new=self._state[name])
             return
         if st == BREAKER_OPEN:
             return
@@ -527,6 +543,9 @@ class ReplicaBreaker:
                 self._state[name] = BREAKER_OPEN
                 self._opened_at[name] = now
                 self.ejections += 1
+                if self.tracer is not None:
+                    self.tracer.span("breaker", now, replica=name,
+                                     old=BREAKER_CLOSED, new=BREAKER_OPEN)
         else:
             self._stall[name] = 0
 

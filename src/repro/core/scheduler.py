@@ -667,6 +667,7 @@ class Scheduler:
     # the differential harness pins the two paths against each other.
     use_index: bool = True
     wake_on_freed: bool = True
+    tracer: object = None       # optional: schedule/preempt spans
     _peer_site_cache: Optional[tuple] = field(default=None, repr=False)
     _index: Optional[CapacityIndex] = field(default=None, init=False,
                                             repr=False)
@@ -952,11 +953,18 @@ class Scheduler:
             node, reason = self.select_node(rec, now)
             if node is not None:
                 self.cluster.assign(rec.name, node.name, now)
+                if self.tracer is not None:
+                    self.tracer.span("schedule", now, pod=rec.name,
+                                     node=node.name, reason=reason)
                 out.append(Decision(rec.name, node.name, reason))
                 continue
             if self.enable_preemption:
                 dec = self._try_preempt(rec, now)
                 if dec is not None:
+                    if self.tracer is not None:
+                        self.tracer.span("preempt", now, pod=dec.pod,
+                                         node=dec.node,
+                                         victims=tuple(dec.preempted))
                     out.append(dec)
                     continue
             rec.attempts += 1

@@ -88,6 +88,10 @@ class Request:
     # QoS tier of the issuing tenant (PriorityClass.value — batch=0,
     # standard=10, latency-critical=100). Brownout sheds low tiers first.
     priority: int = 10
+    # trace context stamped at the RequestSource (== rid for sourced
+    # traffic; 0 = untraced). Rides checkpoints so a restored request's
+    # spans keep chaining to the same trace across fault incarnations.
+    trace_id: int = 0
 
 
 @dataclass
@@ -116,6 +120,9 @@ class RequestSource:
     ttl: float = 0.0
     surge: float = 1.0
     tiers: tuple = ()
+    # optional observability hook: when set, every minted request gets an
+    # ``enqueue`` span and every deferral a ``defer`` span.
+    tracer: object = None
 
     def __post_init__(self):
         self.rng = np.random.default_rng(self.seed)
@@ -129,6 +136,8 @@ class RequestSource:
         """Park rejected requests for client-side retry at ``not_before``."""
         for req in requests:
             self._deferred.append((float(not_before), req))
+            if self.tracer is not None:
+                self.tracer.span("defer", not_before, rid=req.rid)
         self.deferred_total += len(requests)
 
     def _take_deferred(self, now: float):
@@ -167,7 +176,13 @@ class RequestSource:
                 pfx = min(self.prefix_len, plen)
             arrival = now + self.rng.uniform(0, dt)
             ddl = arrival + self.ttl if self.ttl > 0 else 0.0
+            prio = self._tier()
             out.append(Request(self.rid, arrival, plen, mnew,
                                prefix_group=grp, prefix_len=pfx,
-                               deadline=ddl, priority=self._tier()))
+                               deadline=ddl, priority=prio,
+                               trace_id=self.rid))
+            if self.tracer is not None:
+                self.tracer.span("enqueue", arrival, rid=self.rid,
+                                 prompt_len=plen, max_new=mnew,
+                                 priority=prio, deadline=ddl)
         return out

@@ -45,6 +45,7 @@ Usage:
       [--batch-load 6 --quota "ersap:chips=6,batch:chips=6"]
 """
 import argparse
+import json
 import os
 import sys
 
@@ -195,6 +196,26 @@ def main(argv=None):
     ap.add_argument("--queue-cap", type=int, default=0,
                     help="arrival FIFO bound (0 = unbounded; --brownout"
                          " defaults it to 64 x service capacity)")
+    ap.add_argument("--trace", action="store_true",
+                    help="request-lifecycle tracing: every hop of every"
+                         " request (enqueue/admit/prefill/decode/drain/"
+                         "restore/retire + control-plane spans) lands in"
+                         " a bounded span ring with an SLO flight"
+                         " recorder on top")
+    ap.add_argument("--trace-out", default="", metavar="FILE",
+                    help="write the flight-recorder dump (span ring +"
+                         " events + incidents) as JSON at end of run;"
+                         " implies --trace. Render with tools/tracedump.py")
+    ap.add_argument("--metrics-out", default="", metavar="FILE",
+                    help="dump the full metric pipeline as Prometheus"
+                         ' text exposition at end of run ("-" = stdout)')
+    ap.add_argument("--incident-dir", default="", metavar="DIR",
+                    help="flight recorder auto-dumps incident bundles"
+                         " (SLO breach / invariant violation) here")
+    ap.add_argument("--slo-p99", type=float, default=0.0, metavar="S",
+                    help="latency-critical p99 completion-latency SLO (s):"
+                         " a burn-rate breach trips a flight-recorder"
+                         " incident (0 disables)")
     ap.add_argument("--site-bandwidth", default="",
                     help='inter-site bandwidth matrix "a:b:gbps,..." for'
                          " the checkpoint transfer-cost model paid by"
@@ -339,6 +360,23 @@ def main(argv=None):
             print(f"[qos] quota {q.owner}"
                   f"{'@' + q.site if q.site else ''}: chips={q.chips} "
                   f"hbm={q.hbm_bytes} kv_pages={q.kv_pages}")
+    # ---- unified observability plane (opt-in tracing, always-on profiler) --
+    from repro.core.observability import FlightRecorder, SLOConfig, \
+        TickProfiler
+    from repro.core.tracing import Tracer
+    profiler = TickProfiler()
+    tracer = recorder = None
+    if args.trace or args.trace_out or args.incident_dir or args.slo_p99 > 0:
+        tracer = Tracer()
+        recorder = FlightRecorder(
+            tracer, slo=SLOConfig(lc_p99_s=args.slo_p99),
+            dump_dir=args.incident_dir or None)
+        print(f"[trace] lifecycle tracing on (ring={tracer.cap} spans); "
+              f"slo_p99={args.slo_p99 or 'off'} "
+              f"incident_dir={args.incident_dir or 'off'}")
+    # wired before deploy so initial schedule/bind spans are captured
+    engine.enable_observability(tracer=tracer, recorder=recorder,
+                                profiler=profiler)
     engine.deploy(0.0)
     print(f"[scheduler] {len(engine.pods)} serving pods bound; "
           f"controller={args.controller} "
@@ -365,7 +403,7 @@ def main(argv=None):
         injector = FaultInjector(
             schedule=[s.strip() for s in args.chaos.split(",") if s.strip()],
             seed=args.chaos_seed, ckpt_dir=plane.nodes.ckpt_dir)
-        auditor = InvariantAuditor(cluster, engine)
+        auditor = InvariantAuditor(cluster, engine, recorder=recorder)
         print(f"[chaos] {len(injector.schedule)} faults scheduled "
               f"(seed={args.chaos_seed}); bg checkpoints every "
               f"{plane.nodes.bg_checkpoint_every:.0f}s -> "
@@ -412,7 +450,10 @@ def main(argv=None):
             #                            recover from their checkpoint
         qlen = engine.tick(now, args.dt, lam)
         if auditor is not None:
-            auditor.audit(now)         # books must balance on every tick
+            with profiler.phase("tick.audit"):
+                auditor.audit(now)     # books must balance on every tick
+        if recorder is not None:
+            recorder.check(now)        # burn-rate SLO evaluation
         if t % 2 == 1:
             engine.control_step(now)
         if t % 10 == 0:
@@ -501,6 +542,30 @@ def main(argv=None):
         books = cluster.ledger.assert_balanced()
         print(f"[qos] quota books: chips {books['chips_used']} used + "
               f"{books['chips_free']} free == {books['chips_capacity']}")
+    prof = profiler.summary()
+    if prof:
+        top = sorted(prof.items(), key=lambda kv: -kv[1]["total_s"])
+        print("[profile] " + " ".join(
+            f"{name}={p['total_s']:.3f}s/{p['calls']}" for name, p in top))
+    if recorder is not None:
+        spans = recorder.tracer.spans
+        rids = {s.rid for s in spans if s.rid}
+        print(f"[trace] {len(spans)} spans across {len(rids)} requests "
+              f"({recorder.tracer.dropped} dropped); "
+              f"{len(recorder.incidents)} incidents")
+        if args.trace_out:
+            with open(args.trace_out, "w") as fh:
+                json.dump(recorder.dump(), fh)
+            print(f"[trace] flight-recorder dump -> {args.trace_out}")
+    if args.metrics_out:
+        text = engine.exposition()
+        if args.metrics_out == "-":
+            print(text, end="")
+        else:
+            with open(args.metrics_out, "w") as fh:
+                fh.write(text)
+            print(f"[metrics] prometheus exposition "
+                  f"({len(text.splitlines())} lines) -> {args.metrics_out}")
     return engine
 
 

@@ -48,8 +48,10 @@ from repro.core.cluster import Cluster, Deployment, PodTemplate
 from repro.core.controllers import ControlPlane
 from repro.core.hpa import HPA, HPAConfig, PressureSignals
 from repro.core.jrm import VirtualNode
-from repro.core.metrics import (Endpoint, Prometheus, Registry, Service,
-                                ServiceMonitor)
+from repro.core.metrics import (COUNT_BUCKETS, Endpoint, Prometheus,
+                                Registry, Service, ServiceMonitor,
+                                split_series)
+from repro.core.observability import render_exposition
 from repro.core.state_machine import Pod
 from repro.core.digital_twin.control import ControlPolicy, replicas_for_control
 from repro.core.digital_twin.dbn import DigitalTwin
@@ -124,11 +126,41 @@ class StreamEngine:
     degrade_until: float = 0.0
     transfer_windows: int = 0
     shed: list = field(default_factory=list)        # (rid, reason, now)
-    shed_counts: Dict[str, int] = field(default_factory=dict)
-    rejected_total: int = 0       # bounced off the bounded queue
-    retried_total: int = 0        # deferred for client retry
     _level: int = 0               # effective brownout level this tick
     _last_dt: float = 1.0
+    # ---------------------- observability plane ------------------------
+    # engine-level registry (pod label "_engine" in the exposition):
+    # queue/brownout gauges, queue-wait histogram, shed/reject/retry
+    # counters — the one place overload accounting lives (the old ad-hoc
+    # shed_counts/rejected_total/retried_total are compat views below)
+    metrics: Registry = field(default_factory=Registry)
+    tracer: object = None             # repro.core.tracing.Tracer
+    recorder: object = None           # repro.core.observability.FlightRecorder
+    profiler: object = None           # repro.core.observability.TickProfiler
+    # rid -> sim-time its drain span landed (restore-latency burn input)
+    _drain_t: Dict[int, float] = field(default_factory=dict)
+
+    # ------------------- overload accounting (compat) ------------------
+    @property
+    def shed_counts(self) -> Dict[str, int]:
+        """Per-reason shed counts, read back from the labeled
+        ``ersap_shed_total`` counter series (compat shim for the old
+        ad-hoc dict)."""
+        out: Dict[str, int] = {}
+        for key, m in self.metrics.metrics.items():
+            base, lbl = split_series(key)
+            if base == "ersap_shed_total" and lbl:
+                reason = lbl[1:-1].split("=", 1)[1].strip('"')
+                out[reason] = int(m.value)
+        return out
+
+    @property
+    def rejected_total(self) -> int:
+        return int(self.metrics.counter("ersap_rejected_total").value)
+
+    @property
+    def retried_total(self) -> int:
+        return int(self.metrics.counter("ersap_retried_total").value)
 
     # ------------------------------------------------------------ setup
     @property
@@ -147,6 +179,7 @@ class StreamEngine:
                 self.cluster.register_node(n, now)
         if self.plane is None:
             self.plane = ControlPlane(self.cluster)
+        self._wire_plane_obs()
         if self.plane.on_transfer is None:
             # drain_site reports its checkpoint-transfer window here so
             # the engine serves degraded while state crosses facilities
@@ -207,7 +240,10 @@ class StreamEngine:
         return DecodeRuntime(kernels, self.serving.params,
                              gen=self.serving.build_gen,
                              record_tokens=self.record_tokens,
-                             token_log_cap=self.token_log_cap)
+                             token_log_cap=self.token_log_cap,
+                             name=name, tracer=self.tracer,
+                             metrics=self.registries.get(name),
+                             profiler=self.profiler)
 
     def _credit_partial(self, name: str, rt: DecodeRuntime):
         """Credit partial generation of in-flight slots before their
@@ -275,7 +311,13 @@ class StreamEngine:
                     # copies of the same rids dedupe against these queue
                     # entries below, and the orphaned replica itself is
                     # epoch-fenced on rejoin, so nothing double-emits.
-                    self.queue = rt.drain() + self.queue
+                    drained = rt.drain()
+                    for r in drained:
+                        self._drain_t[r.rid] = now
+                        if self.tracer is not None:
+                            self.tracer.span("drain", now, rid=r.rid,
+                                             replica=name)
+                    self.queue = drained + self.queue
                 self.registries.pop(name, None)
                 self.stats.pop(name, None)
                 self._pod_nodes.pop(name, None)
@@ -303,9 +345,17 @@ class StreamEngine:
                 # into the queue AND its checkpoint names the same rids —
                 # each request must be served exactly once).
                 known = self._known_rids()
-                restored = [r for r in
-                            requests_from_state(rec.restored_state)
-                            if r.rid not in known]
+                from_ckpt = requests_from_state(rec.restored_state)
+                for r in from_ckpt:
+                    t0 = self._drain_t.pop(r.rid, now)
+                    if self.tracer is not None:
+                        # restore spans bump the rid's incarnation in the
+                        # tracer, so post-restore hops are distinguishable
+                        self.tracer.span("restore", now, rid=r.rid,
+                                         replica=name)
+                    if self.recorder is not None:
+                        self.recorder.note_restore(now, now - t0)
+                restored = [r for r in from_ckpt if r.rid not in known]
                 if rt is not None:
                     # content store rides the checkpoint: restored rids
                     # replay their exact prompt tokens
@@ -340,17 +390,27 @@ class StreamEngine:
         until the state has physically arrived at the destination site."""
         self.degrade_until = max(self.degrade_until, now + window)
         self.transfer_windows += 1
+        # span emission lives in ControlPlane.drain_site (site context);
+        # here we only feed the flight recorder's burn-rate windows
+        if self.recorder is not None:
+            self.recorder.event(now, "transfer", f"window={window:.2f}s")
+            self.recorder.note_restore(now, window)
 
     def _shed(self, req: Request, reason: str, now: float):
         self.shed.append((req.rid, reason, now))
-        self.shed_counts[reason] = self.shed_counts.get(reason, 0) + 1
+        self.metrics.counter("ersap_shed_total",
+                             labels={"reason": reason}).inc()
+        if self.tracer is not None:
+            self.tracer.span("shed", now, rid=req.rid, reason=reason)
+        if self.recorder is not None:
+            self.recorder.note_shed(now)
 
     def _backpressure(self, overflow: List[Request], now: float):
         """Bounded-queue rejection: estimate retry-after from backlog vs
         capacity, then per request either shed (deadline unreachable, or
         the tenant's retry budget is dry — no retry storms) or defer back
         through the RequestSource for a client-side retry."""
-        self.rejected_total += len(overflow)
+        self.metrics.counter("ersap_rejected_total").inc(len(overflow))
         cap = self.service_rate * max(len(self.registries), 1)
         retry_after = max(self._last_dt,
                           len(self.queue) / max(cap, 1e-9))
@@ -362,13 +422,14 @@ class StreamEngine:
                 self._shed(r, "retry-budget", now)
             else:
                 self.source.defer([r], now + retry_after)
-                self.retried_total += 1
+                self.metrics.counter("ersap_retried_total").inc()
 
     def _police_queue(self, now: float):
         """Deadline-aware admission + brownout shedding, applied to the
         whole FIFO *before* any request reaches prefill: expired requests
         and tiers below the current shed floor never burn compute."""
         floor = qos.shed_floor_for_level(self._level)
+        shed0 = len(self.shed)
         keep: List[Request] = []
         for r in self.queue:
             if r.deadline > 0 and now > r.deadline:
@@ -378,6 +439,9 @@ class StreamEngine:
             else:
                 keep.append(r)
         self.queue = keep
+        if self.tracer is not None and len(self.shed) > shed0:
+            self.tracer.span("police", now, kept=len(keep),
+                             shed=len(self.shed) - shed0)
 
     def _degrade_cap(self) -> int:
         return (self.brownout.degrade_max_new if self.brownout is not None
@@ -450,6 +514,12 @@ class StreamEngine:
             if allow >= 0:
                 n_take = min(n_take, allow)       # half-open: probes only
             took, self.queue = self.queue[:n_take], self.queue[n_take:]
+            if took:
+                # queue-wait distribution: time each request spent in the
+                # FIFO before reaching a replica (deferred retries age too)
+                h = self.metrics.histogram("ersap_queue_wait_s")
+                for r in took:
+                    h.observe(max(now - r.arrival, 0.0))
             if self.breaker is not None and allow >= 0:
                 self.breaker.note_probe(name, len(took))
             if cap:
@@ -461,6 +531,7 @@ class StreamEngine:
             rt = self.runtimes.get(name)
             if rt is not None:
                 rt.reset_pressure()    # per-tick slab-pressure window
+                rt.sim_now = now       # runtime spans carry sim-time
                 rt.spec_enabled = (level == 0)
             st0 = self.stats.get(name)
             tokens0 = st0.tokens if st0 is not None else 0
@@ -482,8 +553,17 @@ class StreamEngine:
                 # and scrape the per-tick *peak* — pump() runs to
                 # quiescence, so the instantaneous value here is 0.
                 reg.gauge("ersap_slab_slots_used").set(rt.peak_slots)
+                # the per-tick peaks also land in histograms so the
+                # HPA/twin and the exporter see the *distribution* of
+                # occupancy peaks, not the last-write-wins gauge value
+                reg.histogram("ersap_slab_slots_peak",
+                              buckets=COUNT_BUCKETS).observe(rt.peak_slots)
                 if rt.kernels.rcfg.paged:
                     reg.gauge("ersap_kv_pages").set(rt.peak_pages)
+                    reg.histogram("ersap_kv_pages_peak",
+                                  buckets=COUNT_BUCKETS).observe(
+                                      rt.peak_pages)
+                    reg.gauge("ersap_pages_hwm").set(rt.pages_hwm)
                 # prefix-cache / speculative-decode effectiveness gauges
                 # (cumulative hit count + live shared pages; accept rate
                 # over all drafts so far) — scraped alongside pool
@@ -497,6 +577,8 @@ class StreamEngine:
                     reg.gauge("ersap_spec_accept_rate").set(
                         rt.spec_accept_rate)
         self.tokens_rate = (self.total_tokens - tokens_before) / max(dt, 1e-9)
+        self.metrics.gauge("ersap_queue_len").set(len(self.queue))
+        self.metrics.gauge("ersap_brownout_level").set(level)
         self.prom.scrape(now)
         self.history.append((now, len(self.queue), self.serving.replicas,
                              self.control))
@@ -553,8 +635,17 @@ class StreamEngine:
         self.total_tokens += n_tokens
         reg.counter("ersap_served_total").inc(1)
         reg.counter("ersap_tokens_total").inc(n_tokens)
-        reg.histogram("ersap_latency_s").observe(max(now - req.arrival, 0.0))
+        lat = max(now - req.arrival, 0.0)
+        reg.histogram("ersap_latency_s").observe(lat)
+        reg.histogram("ersap_per_token_s").observe(lat / max(n_tokens, 1))
         self.completed.append((req.rid, now))
+        self._drain_t.pop(req.rid, None)
+        if self.tracer is not None:
+            self.tracer.span("retire", now, rid=req.rid, replica=replica,
+                             tokens=n_tokens)
+        if self.recorder is not None:
+            self.recorder.note_latency(now, lat, req.priority)
+            self.recorder.note_served(now)
 
     def _process_chunked(self, requests: List[Request], replica: str,
                          now: float):
@@ -579,6 +670,58 @@ class StreamEngine:
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         for r in requests:
             self._finish(replica, r, n_new, now)
+
+    # ---------------------------------------------------- observability
+    def _wire_plane_obs(self) -> None:
+        """Propagate the engine's tracer/profiler into the control plane
+        (idempotent; called whenever the plane might be fresh)."""
+        if self.plane is None:
+            return
+        if self.tracer is not None:
+            if getattr(self.plane, "tracer", None) is None:
+                self.plane.tracer = self.tracer
+            if getattr(self.plane.scheduler, "tracer", None) is None:
+                self.plane.scheduler.tracer = self.tracer
+            if getattr(self.plane.nodes, "tracer", None) is None:
+                self.plane.nodes.tracer = self.tracer
+        if self.profiler is not None and \
+                getattr(self.plane, "profiler", None) is None:
+            self.plane.profiler = self.profiler
+
+    def enable_observability(self, tracer=None, recorder=None,
+                             profiler=None) -> None:
+        """Wire the observability plane through every layer: request
+        source (enqueue spans), QoS machines (brownout/breaker spans),
+        control plane + scheduler + lifecycle controller (schedule/
+        preempt/checkpoint/drain spans, tick phase profile), and every
+        live runtime (admit/prefill/decode spans, TTFT, pump profile).
+        Safe to call before or after ``deploy``; later-built runtimes
+        and planes inherit via ``_make_runtime`` / ``_ensure_plane``."""
+        if tracer is not None:
+            self.tracer = tracer
+            self.source.tracer = tracer
+            if self.brownout is not None:
+                self.brownout.tracer = tracer
+            if self.breaker is not None:
+                self.breaker.tracer = tracer
+        if recorder is not None:
+            self.recorder = recorder
+        if profiler is not None:
+            self.profiler = profiler
+        self._wire_plane_obs()
+        for name, rt in self.runtimes.items():
+            rt.name = name
+            if tracer is not None:
+                rt.tracer = tracer
+            if profiler is not None:
+                rt.profiler = profiler
+
+    def exposition(self) -> str:
+        """Prometheus text exposition of the whole metric pipeline: the
+        engine registry (pod label ``_engine``) plus every per-replica
+        registry (``serve.py --metrics-out``)."""
+        return render_exposition({"_engine": self.metrics,
+                                  **self.registries})
 
     # ---------------------------------------------------------- control
     def control_step(self, now: float):

@@ -41,6 +41,7 @@ drain is token-identical to an undisturbed run.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -73,10 +74,14 @@ def requests_from_state(state) -> List[Request]:
     ddl = np.asarray(state.get("inflight_deadline", np.zeros(rids.size)))
     pri = np.asarray(state.get("inflight_priority",
                                np.full(rids.size, 10)))
+    # trace context (absent in pre-observability checkpoints): the span
+    # chain keeps its identity across fault incarnations
+    trc = np.asarray(state.get("inflight_trace", np.zeros(rids.size)))
     return [Request(int(rids[i]), float(arrival[i]), int(plen[i]),
                     int(rem[i]), prefix_group=int(grp[i]),
                     prefix_len=int(pfx[i]), deadline=float(ddl[i]),
-                    priority=int(pri[i])) for i in range(rids.size)]
+                    priority=int(pri[i]), trace_id=int(trc[i]))
+            for i in range(rids.size)]
 
 
 @dataclass(frozen=True)
@@ -557,6 +562,14 @@ class DecodeRuntime:
     spec_drafted: int = 0
     spec_accepted: int = 0
     spec_emitted: int = 0
+    # observability plane (all optional; None = zero-cost disabled path).
+    # ``name`` is the replica/pod identity stamped on spans; ``sim_now``
+    # mirrors the engine clock so runtime-emitted spans carry sim-time.
+    name: str = ""
+    tracer: object = None
+    metrics: object = None            # per-pod Registry (TTFT histogram)
+    profiler: object = None           # TickProfiler (pump phase timing)
+    sim_now: float = 0.0
 
     def __post_init__(self):
         rcfg = self.kernels.rcfg
@@ -900,6 +913,25 @@ class DecodeRuntime:
             self.content[r.rid] = tok
         return tok
 
+    def _note_admission(self, reqs: List[Request],
+                        kind_of: Dict[int, str], lb: int) -> None:
+        """Observability tail of an admission wave: per-rid ``admit``
+        spans (with the grant kind), one block-level ``prefill`` span,
+        and the TTFT histogram (sim-time from arrival to first token,
+        which admission produces)."""
+        if self.metrics is not None:
+            h = self.metrics.histogram("ersap_ttft_s")
+            for r in reqs:
+                h.observe(max(self.sim_now - r.arrival, 0.0))
+        if self.tracer is None:
+            return
+        for r in reqs:
+            self.tracer.span("admit", self.sim_now, rid=r.rid,
+                             kind=kind_of.get(id(r), "miss"),
+                             replica=self.name, lb=lb)
+        self.tracer.span("prefill", self.sim_now, replica=self.name,
+                         lb=lb, rids=tuple(r.rid for r in reqs))
+
     def _admit_batch(self, reqs: List[Request], slot_idx: List[int],
                      lb: int, grants: Dict[int, dict]) -> List[Finished]:
         rcfg = self.kernels.rcfg
@@ -966,6 +998,8 @@ class DecodeRuntime:
             if self.record_tokens:               # first token (prefill argmax)
                 self._log_tokens(r.rid, [int(first[j])])
         self.peak_slots = max(self.peak_slots, self.slots_in_use)
+        self._note_admission(reqs, {id(r): grants.get(id(r), {}).get(
+            "kind", "miss") for r in reqs}, lb)
         # the fused tail advanced every live row (old and new) tail steps
         return self._harvest(rcfg.admit_tail)
 
@@ -1076,6 +1110,8 @@ class DecodeRuntime:
             if self.record_tokens:
                 self._log_tokens(r.rid, [first_of[i]])
         self.peak_slots = max(self.peak_slots, self.slots_in_use)
+        self._note_admission(reqs, {id(r): grants[id(r)]["kind"]
+                                    for r in reqs}, lb)
         return self._harvest(0)
 
     # ------------------------------------------------------- copy-on-write
@@ -1138,6 +1174,9 @@ class DecodeRuntime:
         self.slots[i] = _Slot()
 
     def _harvest(self, steps: int) -> List[Finished]:
+        # nested profiler phase: retirement runs inside pump.admit /
+        # pump.decode (the fused tail finishes rows) — counted both places
+        t0 = time.perf_counter() if self.profiler is not None else 0.0
         done = []
         for i, s in enumerate(self.slots):
             if not s.busy:
@@ -1149,6 +1188,8 @@ class DecodeRuntime:
                 # content store follows the live request set (re-mintable
                 # deterministically) — no monotonic growth across a stream
                 self.content.pop(s.req.rid, None)
+        if self.profiler is not None:
+            self.profiler.add("pump.retire", time.perf_counter() - t0)
         return done
 
     def _decode_block(self) -> List[Finished]:
@@ -1174,6 +1215,11 @@ class DecodeRuntime:
             fn = self.kernels.decode_fn(steps, skip=skip)
             kw = {}
         before = {i: s.remaining for i, s in enumerate(self.slots) if s.busy}
+        if self.tracer is not None:
+            self.tracer.span("decode", self.sim_now, replica=self.name,
+                             steps=steps,
+                             rids=tuple(self.slots[i].req.rid
+                                        for i in before))
         self.tok, self.cache, self.active, self.remaining, toks = fn(
             self.params, self.tok, self.cache, self.active, self.remaining,
             **kw)
@@ -1257,6 +1303,10 @@ class DecodeRuntime:
         rows = [(i, s) for i, s in enumerate(self.slots) if s.busy]
         if not rows:
             return []
+        if self.tracer is not None:
+            self.tracer.span("decode", self.sim_now, replica=self.name,
+                             steps=W, spec=True,
+                             rids=tuple(s.req.rid for _, s in rows))
         self._cow_before_write([(i, s.pos + W) for i, s in rows])
         bb = MA.pow2_bucket(len(rows), 1, rcfg.max_batch)
         n_pad = bb - len(rows)
@@ -1313,22 +1363,38 @@ class DecodeRuntime:
         Finished slots free mid-stream; arrivals join the very next block.
         Loops on pending too: when a whole admission finishes inside its
         fused tail, the slots it freed must be refilled before returning."""
-        done = self._admit_some()
+        done = self._timed_admit()
         while any(s.busy for s in self.slots) or self.pending:
             if any(s.busy for s in self.slots):
-                done.extend(self._decode_block())
-            done.extend(self._admit_some())
+                done.extend(self._timed_decode())
+            done.extend(self._timed_admit())
         return done
 
     def step(self) -> List[Finished]:
         """One admission + one fused block (partial progress — lets callers
         interleave checkpoints or new arrivals between blocks)."""
-        done = self._admit_some()
+        done = self._timed_admit()
         if not any(s.busy for s in self.slots):
             return done
-        done.extend(self._decode_block())
-        done.extend(self._admit_some())
+        done.extend(self._timed_decode())
+        done.extend(self._timed_admit())
         return done
+
+    def _timed_admit(self) -> List[Finished]:
+        if self.profiler is None:
+            return self._admit_some()
+        t0 = time.perf_counter()
+        out = self._admit_some()
+        self.profiler.add("pump.admit", time.perf_counter() - t0)
+        return out
+
+    def _timed_decode(self) -> List[Finished]:
+        if self.profiler is None:
+            return self._decode_block()
+        t0 = time.perf_counter()
+        out = self._decode_block()
+        self.profiler.add("pump.decode", time.perf_counter() - t0)
+        return out
 
     # --------------------------------------------------------- checkpoint
     def partial_tokens(self) -> int:
@@ -1348,12 +1414,13 @@ class DecodeRuntime:
         round-trip is logical, not physical)."""
         live = [(s.req.rid, s.req.arrival, s.req.prompt_len, s.remaining,
                  s.req.prefix_group, s.req.prefix_len,
-                 s.req.deadline, s.req.priority)
+                 s.req.deadline, s.req.priority, s.req.trace_id)
                 for s in self.slots if s.busy and s.remaining > 0]
         live += [(r.rid, r.arrival, r.prompt_len, r.max_new,
-                  r.prefix_group, r.prefix_len, r.deadline, r.priority)
+                  r.prefix_group, r.prefix_len, r.deadline, r.priority,
+                  r.trace_id)
                  for r in self.pending]
-        arr = np.asarray(live, np.float64).reshape(-1, 8)
+        arr = np.asarray(live, np.float64).reshape(-1, 9)
         rids = arr[:, 0].astype(np.int64)
         # content rows for the in-flight rids, padded to one rectangle
         toks = [self.content.get(int(rid), np.zeros(0, np.int32))
@@ -1371,6 +1438,7 @@ class DecodeRuntime:
             "inflight_pfxlen": arr[:, 5].astype(np.int64),
             "inflight_deadline": arr[:, 6],
             "inflight_priority": arr[:, 7].astype(np.int64),
+            "inflight_trace": arr[:, 8].astype(np.int64),
             "content_len": np.asarray([t.shape[0] for t in toks], np.int64),
             "content_tokens": content,
         }
@@ -1405,7 +1473,8 @@ class DecodeRuntime:
                                    prefix_group=s.req.prefix_group,
                                    prefix_len=s.req.prefix_len,
                                    deadline=s.req.deadline,
-                                   priority=s.req.priority))
+                                   priority=s.req.priority,
+                                   trace_id=s.req.trace_id))
                 self._retire_slot(i)
         self.content.clear()
         return out

@@ -1,0 +1,111 @@
+"""Metric hygiene lint (CI: obs-smoke job).
+
+Two checks:
+
+1. Inventory: every ``ersap_*`` metric name appearing in ``src/`` must
+   be documented in the metric-inventory table of
+   ``docs/ARCHITECTURE.md`` — new metrics cannot land undocumented.
+2. ``--exposition FILE``: parse a ``serve.py --metrics-out`` dump with
+   a strict standalone parser (no repro imports, so the docs job can
+   run this without jax) and fail on malformed lines, then re-run the
+   inventory check against the *emitted* series names too.
+
+Exit 1 on any finding; prints one line per violation.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+METRIC_RE = re.compile(r"\bersap_[a-z0-9_]+")
+# derived series suffixes the exposition format appends to histograms
+DERIVED = ("_bucket", "_sum", "_count")
+
+
+def src_metric_names() -> dict:
+    """{metric name: first 'file:line' where it appears} across src/."""
+    out = {}
+    for path in sorted(ROOT.glob("src/**/*.py")):
+        for i, line in enumerate(path.read_text().splitlines(), 1):
+            for name in METRIC_RE.findall(line):
+                out.setdefault(name, f"{path.relative_to(ROOT)}:{i}")
+    return out
+
+
+def documented_names() -> set:
+    doc = ROOT / "docs" / "ARCHITECTURE.md"
+    if not doc.exists():
+        return set()
+    return set(METRIC_RE.findall(doc.read_text()))
+
+
+def strip_derived(name: str) -> str:
+    for suf in DERIVED:
+        if name.endswith(suf):
+            return name[:-len(suf)]
+    return name
+
+
+def parse_exposition_file(path: str) -> dict:
+    """Standalone Prometheus-text parser: {series: value}, raising
+    ValueError on any malformed line."""
+    out = {}
+    text = pathlib.Path(path).read_text()
+    for i, line in enumerate(text.splitlines(), 1):
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        m = re.match(r'^([A-Za-z_][A-Za-z0-9_]*)'
+                     r'(\{[^{}]*\})?\s+(\S+)$', line)
+        if not m:
+            raise ValueError(f"{path}:{i}: malformed exposition line: "
+                             f"{line!r}")
+        name, labels, val = m.groups()
+        try:
+            out[name + (labels or "")] = float(val.replace("+Inf", "inf"))
+        except ValueError:
+            raise ValueError(f"{path}:{i}: bad sample value {val!r}")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--exposition", default="",
+                    help="also parse+lint a --metrics-out dump")
+    args = ap.parse_args(argv)
+    failures = []
+    documented = documented_names()
+    if not documented:
+        failures.append("docs/ARCHITECTURE.md documents no ersap_* metrics"
+                        " (missing inventory section?)")
+    for name, where in sorted(src_metric_names().items()):
+        if name not in documented:
+            failures.append(f"{where}: metric {name} is not documented in"
+                            f" docs/ARCHITECTURE.md")
+    if args.exposition:
+        try:
+            series = parse_exposition_file(args.exposition)
+        except ValueError as e:
+            failures.append(str(e))
+            series = {}
+        bases = {strip_derived(re.split(r"\{", s, 1)[0]) for s in series}
+        for base in sorted(b for b in bases if b.startswith("ersap_")):
+            if base not in documented:
+                failures.append(f"{args.exposition}: emitted metric {base}"
+                                f" is not documented in docs/ARCHITECTURE.md")
+        if series:
+            print(f"[metriclint] {args.exposition}: {len(series)} series"
+                  f" parsed clean")
+    for f in failures:
+        print(f"[metriclint] FAIL: {f}", file=sys.stderr)
+    if not failures:
+        print(f"[metriclint] OK: {len(documented)} documented metrics,"
+              f" src inventory clean")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

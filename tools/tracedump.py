@@ -1,0 +1,127 @@
+"""Render a flight-recorder dump (``serve.py --trace-out`` or an
+incident bundle) as a per-request timeline, and assert span chains.
+
+Importable (the obs tests and CI job use the helpers) and a CLI:
+
+    python tools/tracedump.py trace.json                 # all requests
+    python tools/tracedump.py trace.json --rid 7         # one request
+    python tools/tracedump.py trace.json \
+        --require-chain enqueue,admit,decode,retire      # exit 2 on miss
+
+``--require-chain`` passes when at least one rid's span chain contains
+the given names as a subsequence (in order, gaps allowed) — the smoke
+gate that a request's whole life is reconstructable from the dump.
+
+No repro imports: works on any machine with just the JSON file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Sequence
+
+
+def spans_of(bundle: dict) -> List[dict]:
+    """The span list of a flight-recorder dump or incident bundle."""
+    return bundle.get("spans", [])
+
+
+def rid_spans(spans: Sequence[dict], rid: int) -> List[dict]:
+    """One rid's spans in emission order: spans stamped with the rid
+    directly plus block spans (prefill/decode) listing it in
+    ``attrs.rids``."""
+    out = [s for s in spans
+           if s.get("rid") == rid or rid in (s.get("attrs", {})
+                                             .get("rids") or ())]
+    out.sort(key=lambda s: s.get("seq", 0))
+    return out
+
+
+def chain_names(spans: Sequence[dict], rid: int) -> List[str]:
+    return [s["name"] for s in rid_spans(spans, rid)]
+
+
+def all_rids(spans: Sequence[dict]) -> List[int]:
+    seen = set()
+    for s in spans:
+        if s.get("rid"):
+            seen.add(s["rid"])
+        seen.update(s.get("attrs", {}).get("rids") or ())
+    return sorted(seen)
+
+
+def has_subsequence(names: Sequence[str], want: Sequence[str]) -> bool:
+    """True when ``want`` appears in ``names`` in order (gaps allowed)."""
+    it = iter(names)
+    return all(w in it for w in want)
+
+
+def find_chain(bundle: dict, want: Sequence[str]) -> Optional[int]:
+    """First rid whose span chain contains ``want`` as a subsequence."""
+    spans = spans_of(bundle)
+    for rid in all_rids(spans):
+        if has_subsequence(chain_names(spans, rid), want):
+            return rid
+    return None
+
+
+def render(bundle: dict, rid: Optional[int] = None) -> str:
+    """Human timeline: one line per span, grouped per rid (or one rid)."""
+    spans = spans_of(bundle)
+    lines = []
+    rids = [rid] if rid is not None else all_rids(spans)
+    for r in rids:
+        chain = rid_spans(spans, r)
+        if not chain:
+            lines.append(f"rid {r}: no spans")
+            continue
+        t0, t1 = chain[0]["t"], chain[-1]["t"]
+        incs = {s.get("inc", 0) for s in chain}
+        lines.append(f"rid {r}: {len(chain)} spans over "
+                     f"[{t0:g}, {t1:g}]s, incarnations={sorted(incs)}")
+        for s in chain:
+            attrs = {k: v for k, v in s.get("attrs", {}).items()
+                     if k != "rids"}
+            extra = (" " + " ".join(f"{k}={v}" for k, v in attrs.items())
+                     if attrs else "")
+            lines.append(f"  t={s['t']:>8g}  inc={s.get('inc', 0)}  "
+                         f"{s['name']:<16}{extra}")
+    ctl = [s for s in spans if not s.get("rid")
+           and not s.get("attrs", {}).get("rids")]
+    if rid is None and ctl:
+        lines.append(f"control plane: {len(ctl)} spans")
+        counts: Dict[str, int] = {}
+        for s in ctl:
+            counts[s["name"]] = counts.get(s["name"], 0) + 1
+        for name in sorted(counts):
+            lines.append(f"  {name}: {counts[name]}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("bundle", help="trace/incident JSON file")
+    ap.add_argument("--rid", type=int, default=None,
+                    help="render only this request")
+    ap.add_argument("--require-chain", default="",
+                    help="comma-separated span names; exit 2 unless some"
+                         " rid's chain contains them in order")
+    args = ap.parse_args(argv)
+    with open(args.bundle) as fh:
+        bundle = json.load(fh)
+    if args.require_chain:
+        want = [w.strip() for w in args.require_chain.split(",") if w.strip()]
+        rid = find_chain(bundle, want)
+        if rid is None:
+            print(f"FAIL: no rid with span chain {want}", file=sys.stderr)
+            return 2
+        print(f"chain {want} reconstructs for rid {rid}:")
+        print(render(bundle, rid))
+        return 0
+    print(render(bundle, args.rid))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
